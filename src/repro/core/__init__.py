@@ -1,0 +1,37 @@
+"""LGD core: LSH-sampled adaptive stochastic gradient estimation.
+
+Chen, Xu & Shrivastava, "LSH-sampling Breaks the Computation
+Chicken-and-egg Loop in Adaptive Stochastic Gradient Estimation"
+(NeurIPS 2019).
+"""
+
+from .simhash import (  # noqa: F401
+    LSHParams,
+    augment_logistic,
+    augment_regression,
+    collision_probability,
+    collision_probability_quadratic,
+    compute_codes,
+    logistic_query,
+    make_projections,
+    regression_query,
+)
+from .tables import LSHIndex, build_index, bucket_bounds, query_codes, refresh_index  # noqa: F401
+from .sampler import SampleResult, exact_inclusion_probability, sample, sample_drain  # noqa: F401
+from .estimator import (  # noqa: F401
+    VarianceReport,
+    empirical_estimator_covariance_trace,
+    importance_weights,
+    lgd_gradient,
+    variance_report,
+)
+from .lgd import (  # noqa: F401
+    LGDProblem,
+    LGDState,
+    full_loss,
+    init,
+    lgd_step,
+    preprocess_logistic,
+    preprocess_regression,
+    sgd_step,
+)

@@ -1,0 +1,198 @@
+"""LGD (Algorithm 2): end-to-end LSH-sampled gradient descent for linear models.
+
+Reproduces the paper's training setup:
+  * least-squares regression   — hash [x_i, y_i], query [theta, -1]
+  * logistic regression        — hash y_i * x_i, query -theta
+  * any first-order optimizer  — LGD only replaces the *gradient estimator*,
+    so SGD / AdaGrad / Adam from ``repro.optim`` plug in unchanged
+    ("LGD is not an alternative but a complement", Sec. 2.2).
+
+Data are preprocessed as in Sec. 2.2: rows of [x_i, y_i] are centred and
+scaled to unit L2 norm, so the SimHash collision probability is monotonic
+in the optimal sampling weight w*_i = |<[theta,-1],[x_i,y_i]>| (Eq. 4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import estimator as est
+from .sampler import SampleResult, sample, sample_drain
+from .simhash import (
+    LSHParams,
+    augment_logistic,
+    augment_regression,
+    logistic_query,
+    regression_query,
+)
+from .tables import LSHIndex, build_index
+
+
+# ---------------------------------------------------------------------------
+# preprocessing (Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+def preprocess_regression(x: jax.Array, y: jax.Array):
+    """Centre features + normalise x rows to unit norm; standardise y globally.
+
+    Eq. 4: ||grad f(x_i)||_2 = 2|[theta,-1].[x_i ||x_i||, y_i ||x_i||]|, so
+    with unit-norm x_i the optimal weight is w*_i = |[theta,-1].[x_i, y_i]|
+    and the stored hash-table vector is x_aug_i = [x_i, y_i].  y is centred
+    and scaled *globally* (not per-row) so heavy-tailed targets keep their
+    heavy-tailed gradients — exactly the regime where LGD wins (Sec. 2.3).
+
+    Returns (x', y', x_aug).
+    """
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-30)
+    y = (y - jnp.mean(y)) / jnp.maximum(jnp.std(y), 1e-30)
+    x_aug = jnp.concatenate([x, y[:, None]], axis=-1)
+    return x, y, x_aug
+
+
+def preprocess_logistic(x: jax.Array, y: jax.Array):
+    """Centre + row-normalise x; labels in {-1,+1}. Hash rows y_i * x_i."""
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-30)
+    return x, y, augment_logistic(x, y)
+
+
+# ---------------------------------------------------------------------------
+# per-example losses / gradients
+# ---------------------------------------------------------------------------
+
+def squared_loss(theta, x, y):
+    r = jnp.dot(theta, x) - y
+    return r * r
+
+
+def squared_loss_grad(theta, x, y):
+    return 2.0 * (jnp.dot(theta, x) - y) * x
+
+
+def logistic_loss(theta, x, y):
+    return jnp.log1p(jnp.exp(-y * jnp.dot(theta, x)))
+
+
+def logistic_loss_grad(theta, x, y):
+    z = y * jnp.dot(theta, x)
+    return -y * x * jax.nn.sigmoid(-z)
+
+
+# ---------------------------------------------------------------------------
+# LGD problem + state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LGDProblem:
+    """Static description of an LGD-trainable linear model."""
+
+    kind: str                      # "regression" | "logistic"
+    lsh: LSHParams
+    minibatch: int = 1
+    p_floor: float = 0.0
+    drain: bool = False            # Appendix B.2 bucket-draining minibatch
+
+    def query_fn(self) -> Callable[[jax.Array], jax.Array]:
+        return regression_query if self.kind == "regression" else logistic_query
+
+    def grad_fn(self):
+        return squared_loss_grad if self.kind == "regression" else logistic_loss_grad
+
+    def loss_fn(self):
+        return squared_loss if self.kind == "regression" else logistic_loss
+
+
+class LGDState(NamedTuple):
+    theta: jax.Array
+    opt_state: tuple
+    index: LSHIndex
+    step: jax.Array
+
+
+def init(
+    key: jax.Array,
+    problem: LGDProblem,
+    x: jax.Array,
+    y: jax.Array,
+    optimizer,
+    theta0: Optional[jax.Array] = None,
+):
+    """Preprocess data, build hash tables (one-time cost), init optimiser.
+
+    Returns (state, x_train, y_train, x_aug).
+    """
+    if problem.kind == "regression":
+        xt, yt, x_aug = preprocess_regression(x, y)
+    else:
+        xt, yt, x_aug = preprocess_logistic(x, y)
+    k_idx, k_theta = jax.random.split(key)
+    index = build_index(k_idx, x_aug, problem.lsh)
+    theta = theta0 if theta0 is not None else jnp.zeros(xt.shape[1], jnp.float32)
+    return (
+        LGDState(theta, optimizer.init(theta), index, jnp.zeros((), jnp.int32)),
+        xt, yt, x_aug,
+    )
+
+
+@partial(jax.jit, static_argnames=("problem", "optimizer"))
+def lgd_step(
+    key: jax.Array,
+    state: LGDState,
+    x: jax.Array,
+    y: jax.Array,
+    x_aug: jax.Array,
+    problem: LGDProblem,
+    optimizer,
+) -> Tuple[LGDState, dict]:
+    """One LGD iteration: hash-lookup sample -> unbiased grad -> optimiser."""
+    query = problem.query_fn()(state.theta)
+    sampler = sample_drain if problem.drain else sample
+    res: SampleResult = sampler(
+        key, state.index, x_aug, query, problem.lsh, m=problem.minibatch
+    )
+    xb, yb = x[res.indices], y[res.indices]
+    grad = est.lgd_gradient(
+        problem.grad_fn(), state.theta, xb, yb, res,
+        n_points=x.shape[0], p_floor=problem.p_floor,
+    )
+    updates, opt_state = optimizer.update(grad, state.opt_state, state.theta)
+    theta = state.theta + updates
+    metrics = {
+        "sample_prob_mean": jnp.mean(res.probs),
+        "n_probes_mean": jnp.mean(res.n_probes.astype(jnp.float32)),
+        "bucket_size_mean": jnp.mean(res.bucket_sizes.astype(jnp.float32)),
+        "fallback_frac": jnp.mean(res.fallback.astype(jnp.float32)),
+        "grad_norm": jnp.linalg.norm(grad),
+    }
+    return LGDState(theta, opt_state, state.index, state.step + 1), metrics
+
+
+@partial(jax.jit, static_argnames=("problem", "optimizer"))
+def sgd_step(
+    key: jax.Array,
+    state: LGDState,
+    x: jax.Array,
+    y: jax.Array,
+    problem: LGDProblem,
+    optimizer,
+) -> Tuple[LGDState, dict]:
+    """Uniform-sampling baseline with the same optimiser (the paper's SGD)."""
+    n = x.shape[0]
+    idx = jax.random.randint(key, (problem.minibatch,), 0, n)
+    g = jax.vmap(lambda i: problem.grad_fn()(state.theta, x[i], y[i]))(idx)
+    grad = jnp.mean(g, axis=0)
+    updates, opt_state = optimizer.update(grad, state.opt_state, state.theta)
+    return (
+        LGDState(state.theta + updates, opt_state, state.index, state.step + 1),
+        {"grad_norm": jnp.linalg.norm(grad)},
+    )
+
+
+def full_loss(theta, x, y, problem: LGDProblem):
+    return jnp.mean(jax.vmap(lambda xi, yi: problem.loss_fn()(theta, xi, yi))(x, y))

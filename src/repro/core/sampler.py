@@ -1,0 +1,167 @@
+"""Algorithm 1 of the paper: LSH sampling with exact sampling probability.
+
+Two modes are provided:
+
+* ``sample`` (default, "vmap" mode) — m independent repetitions of the
+  paper's single-sample Algorithm 1: each repetition draws tables with
+  replacement until a non-empty bucket is found (l = #probes), samples
+  uniformly inside the bucket, and reports
+      p = cp(x, q)^K * (1 - cp(x, q)^K)^(l-1) / |S_b|.
+  Independent repetitions keep every sample's probability exact, are
+  embarrassingly parallel (a single vmap), and make the minibatch
+  estimator an average of m unbiased single-sample estimators.
+
+* ``sample_drain`` (Appendix B.2 mode) — finds the first non-empty bucket
+  and draws the whole minibatch from it (with replacement), matching the
+  paper's "sample m examples from that bucket" scheme for m < |S_b|.
+
+Probing uses a *static* upper bound ``max_probes`` on the number of table
+draws so the computation stays shape-static under jit; if every probed
+bucket is empty the sampler falls back to a uniform draw with p = 1/N
+(flagged in the result), which preserves unbiasedness.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .simhash import (
+    LSHParams,
+    collision_probability,
+    collision_probability_quadratic,
+)
+from .tables import LSHIndex, bucket_bounds, query_codes
+
+
+class SampleResult(NamedTuple):
+    indices: jax.Array       # (m,) int32 — sampled point ids
+    probs: jax.Array         # (m,) f32   — Alg. 1 probability (incl. 1/|S_b|)
+    n_probes: jax.Array      # (m,) int32 — l, tables probed
+    bucket_sizes: jax.Array  # (m,) int32 — |S_b| of chosen bucket
+    fallback: jax.Array      # (m,) bool  — True where uniform fallback used
+
+
+def _cp_fn(params: LSHParams):
+    if params.family == "quadratic":
+        return collision_probability_quadratic
+    return collision_probability
+
+
+def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
+                max_probes: int):
+    """Single repetition of Algorithm 1 given precomputed bucket bounds."""
+    n_tables, n_points = order.shape
+    sizes = hi - lo
+    k_tables, k_slot, k_fb = jax.random.split(key, 3)
+
+    # Draw tables with replacement; l = index of first non-empty + 1.
+    ts = jax.random.randint(k_tables, (max_probes,), 0, n_tables)
+    nonempty = sizes[ts] > 0
+    found = jnp.any(nonempty)
+    j = jnp.argmax(nonempty)                       # first non-empty probe
+    t = ts[j]
+    l = (j + 1).astype(jnp.int32)
+
+    size = jnp.maximum(sizes[t], 1)
+    slot = lo[t] + jax.random.randint(k_slot, (), 0, n_points) % size
+    idx = order[t, slot]
+
+    fb_idx = jax.random.randint(k_fb, (), 0, n_points)
+    idx = jnp.where(found, idx, fb_idx).astype(jnp.int32)
+
+    x = x_aug[idx]
+    cp = _cp_fn(params)(x, query)
+    cpk = cp ** params.k
+    p_lsh = cpk * (1.0 - cpk) ** (l - 1) / size.astype(jnp.float32)
+    p = jnp.where(found, p_lsh, 1.0 / n_points)
+    return SampleResult(
+        indices=idx,
+        probs=p.astype(jnp.float32),
+        n_probes=jnp.where(found, l, max_probes).astype(jnp.int32),
+        bucket_sizes=jnp.where(found, sizes[t], 0).astype(jnp.int32),
+        fallback=~found,
+    )
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes"))
+def sample(
+    key: jax.Array,
+    index: LSHIndex,
+    x_aug: jax.Array,
+    query: jax.Array,
+    params: LSHParams,
+    m: int = 1,
+    max_probes: Optional[int] = None,
+) -> SampleResult:
+    """m independent LSH samples for one query (paper Algorithm 1 x m)."""
+    max_probes = max_probes or max(2 * params.l, 8)
+    qcodes = query_codes(index, query, params)           # (L,)
+    lo, hi = bucket_bounds(index, qcodes)                # (L,), (L,)
+    keys = jax.random.split(key, m)
+    res = jax.vmap(
+        lambda k: _sample_one(k, lo, hi, index.order, x_aug, query, params,
+                              max_probes)
+    )(keys)
+    return res
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes"))
+def sample_drain(
+    key: jax.Array,
+    index: LSHIndex,
+    x_aug: jax.Array,
+    query: jax.Array,
+    params: LSHParams,
+    m: int = 1,
+    max_probes: Optional[int] = None,
+) -> SampleResult:
+    """Appendix B.2: draw the whole minibatch from the first non-empty bucket."""
+    max_probes = max_probes or max(2 * params.l, 8)
+    qcodes = query_codes(index, query, params)
+    lo, hi = bucket_bounds(index, qcodes)
+    sizes = hi - lo
+    n_tables, n_points = index.order.shape
+    k_tables, k_slot, k_fb = jax.random.split(key, 3)
+
+    ts = jax.random.randint(k_tables, (max_probes,), 0, n_tables)
+    nonempty = sizes[ts] > 0
+    found = jnp.any(nonempty)
+    j = jnp.argmax(nonempty)
+    t = ts[j]
+    l = (j + 1).astype(jnp.int32)
+    size = jnp.maximum(sizes[t], 1)
+
+    slots = lo[t] + jax.random.randint(k_slot, (m,), 0, n_points) % size
+    idx = index.order[t, slots]
+    fb = jax.random.randint(k_fb, (m,), 0, n_points)
+    idx = jnp.where(found, idx, fb).astype(jnp.int32)
+
+    x = x_aug[idx]
+    cp = _cp_fn(params)(x, query)
+    cpk = cp ** params.k
+    p_lsh = cpk * (1.0 - cpk) ** (l - 1) / size.astype(jnp.float32)
+    p = jnp.where(found, p_lsh, 1.0 / n_points).astype(jnp.float32)
+    return SampleResult(
+        indices=idx,
+        probs=p,
+        n_probes=jnp.full((m,), jnp.where(found, l, max_probes), jnp.int32),
+        bucket_sizes=jnp.full((m,), jnp.where(found, sizes[t], 0), jnp.int32),
+        fallback=jnp.broadcast_to(~found, (m,)),
+    )
+
+
+def exact_inclusion_probability(
+    index: LSHIndex, x_aug: jax.Array, query: jax.Array, params: LSHParams,
+    l: jax.Array | int = 1,
+) -> jax.Array:
+    """p_i = cp(x_i, q)^K (1-cp^K)^(l-1) for *all* points (O(N d), analysis only).
+
+    Used by tests and the variance diagnostics; never on the training path.
+    """
+    cp = _cp_fn(params)(x_aug, query)
+    cpk = cp ** params.k
+    return cpk * (1.0 - cpk) ** (jnp.asarray(l, jnp.float32) - 1.0)

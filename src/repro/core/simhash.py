@@ -1,0 +1,157 @@
+"""Signed-random-projection (SimHash) LSH families for LGD.
+
+The paper (Chen, Xu & Shrivastava, NeurIPS 2019) samples training points
+with probability monotonic to |<[theta,-1], [x_i,y_i]>| using SimHash
+(signed random projections).  Three families are provided:
+
+* ``SignedRP``       — dense Gaussian projections, sign(Wx).
+* ``SparseSignedRP`` — very sparse Rademacher projections (density ~1/30,
+  as used in the paper's experiments: "sparse random projections with
+  sparsity 1/30 for speed").
+* ``QuadraticSRP``   — SRP over the implicit quadratic feature expansion
+  T(v) = vec(v v^T), so that the collision probability is monotonic in
+  (v.q)^2 = |v.q|^2, handling the absolute value exactly as described in
+  Sec. 2.1.  A projection w on T(v) is the quadratic form v^T M v, which
+  we evaluate without materialising T.
+
+All families pack K sign bits per table into a single uint32 code, giving
+``codes[n, l]`` — the TPU-native layout consumed by ``tables.py``.
+
+Collision probability of SimHash (Goemans-Williamson):
+    cp(x, q) = 1 - arccos(cos_sim(x, q)) / pi
+which is monotonically increasing in the inner product for normalised
+vectors — the monotonicity LGD's adaptive distribution relies on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+MAX_K = 32  # sign bits packed per uint32 code
+
+
+@dataclasses.dataclass(frozen=True)
+class LSHParams:
+    """Static hyper-parameters of the hash family."""
+
+    k: int = 5          # bits (hash fns) per table    (paper: K=5 linear, 7 BERT)
+    l: int = 100        # number of hash tables        (paper: L=100 linear, 10 BERT)
+    dim: int = 0        # input dimensionality (of the *augmented* vector)
+    family: str = "sparse"  # "dense" | "sparse" | "quadratic"
+    sparsity: float = 1.0 / 30.0  # density of sparse projections
+    seed: int = 0
+
+    def __post_init__(self):
+        if not (1 <= self.k <= MAX_K):
+            raise ValueError(f"K must be in [1,{MAX_K}], got {self.k}")
+        if self.l < 1:
+            raise ValueError(f"L must be >= 1, got {self.l}")
+        if self.family not in ("dense", "sparse", "quadratic"):
+            raise ValueError(f"unknown family {self.family!r}")
+
+
+def make_projections(key: jax.Array, params: LSHParams) -> jax.Array:
+    """Draw the random projection tensor for the family.
+
+    Returns
+      dense/sparse:  (dim, L*K) float32
+      quadratic:     (L*K, dim, dim) float32  (random M per hash function)
+    """
+    d, lk = params.dim, params.l * params.k
+    if params.family == "dense":
+        return jax.random.normal(key, (d, lk), dtype=jnp.float32)
+    if params.family == "sparse":
+        kv, ks = jax.random.split(key)
+        signs = jax.random.rademacher(kv, (d, lk), dtype=jnp.float32)
+        mask = jax.random.bernoulli(ks, params.sparsity, (d, lk))
+        # Li et al. very-sparse projections: scale keeps inner products unbiased.
+        return signs * mask / jnp.sqrt(params.sparsity)
+    # quadratic: M_h ~ dense iid Gaussian (d, d); hash = sign(v^T M v), which
+    # is exactly SRP on T(v)=vec(v v^T).  Sparse M would bias the analytic
+    # collision probability (T(v) is highly structured), so the exact
+    # importance weights 1/(p_i N) demand dense projections here.
+    return jax.random.normal(key, (lk, d, d), dtype=jnp.float32)
+
+
+def _pack_bits(bits: jax.Array, k: int) -> jax.Array:
+    """bits: (..., L, K) bool -> (..., L) uint32 packed codes."""
+    weights = (jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32))
+    return jnp.sum(bits.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("k", "l", "quadratic"))
+def compute_codes(
+    x: jax.Array,
+    projections: jax.Array,
+    *,
+    k: int,
+    l: int,
+    quadratic: bool = False,
+) -> jax.Array:
+    """Hash a batch of vectors into packed per-table codes.
+
+    x: (n, d) or (d,).  Returns (n, L) or (L,) uint32.
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    if quadratic:
+        # proj[h] = x^T M_h x  — implicit SRP over T(x)=vec(x x^T).
+        proj = jnp.einsum("nd,hde,ne->nh", x, projections, x)
+    else:
+        proj = x @ projections  # (n, L*K)
+    bits = (proj >= 0).reshape(x.shape[0], l, k)
+    codes = _pack_bits(bits, k)
+    return codes[0] if squeeze else codes
+
+
+def collision_probability(x: jax.Array, q: jax.Array) -> jax.Array:
+    """SimHash collision probability cp(x,q) = 1 - arccos(cos)/pi.
+
+    x: (..., d), q: (d,) or broadcastable. Computed in float32.
+    """
+    xn = jnp.linalg.norm(x, axis=-1)
+    qn = jnp.linalg.norm(q, axis=-1)
+    cos = jnp.sum(x * q, axis=-1) / jnp.maximum(xn * qn, 1e-30)
+    cos = jnp.clip(cos, -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+def collision_probability_quadratic(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Collision prob. of QuadraticSRP = SimHash cp between T(x), T(q).
+
+    cos(T(x),T(q)) = (x.q)^2 / (|x|^2 |q|^2)   (since <T(u),T(v)> = (u.v)^2).
+    """
+    xn2 = jnp.sum(x * x, axis=-1)
+    qn2 = jnp.sum(q * q, axis=-1)
+    ip = jnp.sum(x * q, axis=-1)
+    cos = ip * ip / jnp.maximum(xn2 * qn2, 1e-30)
+    cos = jnp.clip(cos, -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+def augment_regression(x: jax.Array, y: jax.Array) -> jax.Array:
+    """[x_i, y_i] augmentation for least squares (Eq. 4), L2-normalised rows."""
+    v = jnp.concatenate([x, y[..., None]], axis=-1)
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-30)
+
+
+def regression_query(theta: jax.Array) -> jax.Array:
+    """Query vector [theta, -1] for least squares."""
+    return jnp.concatenate([theta, -jnp.ones(theta.shape[:-1] + (1,), theta.dtype)], -1)
+
+
+def augment_logistic(x: jax.Array, y: jax.Array) -> jax.Array:
+    """y_i * x_i augmentation for logistic regression (Sec. 2.3), normalised."""
+    v = x * y[..., None]
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-30)
+
+
+def logistic_query(theta: jax.Array) -> jax.Array:
+    """Query -theta for logistic regression (Eq. 20)."""
+    return -theta

@@ -1,0 +1,99 @@
+"""TPU-native LSH hash tables: a sorted-code (CSR-like) bucket index.
+
+HARDWARE ADAPTATION.  The paper's CPU implementation stores per-bucket
+pointer lists (classic chained hash tables).  Pointer chasing does not map
+to TPU: memory access must be dense, vectorised gathers.  We replace the
+chained table with a *sorted-code index*:
+
+  per table t:
+    codes[t, i]      uint32 packed K-bit code of point i      (L, N)
+    order[t, :]      argsort of codes[t]                      (L, N) int32
+    sorted_codes[t]  codes[t, order[t]]                       (L, N)
+
+A bucket is then the contiguous slice [lo, hi) found by two binary
+searches (``searchsorted``) of the query code — O(log N) per probe, fully
+vectorisable over tables and over a minibatch of queries, and the *build*
+is a sort (TPU-efficient) instead of millions of scatter-appends.
+
+The index is a pytree and can be sharded over the ``data`` mesh axis so
+each data-parallel group maintains the index of its own shard of the
+training set (see ``repro/data/lsh_pipeline.py``).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .simhash import LSHParams, compute_codes, make_projections
+
+
+class LSHIndex(NamedTuple):
+    """Immutable sorted-code LSH index over n points (pytree)."""
+
+    projections: jax.Array   # (d, L*K) or (L*K, d, d) for quadratic
+    sorted_codes: jax.Array  # (L, N) uint32, ascending per row
+    order: jax.Array         # (L, N) int32: order[t, j] = original point id
+
+    @property
+    def n_tables(self) -> int:
+        return self.sorted_codes.shape[0]
+
+    @property
+    def n_points(self) -> int:
+        return self.sorted_codes.shape[1]
+
+
+def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams) -> LSHIndex:
+    """One-time (or periodic-refresh) preprocessing: hash + sort per table."""
+    if params.dim != x_aug.shape[-1]:
+        raise ValueError(f"params.dim={params.dim} != data dim {x_aug.shape[-1]}")
+    proj = make_projections(key, params)
+    codes = compute_codes(
+        x_aug, proj, k=params.k, l=params.l, quadratic=params.family == "quadratic"
+    )  # (N, L)
+    codes = codes.T  # (L, N)
+    order = jnp.argsort(codes, axis=1).astype(jnp.int32)
+    sorted_codes = jnp.take_along_axis(codes, order.astype(jnp.int32), axis=1)
+    return LSHIndex(proj, sorted_codes, order)
+
+
+def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
+                  params: LSHParams) -> LSHIndex:
+    """Re-hash the (possibly updated) points, keeping the same projections.
+
+    Used for deep models where stored features drift slowly (Sec. 3.2 /
+    Appendix E): hash tables are periodically rebuilt from fresh features.
+    `key` is unused when projections are reused but kept for API symmetry.
+    """
+    del key
+    codes = compute_codes(
+        x_aug, index.projections, k=params.k, l=params.l,
+        quadratic=params.family == "quadratic",
+    ).T
+    order = jnp.argsort(codes, axis=1).astype(jnp.int32)
+    sorted_codes = jnp.take_along_axis(codes, order, axis=1)
+    return LSHIndex(index.projections, sorted_codes, order)
+
+
+def query_codes(index: LSHIndex, q: jax.Array, params: LSHParams) -> jax.Array:
+    """Hash a query (d,) or batch (m, d) -> (L,) or (m, L) uint32."""
+    return compute_codes(
+        q, index.projections, k=params.k, l=params.l,
+        quadratic=params.family == "quadratic",
+    )
+
+
+def bucket_bounds(index: LSHIndex, qcodes: jax.Array):
+    """For each table, the [lo, hi) slice of the query's bucket.
+
+    qcodes: (L,) uint32 -> lo, hi: (L,) int32.  Vectorised binary search.
+    """
+    def per_table(sc, c):
+        lo = jnp.searchsorted(sc, c, side="left")
+        hi = jnp.searchsorted(sc, c, side="right")
+        return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+    return jax.vmap(per_table)(index.sorted_codes, qcodes)

@@ -1,0 +1,3 @@
+from .ops import gqa_attention, gqa_decode  # noqa: F401
+from .ref import attention_ref, decode_ref  # noqa: F401
+from .kernel import flash_attention_pallas, flash_decode_pallas  # noqa: F401

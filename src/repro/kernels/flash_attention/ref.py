@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for flash attention / flash decode."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,   # (B, Hkv, G, S, D)
+    k: jax.Array,   # (B, Hkv, S, D)
+    v: jax.Array,   # (B, Hkv, S, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hkv, g, s, d = q.shape
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_ref(
+    q: jax.Array,        # (B, Hkv, G, D)
+    k_cache: jax.Array,  # (B, Hkv, S, D)
+    v_cache: jax.Array,  # (B, Hkv, S, D)
+    kv_len: jax.Array,   # (B,)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    b, hkv, g, d = q.shape
+    s = k_cache.shape[2]
+    scale = scale if scale is not None else d ** -0.5
+    logits = jnp.einsum(
+        "bhgd,bhkd->bhgk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]     # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)

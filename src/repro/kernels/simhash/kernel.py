@@ -1,0 +1,91 @@
+"""Fused SimHash Pallas TPU kernel: projection matmul + sign + bit-pack.
+
+The hot op of LGD's preprocessing/refresh path: hash every training point
+(N can be 1e5..1e9 across data shards) into L packed K-bit codes,
+
+    codes[n, t] = sum_k (x[n] @ w[:, t*K + k] >= 0) << k        (uint32)
+
+HARDWARE ADAPTATION (vs. the paper's CPU sparse projections): on TPU the
+MXU makes a *dense* (BN, d) @ (d, BL*K) tile matmul essentially free
+compared to the HBM traffic of streaming X, so instead of sparse
+multiplications we fuse the full projection, the sign, and the bit-pack
+into one VMEM-resident pass — one read of X, one tiny write of codes
+(32x smaller than the projection output it replaces).  The pack is a
+dot-product with the power-of-two vector so it also runs on the MXU/VPU
+rather than looping over bits.
+
+Block layout:
+  grid  = (N / BN, L / BL)
+  x     : (BN, d)       — full feature dim resident in VMEM (d <= few k)
+  w     : (d, BL*K)     — projections for BL tables
+  codes : (BN, BL)      — uint32 output tile
+VMEM per step ~ BN*d + d*BL*K + BN*BL*K floats; defaults keep this
+< 4 MiB for d up to 4096 with BN=256, BL=8, K<=32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_BN = 256
+DEFAULT_BL = 8
+
+
+def _simhash_kernel(x_ref, w_ref, out_ref, *, k: int, bl: int):
+    x = x_ref[...]                      # (BN, d)
+    w = w_ref[...]                      # (d, BL*K)
+    proj = jnp.dot(x, w, preferred_element_type=jnp.float32)  # (BN, BL*K) MXU
+    bn = proj.shape[0]
+    if k <= 24:
+        # MXU-friendly pack: dot with the power-of-two vector (exact for
+        # K <= 24 since float32 holds integers up to 2^24 exactly).
+        bits = (proj >= 0.0).astype(jnp.float32).reshape(bn, bl, k)
+        weights = (2.0 ** jnp.arange(k, dtype=jnp.float32))   # (K,)
+        packed = jax.lax.dot_general(
+            bits, weights[:, None],
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (BN, BL, 1)
+        out_ref[...] = packed[..., 0].astype(jnp.uint32)
+    else:
+        # exact integer pack on the VPU for 24 < K <= 32
+        bits = (proj >= 0.0).reshape(bn, bl, k).astype(jnp.uint32)
+        weights = jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32)
+        out_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32)
+
+
+def simhash_codes_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    k: int,
+    l: int,
+    block_n: int = DEFAULT_BN,
+    block_l: int = DEFAULT_BL,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed SimHash codes for a batch of points.
+
+    x: (N, d) float; w: (d, L*K) float.  Returns (N, L) uint32.
+    N must be a multiple of block_n and L of block_l (ops.py pads).
+    """
+    n, d = x.shape
+    assert w.shape == (d, l * k), (w.shape, d, l, k)
+    assert n % block_n == 0 and l % block_l == 0, (n, l, block_n, block_l)
+    grid = (n // block_n, l // block_l)
+    return pl.pallas_call(
+        functools.partial(_simhash_kernel, k=k, bl=block_l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((d, block_l * k), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_l), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, l), jnp.uint32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))

@@ -1,0 +1,45 @@
+"""Jit'd public wrapper for the SimHash kernel (padding + dispatch)."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import DEFAULT_BL, DEFAULT_BN, simhash_codes_pallas
+from .ref import simhash_codes_ref
+
+
+def _round_up(a: int, b: int) -> int:
+    return (a + b - 1) // b * b
+
+
+@partial(jax.jit, static_argnames=("k", "l", "use_pallas", "interpret"))
+def simhash_codes(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    k: int,
+    l: int,
+    use_pallas: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed SimHash codes (N, L) uint32; pads N and L to block multiples.
+
+    ``use_pallas=False`` falls back to the jnp oracle (used on CPU hosts
+    where the interpreter would be slower than XLA:CPU).
+    """
+    if not use_pallas:
+        return simhash_codes_ref(x, w, k=k, l=l)
+    n, d = x.shape
+    bn = min(DEFAULT_BN, _round_up(n, 8))
+    bl = min(DEFAULT_BL, l)
+    n_pad = _round_up(n, bn)
+    l_pad = _round_up(l, bl)
+    xp = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+    wp = jnp.pad(w, ((0, 0), (0, (l_pad - l) * k)))
+    codes = simhash_codes_pallas(
+        xp, wp, k=k, l=l_pad, block_n=bn, block_l=bl, interpret=interpret
+    )
+    return codes[:n, :l]

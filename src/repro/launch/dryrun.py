@@ -1,0 +1,354 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is how the distribution config is proven coherent without hardware:
+``jax.jit(step, in_shardings=..., out_shardings=...).lower(*specs)
+.compile()`` must succeed on the production meshes (16x16 single-pod,
+2x16x16 multi-pod) for every assigned architecture and input shape.
+The compiled artifact yields the roofline inputs:
+  - compiled.cost_analysis()   -> HLO FLOPs / bytes accessed
+  - compiled.memory_analysis() -> bytes per device (fits / doesn't)
+  - compiled.as_text()         -> post-SPMD HLO, parsed for collective bytes
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch phi4_mini_3_8b \
+      --shape train_4k [--multi-pod] [--out results.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out benchmarks/dryrun
+"""
+
+# The host has ONE real CPU device; the dry-run builds the production mesh
+# from 512 host-platform placeholder devices.  MUST run before any other
+# import that could initialise jax.
+import os  # noqa: E402
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro import configs                      # noqa: E402
+from repro.configs.shapes import (             # noqa: E402
+    SHAPES,
+    batch_specs,
+    cache_specs,
+    shape_applicable,
+)
+from repro.dist.sharding import (              # noqa: E402
+    batch_sharding,
+    tree_param_shardings,
+    use_mesh,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import ModelConfig, decode_step, init_params, loss  # noqa: E402
+from repro.optim import Adafactor, Adam, apply_updates  # noqa: E402
+
+# Architectures whose optimiser state must be factored to fit HBM
+# (params >= 100B): Adafactor; the rest use Adam (m+v fp32).
+GIANT_ARCHS = {"qwen3_moe_235b_a22b", "llama4_maverick_400b_a17b",
+               "llama_3_2_vision_90b"}
+
+
+def pick_optimizer(arch: str):
+    if configs._canon(arch) in GIANT_ARCHS:
+        return Adafactor(lr=1e-2)
+    return Adam(lr=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer):
+    def train_step(params, opt_state, batch):
+        l, grads = jax.value_and_grad(
+            lambda p: loss(p, cfg, batch))(params)
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, l
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    from repro.models import prefill
+
+    def prefill_step(params, batch, cache):
+        h, cache = prefill(params, cfg, batch, cache)
+        return h, cache
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch, cache):
+        logits, cache = decode_step(params, cfg, batch, cache)
+        return logits, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def _axis_size(mesh, axes):
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_shardings(specs, mesh):
+    """Shard batch dim 0 over the data axes (replicate if not divisible)."""
+    data_ax = _data_axes(mesh)
+    dn = _axis_size(mesh, data_ax)
+
+    def one(s):
+        if s.shape and s.shape[0] % dn == 0:
+            return NamedSharding(mesh, P(data_ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(specs, cfg: ModelConfig, mesh):
+    """(repeats, batch, ...) caches: batch on data axes; attention K/V
+    caches are SEQUENCE-sharded over the model axis (the long-context
+    decode sharding: each model shard owns a contiguous KV slice and
+    GSPMD turns the softmax reductions into all-reduces), SSM states are
+    head-sharded."""
+    data_ax = _data_axes(mesh)
+    dn = _axis_size(mesh, data_ax)
+    mn = mesh.shape["model"]
+
+    def one(s):
+        spec = [None] * len(s.shape)
+        if len(s.shape) >= 2 and s.shape[1] % dn == 0:
+            spec[1] = data_ax
+        if len(s.shape) == 5:
+            if s.shape[3] in (cfg.n_kv_heads, cfg.n_heads):
+                # attn K/V (R, B, S, Hkv, D): shard the big S dim
+                if s.shape[2] % mn == 0:
+                    spec[2] = "model"
+                elif s.shape[3] % mn == 0:
+                    spec[3] = "model"
+            else:
+                # ssm state (R, B, H, N, P): shard heads
+                if s.shape[2] % mn == 0:
+                    spec[2] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, specs)
+
+
+# ---------------------------------------------------------------------------
+# collective-bytes parser (post-SPMD optimized HLO)
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective type (one entry per op)."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        lhs, _, rhs = line.partition("=")
+        rhs = rhs.strip()
+        m = re.match(r"(?:\([^)]*\)|\S+)\s+([\w-]+)\(", rhs)
+        # result type is at the start of rhs, opcode follows
+        for c in _COLLECTIVES:
+            # count the op once: base form or async -start (skip -done)
+            opcodes = (f" {c}(", f" {c}-start(")
+            head = rhs.split("(", 1)[0]
+            if head.endswith(c) or head.endswith(c + "-start"):
+                out[c] += _shape_bytes(rhs.split(c)[0])
+                out["count"] += 1
+                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             cfg_override=None, verbose: bool = True) -> dict:
+    cfg = cfg_override or configs.get(arch)
+    shape = SHAPES[shape_name]
+    skip = shape_applicable(cfg, shape)
+    if skip is not None:
+        return {"arch": arch, "shape": shape_name, "skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    optimizer = pick_optimizer(arch)
+    t0 = time.time()
+
+    with use_mesh(mesh):
+        param_shapes = jax.eval_shape(partial(init_params, cfg=cfg),
+                                      jax.random.PRNGKey(0))
+        p_shard = tree_param_shardings(param_shapes, mesh)
+        b_specs = batch_specs(cfg, shape)
+        b_shard = batch_shardings(b_specs, mesh)
+
+        if shape.kind == "train":
+            opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
+            o_shard = tree_param_shardings(opt_shapes, mesh)
+            step = make_train_step(cfg, optimizer)
+            lowered = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, b_shard),
+                out_shardings=(p_shard, o_shard,
+                               NamedSharding(mesh, P())),
+                donate_argnums=(0, 1),
+            ).lower(param_shapes, opt_shapes, b_specs)
+        else:
+            c_specs = cache_specs(cfg, shape)
+            c_shard = cache_shardings(c_specs, cfg, mesh)
+            if shape.kind == "prefill":
+                step = make_prefill_step(cfg)
+                h_spec = NamedSharding(mesh, P(_data_axes(mesh)))
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_shard, b_shard, c_shard),
+                    out_shardings=(h_spec, c_shard),
+                    donate_argnums=(2,),
+                ).lower(param_shapes, b_specs, c_specs)
+            else:
+                step = make_serve_step(cfg)
+                lg_spec = NamedSharding(mesh, P())
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_shard, b_shard, c_shard),
+                    out_shardings=(lg_spec, c_shard),
+                    donate_argnums=(2,),
+                ).lower(param_shapes, b_specs, c_specs)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "bytes_per_device_argument": getattr(
+                mem, "argument_size_in_bytes", None),
+            "bytes_per_device_output": getattr(
+                mem, "output_size_in_bytes", None),
+            "bytes_per_device_temp": getattr(
+                mem, "temp_size_in_bytes", None),
+            "bytes_per_device_peak": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            ),
+        }
+    except Exception as e:  # pragma: no cover
+        mem_d = {"error": str(e)}
+
+    # loop-aware per-device accounting (cost_analysis counts while bodies
+    # once; see launch/hlo_analysis.py)
+    from repro.launch.hlo_analysis import analyze
+    hlo = analyze(compiled.as_text())
+    n_params = sum(
+        int(jnp.prod(jnp.array(x.shape)))
+        for x in jax.tree.leaves(param_shapes))
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": 512 if multi_pod else 256,
+        "n_params": n_params,
+        "flops_per_device": hlo.flops,
+        "bytes_per_device": hlo.bytes,
+        "collectives": dict(hlo.collectives),
+        "top_dots": sorted(hlo.dot_flops_by_meta.items(),
+                           key=lambda kv: -kv[1])[:8],
+        "top_collectives": sorted(hlo.coll_bytes_by_meta.items(),
+                                  key=lambda kv: -kv[1])[:8],
+        "xla_cost_analysis": {"flops": cost.get("flops"),
+                              "bytes": cost.get("bytes accessed")},
+        "memory": mem_d,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(json.dumps(result, indent=None, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in configs.all_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    results = []
+    for arch, shape in cells:
+        try:
+            results.append(run_cell(arch, shape, multi_pod=args.multi_pod))
+        except Exception as e:
+            results.append({"arch": arch, "shape": shape,
+                            "error": repr(e)})
+            print(f"FAILED {arch} x {shape}: {e!r}")
+
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+        print(f"wrote {args.out}")
+
+    failed = [r for r in results if "error" in r]
+    print(f"\n{len(results) - len(failed)}/{len(results)} cells OK")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

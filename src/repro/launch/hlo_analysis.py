@@ -1,0 +1,282 @@
+"""Loop-aware roofline accounting from post-SPMD optimized HLO text.
+
+``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+under-counts layer-scanned models by ~n_layers x.  This analyzer parses
+the optimized HLO, walks the call graph (fusions, while bodies) and
+multiplies by XLA's ``known_trip_count`` annotations, yielding:
+
+  flops             dot/conv FLOPs, remat recompute included
+  bytes             operand+result bytes of top-level ops (HBM-traffic
+                    proxy, the same convention XLA's own heuristic uses)
+  collectives       result bytes per collective opcode, trip-adjusted
+  dot_flops_by_name top offenders for perf iteration
+
+All quantities are PER DEVICE (the HLO is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1,
+    "u4": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_BYTES_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "iota",
+                   # pure data-movement / layout ops: the TPU compiler
+                   # fuses these into producers/consumers, so charging
+                   # their bytes would double-count HBM traffic that the
+                   # XLA:CPU backend (which fuses far less) leaves
+                   # exposed.  Documented in EXPERIMENTS.md §Roofline.
+                   "copy", "transpose", "reshape", "broadcast", "slice",
+                   "convert", "select", "compare", "reverse", "pad",
+                   "concatenate"}
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: List[str]
+    attrs: str
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_bytes(self.result_type)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    types: Dict[str, str] = field(default_factory=dict)  # %ref -> type
+
+
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$"
+)
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in text.splitlines():
+        ls = line.strip()
+        if not ls:
+            continue
+        hdr = _COMP_HDR.match(ls)
+        if hdr and " = " not in ls.split("{")[0]:
+            current = Computation(hdr.group(1))
+            comps[current.name] = current
+            if ls.startswith("ENTRY"):
+                entry = current.name
+            continue
+        if ls.startswith("}"):
+            continue
+        m = _OP_LINE.match(line)
+        if m and current is not None:
+            name, rtype, opcode, rest = m.groups()
+            # split operands (refs like %x or literals) from attrs
+            depth, i = 1, 0
+            while i < len(rest) and depth > 0:
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                i += 1
+            operand_str = rest[: i - 1]
+            attrs = rest[i:]
+            operands = re.findall(r"%([\w.\-]+)", operand_str)
+            op = Op(name, opcode, rtype.strip(), operands, attrs)
+            current.ops.append(op)
+            current.types[name] = rtype.strip()
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation,
+               global_types: Dict[str, str]) -> int:
+    res = _shape_dims(op.result_type)
+    if not res:
+        return 0
+    n_res = 1
+    for d in res[0][1]:
+        n_res *= d
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    contract = 1
+    if m and op.operands:
+        lhs_type = comp.types.get(op.operands[0]) or global_types.get(
+            op.operands[0], "")
+        lhs = _shape_dims(lhs_type)
+        if lhs:
+            dims = lhs[0][1]
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(dims):
+                    contract *= dims[idx]
+    return 2 * n_res * contract
+
+
+@dataclass
+class Analysis:
+    flops: int = 0
+    bytes: int = 0
+    collectives: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+    dot_flops_by_meta: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+    coll_bytes_by_meta: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+    bytes_by_meta: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+
+    def as_dict(self) -> dict:
+        top = sorted(self.dot_flops_by_meta.items(), key=lambda kv: -kv[1])
+        topc = sorted(self.coll_bytes_by_meta.items(), key=lambda kv: -kv[1])
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collectives": dict(self.collectives),
+            "top_dots": top[:12],
+            "top_collectives": topc[:12],
+            "top_bytes": sorted(self.bytes_by_meta.items(),
+                                key=lambda kv: -kv[1])[:12],
+        }
+
+
+def _trip_count(op: Op, comps: Dict[str, Computation]) -> int:
+    m = _TRIP_RE.search(op.attrs)
+    if m:
+        return int(m.group(1))
+    # fall back: constant in the condition computation
+    mc = re.search(r"condition=%?([\w.\-]+)", op.attrs)
+    if mc and mc.group(1) in comps:
+        for cop in comps[mc.group(1)].ops:
+            mm = re.match(r"constant\((\d+)\)",
+                          cop.opcode + "(" + ",".join(cop.operands) + ")")
+            if cop.opcode == "constant":
+                mm = re.search(r"constant\((\d+)\)", cop.result_type + cop.attrs)
+        # conservative: assume 1 if unparseable
+    return 1
+
+
+def _called(op: Op) -> List[str]:
+    out = []
+    for key in ("calls", "body", "to_apply", "branch_computations"):
+        m = re.search(rf"{key}=\{{?%?([\w.\-]+(?:, ?%[\w.\-]+)*)\}}?",
+                      op.attrs)
+        if m:
+            out.extend(x.strip().lstrip("%") for x in m.group(1).split(","))
+    return out
+
+
+def analyze(text: str) -> Analysis:
+    comps, entry = parse_hlo(text)
+    global_types: Dict[str, str] = {}
+    for c in comps.values():
+        global_types.update(c.types)
+    res = Analysis()
+
+    def meta_name(op: Op) -> str:
+        m = re.search(r'op_name="([^"]+)"', op.attrs)
+        return m.group(1) if m else op.name
+
+    def walk(comp_name: str, mult: int, count_bytes: bool):
+        comp = comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                trip = _trip_count(op, comps)
+                body = re.search(r"body=%?([\w.\-]+)", op.attrs)
+                if body:
+                    walk(body.group(1), mult * trip, count_bytes)
+                continue
+            if oc in ("fusion", "call", "conditional", "custom-call",
+                      "async-start"):
+                for sub in _called(op):
+                    walk(sub, mult, False)   # flops only inside fusions
+                if count_bytes and oc != "async-start":
+                    b = op.result_bytes + sum(
+                        _shape_bytes(comp.types.get(o)
+                                     or global_types.get(o, ""))
+                        for o in op.operands)
+                    res.bytes += b * mult
+                    res.bytes_by_meta[meta_name(op)] += b * mult
+                continue
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in _COLLECTIVES:
+                res.collectives[base] += op.result_bytes * mult
+                res.coll_bytes_by_meta[
+                    f"{base}:{meta_name(op)}"] += op.result_bytes * mult
+                continue
+            if oc in ("dot", "convolution"):
+                f = _dot_flops(op, comp, global_types)
+                res.flops += f * mult
+                res.dot_flops_by_meta[meta_name(op)] += f * mult
+            if count_bytes and oc not in _SKIP_BYTES_OPS \
+                    and not oc.endswith("-done"):
+                if oc == "dynamic-update-slice":
+                    # in-place on TPU: traffic = the updated slice
+                    # (read-modify-write), not the whole buffer.
+                    upd = (comp.types.get(op.operands[1])
+                           or global_types.get(op.operands[1], "")
+                           ) if len(op.operands) > 1 else ""
+                    b = 2 * _shape_bytes(upd)
+                elif oc in ("dynamic-slice", "gather"):
+                    # reads only the addressed rows ~= result bytes
+                    b = 2 * op.result_bytes
+                elif oc == "scatter":
+                    # writes only the update rows (operand 2) + result alias
+                    upd = (comp.types.get(op.operands[2])
+                           or global_types.get(op.operands[2], "")
+                           ) if len(op.operands) > 2 else ""
+                    b = 3 * _shape_bytes(upd)
+                else:
+                    b = op.result_bytes + sum(
+                        _shape_bytes(comp.types.get(o)
+                                     or global_types.get(o, ""))
+                        for o in op.operands)
+                res.bytes += b * mult
+                res.bytes_by_meta[meta_name(op)] += b * mult
+
+    if entry:
+        walk(entry, 1, True)
+    return res
+
+
+if __name__ == "__main__":
+    import sys
+    print(json.dumps(analyze(open(sys.argv[1]).read()).as_dict(), indent=2))

@@ -1,0 +1,108 @@
+"""Production training launcher: --arch <id> on a sharded mesh.
+
+On a TPU fleet this binary runs once per host (jax.distributed picks up
+the pod topology); on this CPU container it runs the same code path on
+the host mesh with the arch's SMOKE config unless --full is given.
+
+  PYTHONPATH=src python -m repro.launch.train --arch granite_3_8b \
+      --steps 50 [--full] [--lgd] [--ckpt /tmp/ck] [--batch 8] [--seq 64]
+"""
+
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.data import (
+    LSHPipelineConfig, LSHSampledPipeline, make_token_corpus,
+    uniform_batches,
+)
+from repro.dist.sharding import (
+    batch_sharding, tree_param_shardings, use_mesh,
+)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import forward, init_params, loss
+from repro.optim import Adam, apply_updates, schedules
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--corpus", type=int, default=2048)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full", action="store_true",
+                    help="use the FULL production config (TPU fleets)")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use make_production_mesh() instead of host mesh")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--lgd", action="store_true",
+                    help="enable the LSH-sampled data pipeline")
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = (configs.get(args.arch) if args.full
+           else configs.get_smoke(args.arch))
+    mesh = (make_production_mesh(multi_pod=args.multi_pod)
+            if args.production_mesh else make_host_mesh())
+    print(f"arch={cfg.name}  mesh={dict(zip(mesh.axis_names, mesh.devices.shape))}")
+
+    with use_mesh(mesh):
+        key = jax.random.PRNGKey(0)
+        params = init_params(key, cfg)
+        shardings = tree_param_shardings(params, mesh)
+        params = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), params, shardings)
+        n = sum(x.size for x in jax.tree.leaves(params))
+        print(f"params: {n/1e6:.1f}M, sharded over {mesh.size} devices")
+
+        if cfg.frontend == "embed_stub":
+            raise SystemExit(
+                f"{cfg.name} takes precomputed embeddings; use "
+                "examples/serve.py or the dryrun for this arch")
+        corpus = make_token_corpus(0, args.corpus, args.seq, cfg.vocab)
+
+        holder = {}
+        if args.lgd:
+            def feature_fn(tokens):
+                prm = holder["trainer"].params if "trainer" in holder \
+                    else params
+                h = forward(prm, cfg, {"tokens": tokens})
+                return jnp.mean(h.astype(jnp.float32), axis=1)
+
+            def query_fn():
+                prm = holder["trainer"].params if "trainer" in holder \
+                    else params
+                return jnp.mean(
+                    prm["embed_group"]["lm_head"].astype(jnp.float32), 1)
+
+            pipe = LSHSampledPipeline(
+                jax.random.PRNGKey(2), corpus.tokens, jax.jit(feature_fn),
+                query_fn, LSHPipelineConfig(minibatch=args.batch))
+            batches = iter(pipe.next_batch, None)
+        else:
+            batches = uniform_batches(corpus, args.batch, seed=1)
+
+        tr = Trainer(
+            cfg, params,
+            Adam(lr=schedules.warmup_cosine(args.lr, 10, args.steps)),
+            batches,
+            TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=50, log_every=10,
+                          donate=not args.lgd))
+        holder["trainer"] = tr
+        tr.run(args.steps)
+        tr.finalize()
+        for m in tr.metrics_history[-5:]:
+            print(m)
+
+
+if __name__ == "__main__":
+    main()

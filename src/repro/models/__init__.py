@@ -1,0 +1,11 @@
+from .config import ModelConfig  # noqa: F401
+from . import layers, lm, moe, ssm  # noqa: F401
+from .lm import (  # noqa: F401
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    logits,
+    loss,
+    prefill,
+)

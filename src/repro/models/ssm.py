@@ -1,0 +1,354 @@
+"""Sub-quadratic sequence mixers: Mamba-2 (SSD), xLSTM mLSTM/sLSTM.
+
+Mamba-2 and mLSTM share one *chunked gated linear-attention* core:
+
+    S_t = a_t * S_{t-1} + k_t^T v_t          (per-head matrix state, PxN)
+    y_t = q_t S_t   (+ normaliser for mLSTM)
+
+computed chunk-parallel (FlashLinearAttention schedule): within a chunk
+the contribution is a small causal "attention" matmul weighted by decay
+ratios; across chunks a lax.scan carries the (P, N) state.  This is the
+TPU-native adaptation — all chunk work is MXU matmuls, the sequential
+dependency is only over S/chunk steps.
+
+sLSTM keeps a per-channel scalar state and is inherently sequential;
+it runs as a lax.scan over time (xLSTM uses few sLSTM blocks).
+
+Decode: every mixer exposes a single-token state-update path with O(1)
+cost per token — the reason these archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import logical
+from .config import ModelConfig
+from .layers import init_rmsnorm, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# chunked gated linear attention core
+# ---------------------------------------------------------------------------
+
+def gla_chunked(
+    q: jax.Array,        # (B, S, H, N)  query / C in mamba2
+    k: jax.Array,        # (B, S, H, N)  key   / B in mamba2
+    v: jax.Array,        # (B, S, H, P)  value / x in mamba2
+    log_a: jax.Array,    # (B, S, H)     per-step log decay (<= 0)
+    chunk: int,
+    state0: Optional[jax.Array] = None,   # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), state (B,H,N,P))."""
+    b, s, h, n = q.shape
+    p = v.shape[-1]
+    c = min(chunk, s)
+    s_orig = s
+    if s % c != 0:
+        # pad with zero-k/v and zero log-decay: state passes through pads
+        pad = c - s % c
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // c
+
+    qc = q.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,N)
+    kc = k.reshape(b, nc, c, h, n).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nc, c, h, p).transpose(1, 0, 3, 2, 4)  # (nc,B,H,c,P)
+    la = log_a.reshape(b, nc, c, h).transpose(1, 0, 3, 2)    # (nc,B,H,c)
+
+    cum = jnp.cumsum(la, axis=-1)                            # (nc,B,H,c)
+    total = cum[..., -1:]
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(state, xs):
+        qi, ki, vi, cumi, toti = xs
+        # decay from chunk start to position t (inclusive of a_t)
+        d_q = jnp.exp(cumi)                                  # (B,H,c)
+        # decay from position t (exclusive) to chunk end
+        d_k = jnp.exp(toti - cumi)                           # (B,H,c)
+        # intra-chunk causal attention with decay ratio exp(cum_i - cum_j)
+        att = jnp.einsum("bhin,bhjn->bhij", qi, ki)          # (B,H,c,c)
+        ratio = jnp.exp(cumi[..., :, None] - cumi[..., None, :])
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        att = jnp.where(mask, att * ratio, 0.0)
+        y_intra = jnp.einsum("bhij,bhjp->bhip", att, vi)
+        # inter-chunk: carried state
+        y_state = jnp.einsum("bhin,bhnp->bhip", qi * d_q[..., None], state)
+        # state update
+        k_dec = ki * d_k[..., None]                          # (B,H,c,N)
+        state_new = state * jnp.exp(toti)[..., None] + jnp.einsum(
+            "bhcn,bhcp->bhnp", k_dec, vi)
+        return state_new, y_intra + y_state
+
+    qf = qc.astype(jnp.float32)
+    kf = kc.astype(jnp.float32)
+    vf = vc.astype(jnp.float32)
+    state, ys = jax.lax.scan(step, state0, (qf, kf, vf, cum, total))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(v.dtype), state
+
+
+def gla_decode_step(
+    q: jax.Array,      # (B, H, N)
+    k: jax.Array,      # (B, H, N)
+    v: jax.Array,      # (B, H, P)
+    log_a: jax.Array,  # (B, H)
+    state: jax.Array,  # (B, H, N, P)
+) -> Tuple[jax.Array, jax.Array]:
+    a = jnp.exp(log_a)[..., None, None].astype(jnp.float32)
+    state = state * a + jnp.einsum(
+        "bhn,bhp->bhnp", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhnp->bhp", q.astype(jnp.float32), state)
+    return y.astype(v.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+def _mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_inner, nh, n = _mamba_dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    s = d ** -0.5
+    # in_proj emits [x (d_inner), z (d_inner), B (N), C (N), dt (nh)]
+    out_dim = 2 * d_inner + 2 * n + nh
+    return {
+        "norm": init_rmsnorm(d),
+        "in_proj": (jax.random.normal(k1, (d, out_dim)) * s).astype(dt),
+        "a_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_proj": (jax.random.normal(k2, (d_inner, d))
+                     * d_inner ** -0.5).astype(dt),
+    }
+
+
+def _mamba_project(p, cfg, x):
+    d_inner, nh, n = _mamba_dims(cfg)
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"])
+    proj = logical(proj, "batch", None, "ff")
+    xin, z, bmat, cmat, dt_raw = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + n, 2 * d_inner + 2 * n],
+        axis=-1)
+    b_, s_ = x.shape[0], x.shape[1]
+    xin = xin.reshape(b_, s_, nh, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    log_a = -jnp.exp(p["a_log"])[None, None, :] * dt       # (B,S,nh) <= 0
+    # B/C shared across heads (single group)
+    k = jnp.broadcast_to(bmat[:, :, None, :], (b_, s_, nh, n))
+    q = jnp.broadcast_to(cmat[:, :, None, :], (b_, s_, nh, n))
+    # discretised input: dt-scaled
+    v = xin * dt[..., None].astype(xin.dtype)
+    return q, k, v, log_a, xin, z
+
+
+def mamba2(p, cfg: ModelConfig, x: jax.Array,
+           state: Optional[jax.Array] = None):
+    """Returns (out, new_state). state: (B, H, N, P)."""
+    d_inner, nh, n = _mamba_dims(cfg)
+    q, k, v, log_a, xin, z = _mamba_project(p, cfg, x)
+    y, new_state = gla_chunked(q, k, v, log_a, cfg.chunk, state)
+    y = y + xin * p["d_skip"][None, None, :, None].astype(xin.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + logical(out, "batch", None, None), new_state
+
+
+def mamba2_decode(p, cfg: ModelConfig, x: jax.Array, state: jax.Array):
+    """x: (B, 1, d). O(1) per-token state update."""
+    d_inner, nh, n = _mamba_dims(cfg)
+    q, k, v, log_a, xin, z = _mamba_project(p, cfg, x)
+    y, new_state = gla_decode_step(
+        q[:, 0], k[:, 0], v[:, 0], log_a[:, 0], state)
+    y = y[:, None] + xin * p["d_skip"][None, None, :, None].astype(xin.dtype)
+    y = y.reshape(x.shape[0], 1, d_inner) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return x + logical(out, "batch", None, None), new_state
+
+
+def init_mamba2_state(cfg: ModelConfig, batch: int):
+    _, nh, n = _mamba_dims(cfg)
+    return jnp.zeros((batch, nh, n, cfg.ssm_head_dim), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM mLSTM block (matrix memory + exponential gating)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.dtype)
+    s = d ** -0.5
+    # qkv + input/forget gate pre-activations per head
+    return {
+        "norm": init_rmsnorm(d),
+        "qkv_proj": (jax.random.normal(k1, (d, 3 * d)) * s).astype(dt),
+        "gate_proj": (jax.random.normal(k2, (d, 2 * nh)) * s).astype(dt),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]).astype(jnp.float32),
+        "out_proj": (jax.random.normal(k3, (d, d)) * s).astype(dt),
+    }
+
+
+def _mlstm_project(p, cfg, x):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    b, s, _ = x.shape
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    qkv = jnp.einsum("bsd,de->bse", h, p["qkv_proj"])
+    qkv = logical(qkv, "batch", None, "ff")
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, nh, dh) * dh ** -0.5
+    k = k.reshape(b, s, nh, dh) * dh ** -0.5
+    v = v.reshape(b, s, nh, dh)
+    gates = jnp.einsum("bsd,de->bse", h, p["gate_proj"]).astype(jnp.float32)
+    gates = gates + p["gate_bias"][None, None, :]
+    i_gate, f_gate = jnp.split(gates, 2, axis=-1)           # (B,S,nh)
+    log_f = jax.nn.log_sigmoid(f_gate)                      # <= 0
+    i_scale = jnp.exp(jnp.minimum(i_gate, 0.0))             # stabilised exp
+    return q, k * i_scale[..., None].astype(k.dtype), v, log_f
+
+
+def mlstm(p, cfg: ModelConfig, x: jax.Array,
+          state: Optional[jax.Array] = None):
+    """Returns (out, new_state); state holds (C, n) stacked: (B,H,dh+1,dh)."""
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    q, k, v, log_f = _mlstm_project(p, cfg, x)
+    # normaliser: run the same recurrence with v=1 (appended column)
+    v_ext = jnp.concatenate(
+        [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    y_ext, new_state = gla_chunked(
+        q, k, v_ext, log_f, cfg.chunk, state)
+    y, n = y_ext[..., :dh], y_ext[..., dh:]
+    y = y / jnp.maximum(jnp.abs(n), 1.0)
+    y = y.reshape(x.shape[0], x.shape[1], d)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return x + logical(out, "batch", None, None), new_state
+
+
+def mlstm_decode(p, cfg: ModelConfig, x: jax.Array, state: jax.Array):
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    q, k, v, log_f = _mlstm_project(p, cfg, x)
+    v_ext = jnp.concatenate(
+        [v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], axis=-1)
+    y_ext, new_state = gla_decode_step(
+        q[:, 0], k[:, 0], v_ext[:, 0], log_f[:, 0], state)
+    y, n = y_ext[..., :dh], y_ext[..., dh:]
+    y = (y / jnp.maximum(jnp.abs(n), 1.0)).reshape(x.shape[0], 1, d)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"])
+    return x + logical(out, "batch", None, None), new_state
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    return jnp.zeros((batch, nh, dh, dh + 1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# xLSTM sLSTM block (scalar memory, sequential scan)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.dtype)
+    s = d ** -0.5
+    # fused projections for z (cell input), i, f, o gates
+    return {
+        "norm": init_rmsnorm(d),
+        "in_proj": (jax.random.normal(k1, (d, 4 * d)) * s).astype(dt),
+        "out_proj": (jax.random.normal(k2, (d, d)) * s).astype(dt),
+    }
+
+
+def _slstm_scan(zi, ii, fi, oi, carry0):
+    """Stabilised sLSTM recurrence over time — PARALLEL form.
+
+    With input-only gates (this implementation projects i/f/o/z from x,
+    no hidden-to-hidden recurrence), the stabiliser is a max-plus scan
+    and the cell/normaliser updates are first-order linear recurrences —
+    all three are ASSOCIATIVE, so the whole layer runs as
+    jax.lax.associative_scan in O(log S) depth instead of S sequential
+    steps.  TPU win measured in EXPERIMENTS.md §Perf (xlstm train cell:
+    the 4096-step while loop was the dominant HBM-traffic term).
+
+    Inputs: (B, S, d) f32; carry0 = (c0, n0, m0) each (B, d).
+    """
+    c0, n0, m0 = carry0
+    log_f = jax.nn.log_sigmoid(fi)                       # (B, S, d)
+
+    # 1) stabiliser: m_t = max(log_f_t + m_{t-1}, i_t)  — max-plus scan
+    #    represented as pairs (a, b): m_t = max(a + m_{t-1}, b)
+    #    composition: (a2,b2)∘(a1,b1) = (a1+a2, max(b1+a2, b2))
+    def mp_op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 + a2, jnp.maximum(b1 + a2, b2)
+
+    a_all, b_all = jax.lax.associative_scan(
+        mp_op, (log_f, ii), axis=1)
+    m = jnp.maximum(a_all + m0[:, None, :], b_all)       # (B, S, d)
+
+    m_prev = jnp.concatenate([m0[:, None, :], m[:, :-1]], axis=1)
+    i_p = jnp.exp(ii - m)
+    f_p = jnp.exp(log_f + m_prev - m)
+
+    # 2) linear recurrences x_t = f'_t x_{t-1} + u_t  (for c and n)
+    def lin_op(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, b1 * a2 + b2
+
+    def lin_scan(u, x0):
+        aa, bb = jax.lax.associative_scan(lin_op, (f_p, u), axis=1)
+        return aa * x0[:, None, :] + bb
+
+    c = lin_scan(i_p * jnp.tanh(zi), c0)
+    n = lin_scan(i_p, n0)
+    h = jax.nn.sigmoid(oi) * c / jnp.maximum(n, 1.0)
+    return h, (c[:, -1], n[:, -1], m[:, -1])
+
+
+def slstm(p, cfg: ModelConfig, x: jax.Array, state=None):
+    """state: (c, n, m) each (B, d) f32."""
+    b, s, d = x.shape
+    h = rms_norm(p["norm"], x, cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", h, p["in_proj"]).astype(jnp.float32)
+    z, i, f, o = jnp.split(proj, 4, axis=-1)
+    if state is None:
+        state = init_slstm_state(cfg, b)
+    hs, new_state = _slstm_scan(z, i, f, o, state)
+    out = jnp.einsum("bsd,de->bse", hs.astype(x.dtype), p["out_proj"])
+    return x + logical(out, "batch", None, None), new_state
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    zeros = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return (zeros, zeros, zeros)

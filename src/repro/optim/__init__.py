@@ -1,0 +1,15 @@
+from .optimizers import (  # noqa: F401
+    Adafactor,
+    AdafactorState,
+    AdaGrad,
+    AdaGradState,
+    Adam,
+    Adam8bit,
+    Adam8bitState,
+    AdamState,
+    QTensor,
+    SGD,
+    SGDState,
+    apply_updates,
+)
+from . import compression, schedules  # noqa: F401

@@ -1,0 +1,75 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the DP gradient all-reduce crosses the (slow)
+inter-pod links; int8 block quantisation cuts that wire traffic 4x
+(bf16) with convergence preserved by ERROR FEEDBACK (Seide et al. /
+1-bit SGD lineage): the quantisation residual is carried into the next
+step instead of discarded, so the long-run compression error is O(1)
+rather than O(T).
+
+Usage (trainer wires this around the optimiser):
+
+    state = init_error_feedback(params)
+    q, state = compress_with_feedback(grads, state)   # before all-reduce
+    grads_hat = decompress(q)                          # after all-reduce
+
+The quantised tree is what crosses the wire: int8 payload + one f32
+scale per 256-value block (2.06 bytes per bf16/f32 gradient value).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizers import QTensor, _dequantize_blockwise, _quantize_blockwise
+
+BLOCK = 256
+
+
+def compress(grads: Any, block: int = BLOCK) -> Any:
+    """Quantise every gradient leaf to int8 QTensors."""
+    return jax.tree.map(
+        lambda g: _quantize_blockwise(g.astype(jnp.float32), block), grads)
+
+
+def decompress(qtree: Any, like: Any = None) -> Any:
+    """Inverse of compress; casts back to `like`'s dtypes if given."""
+    is_qt = lambda x: isinstance(x, QTensor)
+    deq = jax.tree.map(_dequantize_blockwise, qtree, is_leaf=is_qt)
+    if like is not None:
+        deq = jax.tree.map(lambda d, l: d.astype(l.dtype), deq, like)
+    return deq
+
+
+def init_error_feedback(params: Any) -> Any:
+    """Residual accumulator, same structure/shapes as the gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_with_feedback(
+    grads: Any, residual: Any, block: int = BLOCK,
+) -> Tuple[Any, Any]:
+    """Quantise (grads + residual); carry the quantisation error forward.
+
+    Returns (qtree, new_residual)."""
+    corrected = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    qtree = jax.tree.map(
+        lambda c: _quantize_blockwise(c, block), corrected)
+    # walk explicitly: qtree leaves are QTensor containers
+    flat_c, treedef = jax.tree_util.tree_flatten(corrected)
+    flat_q = treedef.flatten_up_to(qtree)
+    new_residual = treedef.unflatten([
+        c - _dequantize_blockwise(q) for c, q in zip(flat_c, flat_q)])
+    return qtree, new_residual
+
+
+def wire_bytes(qtree: Any) -> int:
+    """Bytes a compressed gradient tree puts on the wire."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(qtree):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

@@ -1,0 +1,33 @@
+"""Learning-rate schedules (time/step decay, exponential, warmup+cosine)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay(lr0: float, decay: float, every: int):
+    """lr0 * decay^(step // every) — the paper's 'time based (or step based)'."""
+    return lambda step: lr0 * decay ** (step // every)
+
+
+def exponential_decay(lr0: float, rate: float):
+    """lr0 * exp(-rate * step) — Xu (2011) exponential decay."""
+    return lambda step: lr0 * jnp.exp(-rate * step.astype(jnp.float32))
+
+
+def inverse_time_decay(lr0: float, rate: float):
+    return lambda step: lr0 / (1.0 + rate * step.astype(jnp.float32))
+
+
+def warmup_cosine(lr_peak: float, warmup: int, total: int, lr_min: float = 0.0):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = lr_peak * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr_min + 0.5 * (lr_peak - lr_min) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

@@ -1,0 +1,2 @@
+from . import checkpoint, elastic  # noqa: F401
+from .trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,149 @@
+"""Fault-tolerant checkpointing: path-keyed npz shards + atomic manifest.
+
+Design for 1000+ nodes (documented; exercised single-host here):
+  * every leaf is saved under its tree path, so restore is structural —
+    a checkpoint written on one mesh restores onto ANY mesh/device count
+    (elastic scaling): leaves are loaded on host then device_put with the
+    TARGET sharding.
+  * writes go to ``<dir>.tmp`` then os.rename -> crash-safe (a killed
+    writer never corrupts the latest checkpoint).
+  * ``save_async`` offloads serialisation to a thread after device_get,
+    keeping the accelerator busy (overlap checkpoint I/O with compute).
+  * on a real fleet each host writes only its addressable shards; here a
+    single host owns everything, but the format (per-leaf files keyed by
+    path) is the multi-writer-safe layout.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(kp) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+
+
+def _sanitize(p: str) -> str:
+    return re.sub(r"[^\w./-]", "_", p).replace("/", "__")
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
+    """Synchronous atomic checkpoint of an arbitrary pytree."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    arrays = {}
+    for kp, v in flat:
+        path = _path_str(kp)
+        key = _sanitize(path)
+        arrays[key] = np.asarray(jax.device_get(v))
+        manifest["leaves"].append({
+            "path": path, "key": key,
+            "shape": list(arrays[key].shape),
+            "dtype": str(arrays[key].dtype),
+        })
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint serialisation with training compute."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, ckpt_dir: str, step: int, tree: Any,
+             extra: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.device_get(tree)   # snapshot before training mutates
+
+        def _write():
+            save(ckpt_dir, step, host_tree, extra)
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)", name)
+        if m and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, template: Any,
+            shardings: Any = None) -> tuple:
+    """Restore into the structure of ``template`` (values ignored).
+
+    ``shardings``: optional pytree of NamedSharding for the TARGET mesh —
+    this is the elastic-rescale path: a checkpoint from a 256-chip run
+    restores onto 512 chips (or a single CPU) by resharding on load.
+    Returns (tree, extra_dict).
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    by_path = {leaf["path"]: data[leaf["key"]]
+               for leaf in manifest["leaves"]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    flat_shard = (jax.tree_util.tree_flatten(shardings)[0]
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (kp, tmpl), shard in zip(flat, flat_shard):
+        path = _path_str(kp)
+        if path not in by_path:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = by_path[path]
+        want = tuple(getattr(tmpl, "shape", arr.shape))
+        if tuple(arr.shape) != want:
+            raise ValueError(
+                f"{path}: checkpoint shape {arr.shape} != template {want}")
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(
+        treedef, leaves), manifest.get("extra", {})
+
+
+def keep_last(ckpt_dir: str, n: int = 3):
+    """Garbage-collect old checkpoints, keep the newest n."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", name)))
+    for s in steps[:-n]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)

@@ -1,0 +1,42 @@
+"""Elastic scaling: restore a checkpoint onto a different mesh.
+
+The checkpoint format is mesh-agnostic (host numpy per leaf), so scaling
+a job up/down is: build the new mesh, recompute the parameter shardings
+for it, and restore with reshard-on-load.  The same path handles node
+failure (restart on the surviving smaller mesh) and scale-up.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.dist.sharding import tree_param_shardings
+from . import checkpoint as ckpt
+
+
+def restore_on_mesh(
+    ckpt_dir: str,
+    step: int,
+    template: Any,
+    mesh,
+) -> tuple:
+    """Restore ``template``-structured state onto ``mesh`` (any shape)."""
+    shardings = tree_param_shardings(template, mesh) if mesh else None
+    return ckpt.restore(ckpt_dir, step, template, shardings)
+
+
+def rescale_plan(old_devices: int, new_devices: int,
+                 global_batch: int) -> dict:
+    """Policy for elastic rescale: keep the GLOBAL batch fixed so the
+    optimisation trajectory is unchanged; per-device batch adjusts."""
+    assert global_batch % new_devices == 0 or new_devices % 2 == 0
+    return {
+        "old_devices": old_devices,
+        "new_devices": new_devices,
+        "global_batch": global_batch,
+        "per_device_batch_old": global_batch // max(old_devices, 1),
+        "per_device_batch_new": max(global_batch // new_devices, 1),
+        "grad_accum_steps": max(1, new_devices // global_batch),
+    }

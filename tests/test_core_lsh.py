@@ -1,0 +1,238 @@
+"""Unit + property tests for the LGD core (simhash, tables, sampler)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    LGDProblem,
+    LSHParams,
+    build_index,
+    bucket_bounds,
+    collision_probability,
+    collision_probability_quadratic,
+    compute_codes,
+    exact_inclusion_probability,
+    make_projections,
+    query_codes,
+    regression_query,
+    sample,
+    sample_drain,
+)
+from repro.core.simhash import _pack_bits
+
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _unit_rows(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# simhash
+# ---------------------------------------------------------------------------
+
+class TestSimHash:
+    def test_pack_bits_roundtrip(self):
+        bits = jnp.array([[[1, 0, 1, 1, 0]]], dtype=bool)
+        code = _pack_bits(bits, 5)
+        assert code.shape == (1, 1)
+        assert int(code[0, 0]) == 0b01101
+
+    @pytest.mark.parametrize("family", ["dense", "sparse", "quadratic"])
+    def test_code_shapes(self, family):
+        p = LSHParams(k=5, l=7, dim=16, family=family)
+        proj = make_projections(KEY, p)
+        x = _unit_rows(jax.random.PRNGKey(1), 10, 16)
+        codes = compute_codes(x, proj, k=5, l=7, quadratic=family == "quadratic")
+        assert codes.shape == (10, 7)
+        assert codes.dtype == jnp.uint32
+        assert int(jnp.max(codes)) < 2**5
+        # single-vector path
+        c1 = compute_codes(x[0], proj, k=5, l=7, quadratic=family == "quadratic")
+        assert c1.shape == (7,)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(codes[0]))
+
+    def test_identical_vectors_collide(self):
+        p = LSHParams(k=8, l=4, dim=12, family="dense")
+        proj = make_projections(KEY, p)
+        x = _unit_rows(jax.random.PRNGKey(2), 3, 12)
+        c1 = compute_codes(x, proj, k=8, l=4)
+        c2 = compute_codes(x, proj, k=8, l=4)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+    def test_collision_probability_range_and_monotonicity(self):
+        q = jnp.array([1.0, 0.0])
+        angles = jnp.linspace(0, jnp.pi, 50)
+        xs = jnp.stack([jnp.cos(angles), jnp.sin(angles)], axis=-1)
+        cp = collision_probability(xs, q)
+        assert float(cp[0]) == pytest.approx(1.0, abs=1e-5)
+        assert float(cp[-1]) == pytest.approx(0.0, abs=1e-5)
+        assert bool(jnp.all(jnp.diff(cp) <= 1e-6))  # decreasing with angle
+
+    def test_quadratic_cp_monotone_in_abs_inner_product(self):
+        q = jnp.array([1.0, 0.0])
+        xs = jnp.stack(
+            [jnp.linspace(-1, 1, 41), jnp.sqrt(1 - jnp.linspace(-1, 1, 41) ** 2)],
+            axis=-1,
+        )
+        cp = collision_probability_quadratic(xs, q)
+        ips = jnp.abs(xs @ q)
+        order = jnp.argsort(ips)
+        assert bool(jnp.all(jnp.diff(cp[order]) >= -1e-6))
+        assert float(jnp.min(cp)) >= 0.5 - 1e-6  # quadratic cp in [0.5, 1]
+
+    def test_empirical_collision_rate_matches_cp(self):
+        """P(h(x)=h(q)) over many hash draws == 1 - theta/pi (Eq. 14)."""
+        d, trials = 8, 6000
+        kx, kq = jax.random.split(jax.random.PRNGKey(3))
+        x = _unit_rows(kx, 1, d)[0]
+        q = _unit_rows(kq, 1, d)[0]
+        p = LSHParams(k=1, l=trials, dim=d, family="dense")
+        proj = make_projections(jax.random.PRNGKey(4), p)
+        cx = compute_codes(x, proj, k=1, l=trials)
+        cq = compute_codes(q, proj, k=1, l=trials)
+        emp = float(jnp.mean((cx == cq).astype(jnp.float32)))
+        expected = float(collision_probability(x, q))
+        assert emp == pytest.approx(expected, abs=0.03)
+
+    def test_sparse_projection_density(self):
+        p = LSHParams(k=5, l=100, dim=300, family="sparse", sparsity=1 / 30)
+        proj = make_projections(KEY, p)
+        density = float(jnp.mean((proj != 0).astype(jnp.float32)))
+        assert density == pytest.approx(1 / 30, rel=0.2)
+
+
+# ---------------------------------------------------------------------------
+# tables (sorted-code index)
+# ---------------------------------------------------------------------------
+
+class TestIndex:
+    def _build(self, n=256, d=10, k=4, l=8, family="dense"):
+        p = LSHParams(k=k, l=l, dim=d, family=family)
+        x = _unit_rows(jax.random.PRNGKey(5), n, d)
+        return build_index(jax.random.PRNGKey(6), x, p), x, p
+
+    def test_order_is_permutation(self):
+        index, _, _ = self._build()
+        for t in range(index.n_tables):
+            assert sorted(np.asarray(index.order[t]).tolist()) == list(range(256))
+
+    def test_sorted_codes_ascending(self):
+        index, _, _ = self._build()
+        assert bool(jnp.all(jnp.diff(index.sorted_codes.astype(jnp.int64), axis=1) >= 0))
+
+    def test_bucket_bounds_recover_exact_bucket(self):
+        """Slice [lo,hi) must contain exactly the points with the query code."""
+        index, x, p = self._build()
+        q = _unit_rows(jax.random.PRNGKey(7), 1, 10)[0]
+        qc = query_codes(index, q, p)
+        lo, hi = bucket_bounds(index, qc)
+        codes = compute_codes(x, index.projections, k=p.k, l=p.l).T  # (L, N)
+        for t in range(p.l):
+            expected = set(np.nonzero(np.asarray(codes[t]) == int(qc[t]))[0].tolist())
+            got = set(np.asarray(index.order[t, int(lo[t]):int(hi[t])]).tolist())
+            assert got == expected
+
+    def test_point_hashes_into_own_bucket(self):
+        index, x, p = self._build()
+        qc = query_codes(index, x[13], p)
+        lo, hi = bucket_bounds(index, qc)
+        for t in range(p.l):
+            members = np.asarray(index.order[t, int(lo[t]):int(hi[t])])
+            assert 13 in members
+
+
+# ---------------------------------------------------------------------------
+# sampler (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+class TestSampler:
+    def _setup(self, n=512, d=12, k=4, l=16, family="dense"):
+        p = LSHParams(k=k, l=l, dim=d, family=family)
+        x = _unit_rows(jax.random.PRNGKey(8), n, d)
+        index = build_index(jax.random.PRNGKey(9), x, p)
+        q = _unit_rows(jax.random.PRNGKey(10), 1, d)[0]
+        return index, x, q, p
+
+    def test_sample_shapes_and_ranges(self):
+        index, x, q, p = self._setup()
+        res = sample(jax.random.PRNGKey(11), index, x, q, p, m=32)
+        assert res.indices.shape == (32,)
+        assert bool(jnp.all((res.indices >= 0) & (res.indices < 512)))
+        assert bool(jnp.all(res.probs > 0)) and bool(jnp.all(res.probs <= 1.0))
+        assert bool(jnp.all(res.n_probes >= 1))
+
+    def test_sampled_points_share_bucket_code(self):
+        """Every non-fallback sample must actually collide with the query."""
+        index, x, q, p = self._setup()
+        res = sample(jax.random.PRNGKey(12), index, x, q, p, m=64)
+        qc = np.asarray(query_codes(index, q, p))
+        codes = np.asarray(
+            compute_codes(x, index.projections, k=p.k, l=p.l)
+        )  # (N, L)
+        for i, fb in zip(np.asarray(res.indices), np.asarray(res.fallback)):
+            if not fb:
+                assert any(codes[i, t] == qc[t] for t in range(p.l))
+
+    def test_marginal_inclusion_probability(self):
+        """Over independent table builds, P(x_i in query bucket) -> cp_i^K."""
+        d, n, k = 8, 64, 3
+        p = LSHParams(k=k, l=1, dim=d, family="dense")
+        x = _unit_rows(jax.random.PRNGKey(13), n, d)
+        q = _unit_rows(jax.random.PRNGKey(14), 1, d)[0]
+        builds = 1500
+        hits = np.zeros(n)
+        keys = jax.random.split(jax.random.PRNGKey(15), builds)
+
+        def one(key):
+            idx = build_index(key, x, p)
+            qc = query_codes(idx, q, p)
+            lo, hi = bucket_bounds(idx, qc)
+            in_bucket = jnp.zeros(n, bool).at[idx.order[0, :]].set(
+                (jnp.arange(n) >= lo[0]) & (jnp.arange(n) < hi[0])
+            )
+            return in_bucket
+
+        hits = np.mean(np.asarray(jax.lax.map(one, keys)), axis=0)
+        expected = np.asarray(exact_inclusion_probability(None, x, q, p, l=1))
+        # expected = cp^K; hits estimates it with MC error ~ sqrt(p/q)/sqrt(B)
+        np.testing.assert_allclose(hits, expected, atol=0.05)
+
+    def test_sampling_frequency_monotonic_in_cp(self):
+        """Points with higher cp must be sampled more often (adaptivity)."""
+        index, x, q, p = self._setup(n=256, l=32)
+        res = sample(jax.random.PRNGKey(16), index, x, q, p, m=8192)
+        counts = np.bincount(np.asarray(res.indices), minlength=256)
+        cp = np.asarray(collision_probability(x, q))
+        top = np.argsort(cp)[-25:]
+        bot = np.argsort(cp)[:25]
+        assert counts[top].mean() > counts[bot].mean()
+
+    def test_drain_mode(self):
+        index, x, q, p = self._setup()
+        res = sample_drain(jax.random.PRNGKey(17), index, x, q, p, m=16)
+        assert res.indices.shape == (16,)
+        # all from the same bucket => same probability basis & same l
+        assert len(set(np.asarray(res.n_probes).tolist())) == 1
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        k=st.integers(min_value=1, max_value=8),
+        l=st.integers(min_value=1, max_value=20),
+        m=st.integers(min_value=1, max_value=16),
+    )
+    def test_sampler_total_probability_valid(self, k, l, m):
+        """Property: any (K, L, m) yields valid probs and indices."""
+        p = LSHParams(k=k, l=l, dim=8, family="dense")
+        x = _unit_rows(jax.random.PRNGKey(18), 64, 8)
+        index = build_index(jax.random.PRNGKey(19), x, p)
+        q = _unit_rows(jax.random.PRNGKey(20), 1, 8)[0]
+        res = sample(jax.random.PRNGKey(21), index, x, q, p, m=m)
+        assert res.indices.shape == (m,)
+        assert bool(jnp.all(res.probs > 0))
+        assert bool(jnp.all(jnp.isfinite(res.probs)))

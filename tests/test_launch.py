@@ -1,0 +1,176 @@
+"""Launch-layer unit tests: sharding rules, HLO analyzer, roofline math.
+
+These run on a single CPU device — meshes are stubbed where only shapes
+and axis names matter.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.shapes import SHAPES
+from repro.dist.sharding import param_spec
+from repro.launch.hlo_analysis import analyze, parse_hlo
+from repro.launch.roofline import (
+    _WIRE_FACTOR,
+    active_params,
+    model_flops,
+    roofline_terms,
+)
+from repro.models import ModelConfig
+
+
+@dataclasses.dataclass
+class StubMesh:
+    shape: dict
+    axis_names: tuple
+
+
+POD = StubMesh({"data": 16, "model": 16}, ("data", "model"))
+MULTI = StubMesh({"pod": 2, "data": 16, "model": 16},
+                 ("pod", "data", "model"))
+
+
+class TestParamRules:
+    def test_embed_tp_vocab_fsdp_d(self):
+        spec = param_spec("embed_group/embed", (151936, 4096), POD)
+        assert spec[0] == "model" and spec[1] in ("data", ("data",))
+
+    def test_stacked_block_param_offsets_roles(self):
+        """Stacked experts (L, E, d, ff): layer dim must stay unsharded."""
+        spec = param_spec("blocks/0/ffn/experts_gate", (94, 128, 4096, 1536),
+                          POD)
+        assert spec[0] is None
+        assert spec[1] == "model"                      # experts TP
+        assert spec[2] in ("data", ("data",))          # d FSDP
+
+    def test_unstacked_shared_block(self):
+        spec = param_spec("shared/attn/wq", (2048, 32, 64), POD)
+        assert spec[0] in ("data", ("data",)) and spec[1] == "model" \
+            and spec[2] is None
+
+    def test_indivisible_dim_replicated(self):
+        # 24 heads don't divide model=16 -> replicated head dim
+        spec = param_spec("blocks/0/attn/wq", (32, 3072, 24, 128), POD)
+        assert spec[2] is None
+
+    def test_multipod_fsdp_uses_both_data_axes(self):
+        spec = param_spec("blocks/0/ffn/w_up", (40, 4096, 12800), MULTI)
+        assert spec[1] == ("pod", "data")
+        assert spec[2] == "model"
+
+    def test_norm_replicated(self):
+        spec = param_spec("blocks/0/attn/norm/scale", (40, 4096), POD)
+        assert all(s is None for s in spec)
+
+
+HLO_FIXTURE = """
+HloModule test
+
+%body (arg: (s32[], f32[64,64], f32[4,64,64])) -> (s32[], f32[64,64], f32[4,64,64]) {
+  %arg = (s32[], f32[64,64]{1,0}, f32[4,64,64]{2,1,0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%arg), index=0
+  %g1 = f32[64,64]{1,0} get-tuple-element(%arg), index=1
+  %g2 = f32[4,64,64]{2,1,0} get-tuple-element(%arg), index=2
+  %dot.1 = f32[64,64]{1,0} dot(%g1, %g1), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="test/dot1"}
+  %ar = f32[64,64]{1,0} all-reduce(%dot.1), replica_groups={}, metadata={op_name="test/ar"}
+  ROOT %tup = (s32[], f32[64,64]{1,0}, f32[4,64,64]{2,1,0}) tuple(%g0, %ar, %g2)
+}
+
+%cond (arg2: (s32[], f32[64,64], f32[4,64,64])) -> pred[] {
+  %arg2 = (s32[], f32[64,64]{1,0}, f32[4,64,64]{2,1,0}) parameter(0)
+  %gi = s32[] get-tuple-element(%arg2), index=0
+  %c = s32[] constant(4)
+  ROOT %lt = pred[] compare(%gi, %c), direction=LT
+}
+
+ENTRY %main (x: f32[64,64], w: f32[4,64,64]) -> f32[64,64] {
+  %x = f32[64,64]{1,0} parameter(0)
+  %w = f32[4,64,64]{2,1,0} parameter(1)
+  %c0 = s32[] constant(0)
+  %t = (s32[], f32[64,64]{1,0}, f32[4,64,64]{2,1,0}) tuple(%c0, %x, %w)
+  %wh = (s32[], f32[64,64]{1,0}, f32[4,64,64]{2,1,0}) while(%t), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+  %out = f32[64,64]{1,0} get-tuple-element(%wh), index=1
+  %dot.2 = f32[64,64]{1,0} dot(%out, %out), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %ag = f32[64,64]{1,0} all-gather(%dot.2), dimensions={0}
+}
+"""
+
+
+class TestHLOAnalysis:
+    def test_parse_computations(self):
+        comps, entry = parse_hlo(HLO_FIXTURE)
+        assert entry == "main"
+        assert {"body", "cond", "main"} <= set(comps)
+
+    def test_trip_count_multiplied_flops(self):
+        a = analyze(HLO_FIXTURE)
+        # dot.1 (in 4-trip while) + dot.2: (2*64^3) * (4 + 1)
+        assert a.flops == 2 * 64**3 * 5
+
+    def test_collectives_trip_adjusted(self):
+        a = analyze(HLO_FIXTURE)
+        assert a.collectives["all-reduce"] == 64 * 64 * 4 * 4  # 4 trips
+        assert a.collectives["all-gather"] == 64 * 64 * 4
+
+    def test_real_program_scan(self):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+
+        def f(x, ws):
+            return jax.lax.scan(body, x, ws)[0]
+
+        d = 128
+        txt = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((d, d), jnp.float32),
+            jax.ShapeDtypeStruct((6, d, d), jnp.float32),
+        ).compile().as_text()
+        a = analyze(txt)
+        assert a.flops == 2 * 6 * d**3
+
+
+class TestRoofline:
+    def test_active_params_dense(self):
+        cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=2, d_ff=128, vocab=100, act="swiglu")
+        # qkvo: 64*16*(4*2 + 2*2) + mlp 3*64*128 per layer; embed 2*100*64
+        per_layer = 64 * 16 * (8 + 4) + 3 * 64 * 128
+        want = 2 * per_layer + 2 * 100 * 64
+        assert active_params(cfg) == want
+
+    def test_active_params_moe_counts_topk_only(self):
+        cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=4, d_ff=0, vocab=100, moe_experts=8,
+                          moe_top_k=2, moe_d_ff=32)
+        dense_like = ModelConfig(name="t2", n_layers=2, d_model=64,
+                                 n_heads=4, n_kv_heads=4, d_ff=0, vocab=100,
+                                 moe_experts=8, moe_top_k=8, moe_d_ff=32)
+        assert active_params(cfg) < active_params(dense_like)
+
+    def test_model_flops_train_vs_prefill(self):
+        cfg = ModelConfig(name="t", n_layers=2, d_model=64, n_heads=4,
+                          n_kv_heads=2, d_ff=128, vocab=100)
+        tr = model_flops(cfg, SHAPES["train_4k"], 256)
+        pf = model_flops(cfg, SHAPES["prefill_32k"], 256)
+        # same token count; train = 3x prefill FLOPs (fwd+bwd)
+        assert tr / pf == pytest.approx(3.0, rel=1e-6)
+
+    def test_roofline_terms_dominant(self):
+        rec = {
+            "arch": "granite_3_8b", "shape": "train_4k", "n_devices": 256,
+            "flops_per_device": 197e12,       # exactly 1s of compute
+            "bytes_per_device": 819e9 * 2,    # 2s of memory
+            "collectives": {"all-reduce": 25e9},  # 2*25e9/50e9 = 1s
+        }
+        t = roofline_terms(rec)
+        assert t["dominant"] == "memory"
+        assert t["compute_s"] == pytest.approx(1.0)
+        assert t["collective_s"] == pytest.approx(1.0)
+        assert t["step_time_lower_bound_s"] == pytest.approx(2.0)
+
+    def test_wire_factors(self):
+        assert _WIRE_FACTOR["all-reduce"] == 2.0
+        assert _WIRE_FACTOR["all-gather"] == 1.0

@@ -1,0 +1,306 @@
+"""Substrate tests: optimizers, checkpoint/restart, trainer, LGD pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    LSHPipelineConfig,
+    LSHSampledPipeline,
+    make_token_corpus,
+    uniform_batches,
+)
+from repro.models import ModelConfig, forward, init_params, loss
+from repro.optim import (
+    SGD,
+    AdaGrad,
+    Adafactor,
+    Adam,
+    Adam8bit,
+    apply_updates,
+    schedules,
+)
+from repro.train import Trainer, TrainerConfig, checkpoint as ckpt
+from repro.train.elastic import rescale_plan
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def _quad_problem():
+    target = jnp.array([1.0, -2.0, 3.0])
+    def loss_fn(p):
+        return jnp.sum((p - target) ** 2)
+    return target, loss_fn
+
+
+class TestOptimizers:
+    @pytest.mark.parametrize("opt,tol", [
+        (SGD(lr=0.1), 1e-2), (SGD(lr=0.1, momentum=0.9), 1e-2),
+        (SGD(lr=0.05, momentum=0.9, nesterov=True), 1e-2),
+        (AdaGrad(lr=1.0), 1e-2), (Adam(lr=0.3), 1e-2),
+        (Adam(lr=0.3, weight_decay=1e-4), 1e-2),
+        (Adam8bit(lr=0.3), 1e-2),
+        # Adafactor's relative-scale update crawls near the optimum of a
+        # tiny quadratic; looser tolerance is expected behaviour.
+        (Adafactor(lr=0.5), 1e-1),
+    ])
+    def test_converges_on_quadratic(self, opt, tol):
+        target, loss_fn = _quad_problem()
+        p = jnp.zeros(3)
+        state = opt.init(p)
+        for _ in range(300):
+            g = jax.grad(loss_fn)(p)
+            upd, state = opt.update(g, state, p)
+            p = apply_updates(p, upd)
+        assert float(loss_fn(p)) < tol, (opt, p)
+
+    def test_adam8bit_tracks_adam(self):
+        """int8 moments must approximate fp32 Adam closely on a short run."""
+        target, loss_fn = _quad_problem()
+        p1 = p2 = jnp.zeros(3)
+        a, a8 = Adam(lr=0.1), Adam8bit(lr=0.1)
+        s1, s2 = a.init(p1), a8.init(p2)
+        for _ in range(50):
+            g1 = jax.grad(loss_fn)(p1)
+            u1, s1 = a.update(g1, s1, p1)
+            p1 = apply_updates(p1, u1)
+            g2 = jax.grad(loss_fn)(p2)
+            u2, s2 = a8.update(g2, s2, p2)
+            p2 = apply_updates(p2, u2)
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                                   atol=0.05)
+
+    def test_adam8bit_memory_footprint(self):
+        """Optimiser state must be ~2 bytes/param (vs 8 for Adam fp32)."""
+        p = {"w": jnp.zeros((4096, 256))}
+        s = Adam8bit().init(p)
+        nbytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree.leaves(s) if hasattr(x, "dtype"))
+        assert nbytes < 2.5 * 4096 * 256, nbytes
+
+    def test_schedules(self):
+        s = schedules.warmup_cosine(1.0, 10, 100)
+        assert float(s(jnp.array(0))) == 0.0
+        assert float(s(jnp.array(10))) == pytest.approx(1.0)
+        assert float(s(jnp.array(100))) == pytest.approx(0.0, abs=1e-6)
+        sd = schedules.step_decay(1.0, 0.5, 10)
+        assert float(sd(jnp.array(25))) == pytest.approx(0.25)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / restart / elastic
+# ---------------------------------------------------------------------------
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(10.0), "b": [jnp.ones((3, 4)),
+                                             {"c": jnp.zeros(2)}]}
+        ckpt.save(str(tmp_path), 7, tree, extra={"step": 7})
+        assert ckpt.latest_step(str(tmp_path)) == 7
+        got, extra = ckpt.restore(str(tmp_path), 7, tree)
+        assert extra["step"] == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_atomicity_tmp_dir_ignored(self, tmp_path):
+        tree = {"a": jnp.zeros(3)}
+        ckpt.save(str(tmp_path), 1, tree)
+        # simulate a crashed writer
+        os.makedirs(tmp_path / "step_00000002.tmp")
+        assert ckpt.latest_step(str(tmp_path)) == 1
+
+    def test_keep_last(self, tmp_path):
+        tree = {"a": jnp.zeros(2)}
+        for s in range(5):
+            ckpt.save(str(tmp_path), s, tree)
+        ckpt.keep_last(str(tmp_path), 2)
+        assert ckpt.latest_step(str(tmp_path)) == 4
+        assert sorted(os.listdir(tmp_path))[-2:] == [
+            "step_00000003", "step_00000004"]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        ckpt.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+        with pytest.raises(ValueError):
+            ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(4)})
+
+    def test_rescale_plan(self):
+        plan = rescale_plan(256, 512, 256)
+        assert plan["per_device_batch_new"] == 1
+
+
+# ---------------------------------------------------------------------------
+# trainer: resume determinism + fault tolerance
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+        d_ff=64, vocab=64, chunk=16, loss_chunk=16, dtype="float32",
+        rope_theta=10000.0)
+
+
+class TestTrainer:
+    def test_loss_decreases(self, tmp_path):
+        cfg = _tiny_cfg()
+        corpus = make_token_corpus(0, 256, 16, cfg.vocab)
+        params = init_params(KEY, cfg)
+        tr = Trainer(cfg, params, Adam(lr=1e-2),
+                     uniform_batches(corpus, 8, seed=1),
+                     TrainerConfig(ckpt_dir=None, log_every=5))
+        out = tr.run(60)
+        assert np.mean(out["losses"][-10:]) < np.mean(out["losses"][:10])
+
+    def test_restart_resumes_identically(self, tmp_path):
+        """Kill after 40 steps; a fresh Trainer must resume from ckpt and
+        produce the same trajectory as an uninterrupted run."""
+        cfg = _tiny_cfg()
+        corpus = make_token_corpus(0, 256, 16, cfg.vocab)
+
+        def fresh(ckpt_dir, resume):
+            return Trainer(
+                cfg, init_params(KEY, cfg), Adam(lr=1e-2),
+                uniform_batches(corpus, 8, seed=2),
+                TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=20,
+                              log_every=100),
+                resume=resume)
+
+        # uninterrupted reference
+        ref = fresh(None, False)
+        ref_losses = ref.run(60)["losses"]
+
+        d = str(tmp_path / "ck")
+        t1 = fresh(d, False)
+        t1.run(40)
+        t1.finalize()
+        assert ckpt.latest_step(d) == 40
+        # "crash" -> new process -> resume
+        t2 = fresh(d, True)
+        assert t2.step == 40
+        got = t2.run(20)["losses"]
+        np.testing.assert_allclose(got, ref_losses[40:], rtol=1e-4,
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# LGD data pipeline (the paper's technique at LM scale)
+# ---------------------------------------------------------------------------
+
+class TestLSHPipeline:
+    def _setup(self):
+        cfg = _tiny_cfg()
+        corpus = make_token_corpus(3, 512, 16, cfg.vocab, hard_frac=0.15)
+        params = init_params(KEY, cfg)
+
+        def feature_fn(tokens):
+            h = forward(params, cfg, {"tokens": tokens})
+            return jnp.mean(h.astype(jnp.float32), axis=1)
+
+        def query_fn():
+            w = params["embed_group"]["lm_head"].astype(jnp.float32)
+            return jnp.mean(w, axis=1)
+
+        pipe = LSHSampledPipeline(
+            jax.random.PRNGKey(5), corpus.tokens, jax.jit(feature_fn),
+            query_fn, LSHPipelineConfig(k=5, l=10, minibatch=16,
+                                        refresh_every=50))
+        return cfg, corpus, params, pipe
+
+    def test_batches_well_formed(self):
+        cfg, corpus, params, pipe = self._setup()
+        b = pipe.next_batch()
+        assert b["tokens"].shape == (16, 16)
+        assert b["targets"].shape == (16, 16)
+        assert b["loss_weights"].shape == (16,)
+        assert bool(jnp.all(b["loss_weights"] > 0))
+        assert float(jnp.mean(b["loss_weights"])) == pytest.approx(1.0,
+                                                                   rel=1e-4)
+
+    def test_refresh_changes_index(self):
+        cfg, corpus, params, pipe = self._setup()
+        before = np.asarray(pipe.index.sorted_codes).copy()
+        old_fn = pipe.feature_fn
+        pipe.feature_fn = lambda t: old_fn(t) + jax.random.normal(
+            jax.random.PRNGKey(9), (1, cfg.d_model))  # simulate drift
+        pipe.refresh()
+        after = np.asarray(pipe.index.sorted_codes)
+        assert not np.array_equal(before, after)
+
+    def test_trainable_end_to_end_with_weights(self):
+        cfg, corpus, params, pipe = self._setup()
+        tr = Trainer(cfg, params, Adam(lr=1e-2), iter(pipe.next_batch, None),
+                     TrainerConfig(log_every=100, donate=False))
+        out = tr.run(30)
+        assert all(np.isfinite(out["losses"]))
+        assert np.mean(out["losses"][-5:]) < np.mean(out["losses"][:5])
+
+
+# ---------------------------------------------------------------------------
+# gradient compression + accumulation (distributed-optimisation tricks)
+# ---------------------------------------------------------------------------
+
+class TestGradCompression:
+    def test_quantize_roundtrip_error_bounded(self):
+        from repro.optim import compression as gc
+        g = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 3.0}
+        q = gc.compress(g)
+        back = gc.decompress(q, like=g)
+        err = float(jnp.max(jnp.abs(back["w"] - g["w"])))
+        # int8 block quantisation: error <= scale = max|block| / 127
+        assert err <= float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-6
+
+    def test_wire_bytes_4x_smaller_than_f32(self):
+        from repro.optim import compression as gc
+        g = {"w": jnp.zeros((4096, 256))}
+        q = gc.compress(g)
+        assert gc.wire_bytes(q) < 0.3 * g["w"].size * 4
+
+    def test_error_feedback_carries_residual(self):
+        from repro.optim import compression as gc
+        g = {"w": jnp.full((256,), 1e-4)}  # below one quantisation step
+        res = gc.init_error_feedback(g)
+        total = jnp.zeros((256,))
+        for _ in range(50):
+            q, res = gc.compress_with_feedback(g, res)
+            total = total + gc.decompress(q)["w"]
+        # with feedback, the cumulative transmitted signal tracks 50*g
+        np.testing.assert_allclose(np.asarray(total),
+                                   np.asarray(g["w"] * 50), rtol=0.05)
+
+    def test_training_with_compression_converges(self, tmp_path):
+        cfg = _tiny_cfg()
+        corpus = make_token_corpus(0, 256, 16, cfg.vocab)
+        tr = Trainer(cfg, init_params(KEY, cfg), Adam(lr=1e-2),
+                     uniform_batches(corpus, 8, seed=1),
+                     TrainerConfig(log_every=100, grad_compress=True))
+        out = tr.run(60)
+        assert np.mean(out["losses"][-10:]) < np.mean(out["losses"][:10])
+
+
+class TestGradAccumulation:
+    def test_accum_matches_full_batch(self):
+        """grad_accum=4 over batch 16 == one step over the same batch."""
+        cfg = _tiny_cfg()
+        corpus = make_token_corpus(0, 64, 16, cfg.vocab)
+        params = init_params(KEY, cfg)
+
+        def run(accum):
+            tr = Trainer(cfg, params, SGD(lr=1e-2),
+                         uniform_batches(corpus, 16, seed=3),
+                         TrainerConfig(log_every=100, grad_accum=accum,
+                                       grad_clip=None, donate=False))
+            out = tr.run(5)
+            return out["losses"], tr.params
+
+        l1, p1 = run(1)
+        l4, p4 = run(4)
+        np.testing.assert_allclose(l1, l4, rtol=2e-4, atol=2e-4)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-3, atol=2e-4)
