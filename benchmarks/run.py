@@ -156,42 +156,136 @@ def fig12_adagrad():
     return _convergence(AdaGrad(lr=5e-2), "fig12")
 
 
+def _timed(fn, iters, *, key_arg=True):
+    """us/call of a jitted thunk (optionally re-keyed per call)."""
+    jax.block_until_ready(fn(KEY) if key_arg else fn())   # warm up jit
+    t0 = time.perf_counter()
+    for i in range(iters):
+        out = fn(jax.random.fold_in(KEY, i)) if key_arg else fn()
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
 def tab_sampling_cost():
-    """Sec 2.2/2.2.1: LSH sampling must be O(1)-ish; near-neighbour is not."""
+    """Sec 2.2/2.2.1: LSH sampling must be O(1)-ish; near-neighbour is not.
+
+    Also the BENCH trajectory for the fused fast path: hashing stage
+    (XLA reference vs fused simhash kernel), probe stage (per-table
+    binary-search reference vs fused bucket-probe), and the per-query
+    amortisation of ``sample_batched``.  On CPU hosts the "fused" path
+    auto-falls back to XLA (``default_use_pallas()``), so ref-vs-fused
+    there measures dispatch parity, not kernel speedup — the JSON
+    records the backend so the trajectory is comparable across hosts.
+    """
+    from repro.core import bucket_bounds, bucket_bounds_batched, query_codes
+    from repro.kernels import default_use_pallas
+    from repro.kernels.simhash import simhash_codes
+
     ds = _dataset("yearmsd-like", n=32768)
     xt, yt, x_aug = preprocess_regression(ds.x_train, ds.y_train)
     d = xt.shape[1]
+    n = x_aug.shape[0]
     p = LSHParams(k=5, l=100, dim=d + 1, family="sparse")
     index = build_index(jax.random.PRNGKey(5), x_aug, p)
     theta = 0.05 * jax.random.normal(jax.random.PRNGKey(6), (d,))
     q = regression_query(theta)
+    B = 64
+    queries = q[None] + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(7), (B, d + 1))
 
-    sample_j = jax.jit(lambda k: S.sample(k, index, x_aug, q, p, m=1).indices)
-    sample_j(KEY)
-    t0 = time.perf_counter()
+    # --- per-step sampling cost -------------------------------------------
+    us_uniform = _timed(
+        jax.jit(lambda k: jax.random.randint(k, (1,), 0, n)), 200)
+
+    # ref and fused interleaved in one loop so machine-load drift hits
+    # both equally (CPU wall-clock noise exceeds the path difference).
+    ref_fn = lambda k: S.sample(k, index, x_aug, q, p, m=1,        # noqa: E731
+                                use_pallas=False).indices
+    fused_fn = lambda k: S.sample(k, index, x_aug, q, p,           # noqa: E731
+                                  m=1).indices
+    jax.block_until_ready(ref_fn(KEY))
+    jax.block_until_ready(fused_fn(KEY))
+    t_ref = t_fused = 0.0
     for i in range(200):
-        sample_j(jax.random.fold_in(KEY, i)).block_until_ready()
-    us_lgd = (time.perf_counter() - t0) / 200 * 1e6
+        kk = jax.random.fold_in(KEY, i)
+        t0 = time.perf_counter()
+        jax.block_until_ready(ref_fn(kk))
+        t_ref += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(fused_fn(kk))
+        t_fused += time.perf_counter() - t0
+    us_lgd_ref = t_ref / 200 * 1e6
+    us_lgd_fused = t_fused / 200 * 1e6
 
-    unif_j = jax.jit(lambda k: jax.random.randint(k, (1,), 0, xt.shape[0]))
-    unif_j(KEY)
-    t0 = time.perf_counter()
-    for i in range(200):
-        unif_j(jax.random.fold_in(KEY, i)).block_until_ready()
-    us_sgd = (time.perf_counter() - t0) / 200 * 1e6
+    us_batched = _timed(
+        lambda k: S.sample_batched(k, index, x_aug, queries, p,
+                                   m=1).indices, 50) / B
 
-    # near-neighbour baseline: full O(N d) scan for the max inner product
-    nn_j = jax.jit(lambda: jnp.argmax(x_aug @ q))
-    nn_j()
+    # --- stage timings: hashing (index build/refresh hot op) ---------------
+    us_hash_ref = _timed(
+        lambda: query_codes(index, x_aug, p), 20, key_arg=False)
+    us_hash_fused = _timed(
+        lambda: simhash_codes(x_aug, index.projections, k=p.k, l=p.l,
+                              use_pallas=default_use_pallas()),
+        20, key_arg=False)
+
+    # --- stage timings: probing (hash + bucket search, B queries) ----------
+    # queries passed as a real argument so XLA cannot constant-fold the
+    # closed-over batch into the compiled program.
+    probe_ref_j = jax.jit(lambda qs: jax.vmap(
+        lambda c: bucket_bounds(index, c))(query_codes(index, qs, p)))
+    probe_fused_j = jax.jit(
+        lambda qs: bucket_bounds_batched(index, qs, p))
+    probe_ref_j(queries)
+    probe_fused_j(queries)
     t0 = time.perf_counter()
     for _ in range(50):
-        nn_j().block_until_ready()
-    us_nn = (time.perf_counter() - t0) / 50 * 1e6
+        jax.block_until_ready(probe_ref_j(queries))
+    us_probe_ref = (time.perf_counter() - t0) / 50 * 1e6 / B
+    t0 = time.perf_counter()
+    for _ in range(50):
+        jax.block_until_ready(probe_fused_j(queries))
+    us_probe_fused = (time.perf_counter() - t0) / 50 * 1e6 / B
 
-    _row("sampling_cost_uniform", us_sgd, "baseline")
-    _row("sampling_cost_lgd", us_lgd, f"{us_lgd / us_sgd:.1f}x uniform")
-    _row("sampling_cost_full_scan", us_nn, f"{us_nn / us_lgd:.1f}x lgd")
-    return dict(us_lgd=us_lgd, us_sgd=us_sgd, us_nn=us_nn)
+    # near-neighbour baseline: full O(N d) scan for the max inner product
+    us_nn = _timed(jax.jit(lambda: jnp.argmax(x_aug @ q)), 50, key_arg=False)
+
+    _row("sampling_cost_uniform", us_uniform, "baseline")
+    _row("sampling_cost_lgd_ref", us_lgd_ref,
+         f"{us_lgd_ref / us_uniform:.1f}x uniform")
+    _row("sampling_cost_lgd_fused", us_lgd_fused,
+         f"{us_lgd_ref / max(us_lgd_fused, 1e-9):.2f}x ref")
+    _row("sampling_cost_lgd_batched", us_batched,
+         f"{us_lgd_fused / max(us_batched, 1e-9):.1f}x scalar")
+    _row("sampling_cost_hash_fused", us_hash_fused,
+         f"{us_hash_ref / max(us_hash_fused, 1e-9):.2f}x ref")
+    _row("sampling_cost_probe_fused", us_probe_fused,
+         f"{us_probe_ref / max(us_probe_fused, 1e-9):.2f}x ref")
+    _row("sampling_cost_full_scan", us_nn,
+         f"{us_nn / max(us_lgd_fused, 1e-9):.1f}x lgd")
+
+    out = {
+        "backend": jax.default_backend(),
+        "fused_is_pallas": default_use_pallas(),
+        "n_points": n, "n_tables": p.l, "k": p.k, "query_batch": B,
+        "us_per_call": {
+            "uniform": us_uniform,
+            "lsh_reference": us_lgd_ref,
+            "lsh_fused": us_lgd_fused,
+            "lsh_fused_batched_per_query": us_batched,
+            "full_scan": us_nn,
+        },
+        "hash_stage_us": {"reference": us_hash_ref, "fused": us_hash_fused,
+                          "speedup": us_hash_ref / max(us_hash_fused, 1e-9)},
+        "probe_stage_us_per_query": {
+            "reference": us_probe_ref, "fused": us_probe_fused,
+            "speedup": us_probe_ref / max(us_probe_fused, 1e-9)},
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    for fname in ("sampling_cost.json", "BENCH_sampling.json"):
+        with open(os.path.join(RESULTS, fname), "w") as f:
+            json.dump(out, f, indent=2)
+    return out
 
 
 def fig5_lm_epochwise(steps=240):

@@ -16,8 +16,21 @@ from .simhash import (  # noqa: F401
     make_projections,
     regression_query,
 )
-from .tables import LSHIndex, build_index, bucket_bounds, query_codes, refresh_index  # noqa: F401
-from .sampler import SampleResult, exact_inclusion_probability, sample, sample_drain  # noqa: F401
+from .tables import (  # noqa: F401
+    LSHIndex,
+    bucket_bounds,
+    bucket_bounds_batched,
+    build_index,
+    query_codes,
+    refresh_index,
+)
+from .sampler import (  # noqa: F401
+    SampleResult,
+    exact_inclusion_probability,
+    sample,
+    sample_batched,
+    sample_drain,
+)
 from .estimator import (  # noqa: F401
     VarianceReport,
     empirical_estimator_covariance_trace,

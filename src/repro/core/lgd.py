@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import estimator as est
-from .sampler import SampleResult, sample, sample_drain
+from .sampler import SampleResult, sample, sample_batched, sample_drain
 from .simhash import (
     LSHParams,
     augment_logistic,
@@ -97,6 +97,18 @@ class LGDProblem:
     minibatch: int = 1
     p_floor: float = 0.0
     drain: bool = False            # Appendix B.2 bucket-draining minibatch
+    query_jitter: float = 0.0      # >0: one perturbed query per repetition,
+    #                                hashed as a single fused batched probe
+    #                                (incompatible with drain: the drained
+    #                                bucket belongs to ONE query)
+    use_pallas: Optional[bool] = None   # None = auto (TPU: fused kernels)
+    interpret: bool = False        # Pallas interpreter (kernel tests only)
+
+    def __post_init__(self):
+        if self.query_jitter > 0.0 and self.drain:
+            raise ValueError(
+                "query_jitter requires per-repetition queries; drain mode "
+                "draws the whole minibatch from one query's bucket")
 
     def query_fn(self) -> Callable[[jax.Array], jax.Array]:
         return regression_query if self.kind == "regression" else logistic_query
@@ -132,7 +144,9 @@ def init(
     else:
         xt, yt, x_aug = preprocess_logistic(x, y)
     k_idx, k_theta = jax.random.split(key)
-    index = build_index(k_idx, x_aug, problem.lsh)
+    index = build_index(k_idx, x_aug, problem.lsh,
+                        use_pallas=problem.use_pallas,
+                        interpret=problem.interpret)
     theta = theta0 if theta0 is not None else jnp.zeros(xt.shape[1], jnp.float32)
     return (
         LGDState(theta, optimizer.init(theta), index, jnp.zeros((), jnp.int32)),
@@ -152,10 +166,25 @@ def lgd_step(
 ) -> Tuple[LGDState, dict]:
     """One LGD iteration: hash-lookup sample -> unbiased grad -> optimiser."""
     query = problem.query_fn()(state.theta)
-    sampler = sample_drain if problem.drain else sample
-    res: SampleResult = sampler(
-        key, state.index, x_aug, query, problem.lsh, m=problem.minibatch
-    )
+    if problem.query_jitter > 0.0:
+        # One perturbed query per repetition, all hashed by a single
+        # fused bucket-probe pass (sample_batched).  Each repetition's
+        # probability is computed under its own query, so every
+        # repetition stays an exact unbiased Algorithm-1 sample.
+        k_jit, key = jax.random.split(key)
+        queries = query[None] + problem.query_jitter * jax.random.normal(
+            k_jit, (problem.minibatch,) + query.shape, query.dtype)
+        res = sample_batched(
+            key, state.index, x_aug, queries, problem.lsh, m=1,
+            use_pallas=problem.use_pallas, interpret=problem.interpret)
+        res = SampleResult(*(a[:, 0] for a in res))      # (B, 1) -> (B,)
+    else:
+        sampler = sample_drain if problem.drain else sample
+        res: SampleResult = sampler(
+            key, state.index, x_aug, query, problem.lsh,
+            m=problem.minibatch, use_pallas=problem.use_pallas,
+            interpret=problem.interpret,
+        )
     xb, yb = x[res.indices], y[res.indices]
     grad = est.lgd_gradient(
         problem.grad_fn(), state.theta, xb, yb, res,

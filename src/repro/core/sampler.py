@@ -1,6 +1,6 @@
 """Algorithm 1 of the paper: LSH sampling with exact sampling probability.
 
-Two modes are provided:
+Three modes are provided:
 
 * ``sample`` (default, "vmap" mode) — m independent repetitions of the
   paper's single-sample Algorithm 1: each repetition draws tables with
@@ -15,10 +15,20 @@ Two modes are provided:
   and draws the whole minibatch from it (with replacement), matching the
   paper's "sample m examples from that bucket" scheme for m < |S_b|.
 
+* ``sample_batched`` — ``sample`` for B queries at once.  The B×L query
+  hashing + bucket search runs as ONE fused ``bucket_probe`` kernel
+  pass, amortising the L*K projection matmul across the query batch
+  (perturbed-query minibatches, multi-chain training, per-example
+  queries); per-query sampling stays the exact Algorithm 1.
+
 Probing uses a *static* upper bound ``max_probes`` on the number of table
 draws so the computation stays shape-static under jit; if every probed
 bucket is empty the sampler falls back to a uniform draw with p = 1/N
 (flagged in the result), which preserves unbiasedness.
+
+Within-bucket draws use ``_uniform_below`` — a dynamic-bound uniform
+integer draw via floor(U * size) — NOT ``randint(0, N) % size``, which
+over-weights small residues whenever size does not divide N.
 """
 
 from __future__ import annotations
@@ -34,7 +44,7 @@ from .simhash import (
     collision_probability,
     collision_probability_quadratic,
 )
-from .tables import LSHIndex, bucket_bounds, query_codes
+from .tables import LSHIndex, bucket_bounds_batched
 
 
 class SampleResult(NamedTuple):
@@ -49,6 +59,21 @@ def _cp_fn(params: LSHParams):
     if params.family == "quadratic":
         return collision_probability_quadratic
     return collision_probability
+
+
+def _uniform_below(key: jax.Array, bound: jax.Array, shape=()) -> jax.Array:
+    """Uniform int32 draw in [0, bound) for a *traced* (dynamic) bound.
+
+    ``randint(0, N) % bound`` is non-uniform whenever bound does not
+    divide N (residues below N mod bound get ceil(N/bound)/N instead of
+    floor(N/bound)/N — up to a bound/N relative skew).  floor(U * bound)
+    is exact up to float32 rounding (bias < 2^-24 per slot, negligible
+    against the 1/|S_b| probabilities it feeds); the min() guards the
+    measure-zero U -> 1 edge.
+    """
+    u = jax.random.uniform(key, shape)
+    slot = jnp.floor(u * bound.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.minimum(slot, bound - 1)
 
 
 def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
@@ -67,7 +92,7 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
     l = (j + 1).astype(jnp.int32)
 
     size = jnp.maximum(sizes[t], 1)
-    slot = lo[t] + jax.random.randint(k_slot, (), 0, n_points) % size
+    slot = lo[t] + _uniform_below(k_slot, size)
     idx = order[t, slot]
 
     fb_idx = jax.random.randint(k_fb, (), 0, n_points)
@@ -87,7 +112,8 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
     )
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes"))
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",
+                                   "interpret"))
 def sample(
     key: jax.Array,
     index: LSHIndex,
@@ -96,11 +122,14 @@ def sample(
     params: LSHParams,
     m: int = 1,
     max_probes: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
 ) -> SampleResult:
     """m independent LSH samples for one query (paper Algorithm 1 x m)."""
     max_probes = max_probes or max(2 * params.l, 8)
-    qcodes = query_codes(index, query, params)           # (L,)
-    lo, hi = bucket_bounds(index, qcodes)                # (L,), (L,)
+    lo, hi = bucket_bounds_batched(index, query, params,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)   # (L,), (L,)
     keys = jax.random.split(key, m)
     res = jax.vmap(
         lambda k: _sample_one(k, lo, hi, index.order, x_aug, query, params,
@@ -109,7 +138,48 @@ def sample(
     return res
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes"))
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",
+                                   "interpret"))
+def sample_batched(
+    key: jax.Array,
+    index: LSHIndex,
+    x_aug: jax.Array,
+    queries: jax.Array,          # (B, d)
+    params: LSHParams,
+    m: int = 1,
+    max_probes: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+) -> SampleResult:
+    """Algorithm 1 for B queries at once; every field comes back (B, m).
+
+    One fused bucket-probe pass hashes all B queries and finds all B*L
+    bucket slices; sampling then vmaps ``_sample_one`` over (B, m).
+    Each (query b, repetition j) pair is an independent, exact-probability
+    Algorithm-1 sample, so averaging over either axis stays unbiased.
+    """
+    if queries.ndim != 2:
+        raise ValueError(
+            f"sample_batched expects queries (B, d), got {queries.shape}; "
+            "use sample() for a single query")
+    max_probes = max_probes or max(2 * params.l, 8)
+    b = queries.shape[0]
+    lo, hi = bucket_bounds_batched(index, queries, params,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)   # (B, L)
+    keys = jax.random.split(key, (b, m))
+
+    def per_query(ks, lo_q, hi_q, q):
+        return jax.vmap(
+            lambda kk: _sample_one(kk, lo_q, hi_q, index.order, x_aug, q,
+                                   params, max_probes)
+        )(ks)
+
+    return jax.vmap(per_query)(keys, lo, hi, queries)
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",
+                                   "interpret"))
 def sample_drain(
     key: jax.Array,
     index: LSHIndex,
@@ -118,11 +188,14 @@ def sample_drain(
     params: LSHParams,
     m: int = 1,
     max_probes: Optional[int] = None,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
 ) -> SampleResult:
     """Appendix B.2: draw the whole minibatch from the first non-empty bucket."""
     max_probes = max_probes or max(2 * params.l, 8)
-    qcodes = query_codes(index, query, params)
-    lo, hi = bucket_bounds(index, qcodes)
+    lo, hi = bucket_bounds_batched(index, query, params,
+                                   use_pallas=use_pallas,
+                                   interpret=interpret)
     sizes = hi - lo
     n_tables, n_points = index.order.shape
     k_tables, k_slot, k_fb = jax.random.split(key, 3)
@@ -135,7 +208,7 @@ def sample_drain(
     l = (j + 1).astype(jnp.int32)
     size = jnp.maximum(sizes[t], 1)
 
-    slots = lo[t] + jax.random.randint(k_slot, (m,), 0, n_points) % size
+    slots = lo[t] + _uniform_below(k_slot, size, (m,))
     idx = index.order[t, slots]
     fb = jax.random.randint(k_fb, (m,), 0, n_points)
     idx = jnp.where(found, idx, fb).astype(jnp.int32)

@@ -15,6 +15,26 @@ searches (``searchsorted``) of the query code — O(log N) per probe, fully
 vectorisable over tables and over a minibatch of queries, and the *build*
 is a sort (TPU-efficient) instead of millions of scatter-appends.
 
+PERFORMANCE.  Both halves of the index hot path route through fused
+Pallas kernels on TPU (``use_pallas=None`` auto-dispatches by backend;
+CPU hosts take the numerically identical XLA reference):
+
+  * build/refresh hashing runs ``kernels.simhash`` — projection matmul,
+    sign and bit-pack fused into one VMEM-resident pass (linear
+    families; quadratic SRP hashes via per-function quadratic forms and
+    stays on the XLA path).
+  * query probing runs ``kernels.bucket_probe`` — query hashing plus the
+    per-table bucket search over ``sorted_codes``, fused and batched
+    over queries (see ``bucket_bounds_batched``).
+  * ``refresh_index`` re-sorts through the *previous* order: composing
+    the old permutation with a stable argsort of the permuted codes
+    keeps tie layouts identical across refreshes — the double-buffer
+    property downstream consumers rely on (unchanged codes keep their
+    slots).  This is a STABILITY property, not a speedup: XLA's sort is
+    data-oblivious, so nearly-sorted input costs the same as random
+    input, and the composition adds two O(L*N) gathers per refresh
+    (negligible next to the re-hash + sort it rides on).
+
 The index is a pytree and can be sharded over the ``data`` mesh axis so
 each data-parallel group maintains the index of its own shard of the
 training set (see ``repro/data/lsh_pipeline.py``).
@@ -22,10 +42,14 @@ training set (see ``repro/data/lsh_pipeline.py``).
 
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import default_use_pallas
+from repro.kernels.bucket_probe import bucket_probe, bucket_probe_codes
+from repro.kernels.simhash import simhash_codes
 
 from .simhash import LSHParams, compute_codes, make_projections
 
@@ -46,35 +70,68 @@ class LSHIndex(NamedTuple):
         return self.sorted_codes.shape[1]
 
 
-def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams) -> LSHIndex:
-    """One-time (or periodic-refresh) preprocessing: hash + sort per table."""
+def _hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
+                 use_pallas: Optional[bool], interpret: bool) -> jax.Array:
+    """(N, d) points -> (L, N) codes via the fastest path for the family."""
+    if params.family == "quadratic":
+        codes = compute_codes(x, proj, k=params.k, l=params.l,
+                              quadratic=True)
+    else:
+        if use_pallas is None:
+            use_pallas = default_use_pallas()
+        codes = simhash_codes(x, proj, k=params.k, l=params.l,
+                              use_pallas=use_pallas, interpret=interpret)
+    return codes.T
+
+
+def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams,
+                *, use_pallas: Optional[bool] = None,
+                interpret: bool = False) -> LSHIndex:
+    """One-time (or periodic-refresh) preprocessing: hash + sort per table.
+
+    ``use_pallas=None`` routes hashing through the fused SimHash kernel
+    on TPU and the identical XLA reference elsewhere.
+    """
     if params.dim != x_aug.shape[-1]:
         raise ValueError(f"params.dim={params.dim} != data dim {x_aug.shape[-1]}")
     proj = make_projections(key, params)
-    codes = compute_codes(
-        x_aug, proj, k=params.k, l=params.l, quadratic=params.family == "quadratic"
-    )  # (N, L)
-    codes = codes.T  # (L, N)
+    codes = _hash_points(x_aug, proj, params, use_pallas, interpret)  # (L, N)
     order = jnp.argsort(codes, axis=1).astype(jnp.int32)
-    sorted_codes = jnp.take_along_axis(codes, order.astype(jnp.int32), axis=1)
+    sorted_codes = jnp.take_along_axis(codes, order, axis=1)
     return LSHIndex(proj, sorted_codes, order)
 
 
 def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
-                  params: LSHParams) -> LSHIndex:
+                  params: LSHParams, *, use_pallas: Optional[bool] = None,
+                  interpret: bool = False,
+                  warm_start: bool = True) -> LSHIndex:
     """Re-hash the (possibly updated) points, keeping the same projections.
 
     Used for deep models where stored features drift slowly (Sec. 3.2 /
     Appendix E): hash tables are periodically rebuilt from fresh features.
     `key` is unused when projections are reused but kept for API symmetry.
+
+    With ``warm_start`` the previous ``order`` seeds the re-sort: codes
+    are permuted by the old order first and a *stable* argsort of that
+    permutation is composed back.  The result is bitwise-valid for any
+    drift, ties keep their previous relative layout (stable double
+    buffering of bucket slices), and points whose codes did not change
+    keep their exact slots.  Note this buys layout *stability*, not
+    sort speed — XLA sorts are data-oblivious — at the cost of two
+    extra O(L*N) gathers, dwarfed by the re-hash itself.
     """
     del key
-    codes = compute_codes(
-        x_aug, index.projections, k=params.k, l=params.l,
-        quadratic=params.family == "quadratic",
-    ).T
-    order = jnp.argsort(codes, axis=1).astype(jnp.int32)
-    sorted_codes = jnp.take_along_axis(codes, order, axis=1)
+    codes = _hash_points(x_aug, index.projections, params, use_pallas,
+                         interpret)  # (L, N)
+    if warm_start:
+        prev = index.order
+        permuted = jnp.take_along_axis(codes, prev, axis=1)
+        delta = jnp.argsort(permuted, axis=1, stable=True).astype(jnp.int32)
+        order = jnp.take_along_axis(prev, delta, axis=1)
+        sorted_codes = jnp.take_along_axis(permuted, delta, axis=1)
+    else:
+        order = jnp.argsort(codes, axis=1).astype(jnp.int32)
+        sorted_codes = jnp.take_along_axis(codes, order, axis=1)
     return LSHIndex(index.projections, sorted_codes, order)
 
 
@@ -89,7 +146,8 @@ def query_codes(index: LSHIndex, q: jax.Array, params: LSHParams) -> jax.Array:
 def bucket_bounds(index: LSHIndex, qcodes: jax.Array):
     """For each table, the [lo, hi) slice of the query's bucket.
 
-    qcodes: (L,) uint32 -> lo, hi: (L,) int32.  Vectorised binary search.
+    qcodes: (L,) uint32 -> lo, hi: (L,) int32.  Vectorised binary search
+    (the XLA reference path; the hot path is ``bucket_bounds_batched``).
     """
     def per_table(sc, c):
         lo = jnp.searchsorted(sc, c, side="left")
@@ -97,3 +155,45 @@ def bucket_bounds(index: LSHIndex, qcodes: jax.Array):
         return lo.astype(jnp.int32), hi.astype(jnp.int32)
 
     return jax.vmap(per_table)(index.sorted_codes, qcodes)
+
+
+# The counting kernel streams all L*N sorted codes per probe call, so its
+# per-query HBM traffic is L*N*4/B bytes.  Auto-dispatch only routes a
+# probe through it when N/B is below this bound (~52 MB of codes for
+# L=100 at the default) — above it the O(log N) searchsorted reference
+# wins and keeps the paper's O(1)-per-step property for huge N.
+COUNTING_PROBE_MAX_POINTS_PER_QUERY = 1 << 17
+
+
+def bucket_bounds_batched(index: LSHIndex, queries: jax.Array,
+                          params: LSHParams, *,
+                          use_pallas: Optional[bool] = None,
+                          interpret: bool = False):
+    """Fused hash+probe for a query batch (B, d) (or a single (d,)).
+
+    Returns (lo, hi) int32 of shape (B, L) — or (L,) for a 1-D query.
+    On TPU this is one ``kernels.bucket_probe`` pass: the L*K projection
+    matmul, sign/bit-pack and the per-table bucket search run in a
+    single VMEM-resident kernel, amortised over the query batch.
+    Elsewhere (or with ``use_pallas=False``) it lowers to the identical
+    XLA reference: ``compute_codes`` + vmapped binary searches.
+
+    Auto-dispatch (``use_pallas=None``) is N/B-aware: the counting
+    kernel reads every sorted code, so for very large indexes probed by
+    few queries the reference binary search is the faster path (see
+    ``COUNTING_PROBE_MAX_POINTS_PER_QUERY``).  Pass ``use_pallas=True``
+    to force the kernel regardless.
+    """
+    if use_pallas is None:
+        b = queries.shape[0] if queries.ndim == 2 else 1
+        use_pallas = (default_use_pallas() and
+                      index.n_points <= b * COUNTING_PROBE_MAX_POINTS_PER_QUERY)
+    if params.family == "quadratic":
+        # quadratic SRP hashes via per-function quadratic forms — not a
+        # single matmul — so hash on the XLA path, probe in the kernel.
+        qcodes = query_codes(index, queries, params)
+        return bucket_probe_codes(qcodes, index.sorted_codes,
+                                  use_pallas=use_pallas, interpret=interpret)
+    return bucket_probe(queries, index.projections, index.sorted_codes,
+                        k=params.k, l=params.l, use_pallas=use_pallas,
+                        interpret=interpret)

@@ -32,7 +32,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import LSHParams, build_index, refresh_index, sample
+from repro.core import (
+    LSHParams,
+    build_index,
+    refresh_index,
+    sample,
+    sample_batched,
+)
 from repro.core.tables import LSHIndex
 
 
@@ -43,6 +49,8 @@ class LSHPipelineConfig:
     refresh_every: int = 200     # steps between feature re-hash
     minibatch: int = 32
     p_floor: float = 1e-8
+    use_pallas: Optional[bool] = None   # None = auto (fused kernels on TPU)
+    interpret: bool = False
 
 
 class LSHSampledPipeline:
@@ -70,7 +78,9 @@ class LSHSampledPipeline:
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
                              family="dense")
         self._key, sub = jax.random.split(self._key)
-        self.index: LSHIndex = build_index(sub, self.features, self.lsh)
+        self.index: LSHIndex = build_index(
+            sub, self.features, self.lsh, use_pallas=config.use_pallas,
+            interpret=config.interpret)
 
     # -- features -----------------------------------------------------------
 
@@ -85,29 +95,38 @@ class LSHSampledPipeline:
             jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-30)
 
     def refresh(self):
-        """Re-embed + re-hash the local shard (amortised, off critical path)."""
+        """Re-embed + re-hash the local shard (amortised, off critical path).
+
+        ``refresh_index`` re-sorts with the previous ``order`` as a warm
+        start (features drift slowly between refreshes), so the rebuilt
+        index double-buffers cleanly: unchanged codes keep their slots.
+        """
         self.features = self._compute_features()
         self._key, sub = jax.random.split(self._key)
-        self.index = refresh_index(sub, self.index, self.features, self.lsh)
+        self.index = refresh_index(
+            sub, self.index, self.features, self.lsh,
+            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
 
     # -- batches ------------------------------------------------------------
 
-    def next_batch(self) -> Dict[str, jax.Array]:
+    def _tick(self):
+        """Shared refresh gate + per-step key for both batch entry points."""
         if self._step > 0 and self._step % self.cfg.refresh_every == 0:
             self.refresh()
         self._step += 1
         self._key, sub = jax.random.split(self._key)
-        q = self.query_fn()
-        q = q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
-        res = sample(sub, self.index, self.features, q, self.lsh,
-                     m=self.cfg.minibatch)
-        idx = np.asarray(res.indices)
+        return sub
+
+    def _assemble_batch(self, indices, probs) -> Dict[str, jax.Array]:
+        """Gather tokens + importance weights 1/(p*N) for one sample draw.
+
+        Weights are normalised to mean 1 over the batch (keeps the LR
+        scale of uniform sampling; relative weighting is what de-biases
+        the adaptive sampling).
+        """
+        idx = np.asarray(indices)
         chunk = self.tokens[idx]
-        # importance weights 1/(p*N), normalised to mean 1 over the batch
-        # (keeps the LR scale of uniform sampling; relative weighting is
-        # what de-biases the adaptive sampling).
-        w = 1.0 / (np.maximum(np.asarray(res.probs), self.cfg.p_floor)
-                   * self.n)
+        w = 1.0 / (np.maximum(np.asarray(probs), self.cfg.p_floor) * self.n)
         w = w / max(w.mean(), 1e-30)
         return {
             "tokens": jnp.asarray(chunk[:, :-1]),
@@ -115,6 +134,33 @@ class LSHSampledPipeline:
             "loss_weights": jnp.asarray(w, jnp.float32),
             "example_ids": jnp.asarray(idx, jnp.int32),
         }
+
+    def next_batch(self) -> Dict[str, jax.Array]:
+        sub = self._tick()
+        q = self.query_fn()
+        q = q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
+        res = sample(sub, self.index, self.features, q, self.lsh,
+                     m=self.cfg.minibatch, use_pallas=self.cfg.use_pallas,
+                     interpret=self.cfg.interpret)
+        return self._assemble_batch(res.indices, res.probs)
+
+    def next_batch_multi(self, queries: jax.Array) -> list:
+        """One batch per query row (multi-chain / perturbed-query training).
+
+        ``queries``: (C, dim).  All C queries are hashed and probed by a
+        SINGLE fused bucket-probe pass (``sample_batched``), amortising
+        the L*K projection matmul across chains; each chain still gets
+        exact per-sample Algorithm-1 probabilities under its own query.
+        """
+        sub = self._tick()
+        qn = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-30)
+        res = sample_batched(
+            sub, self.index, self.features, qn, self.lsh,
+            m=self.cfg.minibatch, use_pallas=self.cfg.use_pallas,
+            interpret=self.cfg.interpret)             # fields (C, m)
+        return [self._assemble_batch(res.indices[c], res.probs[c])
+                for c in range(queries.shape[0])]
 
 
 def mean_pool_feature_fn(params, cfg, forward):

@@ -1,0 +1,8 @@
+from .sharding import (  # noqa: F401
+    batch_sharding,
+    current_mesh,
+    logical,
+    param_spec,
+    tree_param_shardings,
+    use_mesh,
+)

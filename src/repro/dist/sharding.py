@@ -1,0 +1,173 @@
+"""Sharding rules: logical activation axes + per-parameter placement.
+
+One place owns the mesh mapping so models never name physical axes:
+
+* ``logical(x, *axes)`` annotates activations with *logical* axis names
+  ("batch", "seq", "heads", "ff", "vocab", "experts") that resolve to
+  physical mesh axes under ``use_mesh``; outside a mesh context it is a
+  no-op, so every model runs unsharded on a laptop unchanged.
+* ``param_spec(path, shape, mesh)`` assigns a PartitionSpec to one
+  parameter from its tree path and shape: tensor-parallel over heads /
+  experts / vocab on the ``model`` axis, FSDP over the feature dim on the
+  ``data`` axis (``("pod", "data")`` on multi-pod meshes), norms and any
+  indivisible dim replicated.  Parameters stacked over layers
+  (``blocks/...``) keep their leading layer dim unsharded — it is the
+  scan axis.
+* ``tree_param_shardings`` maps ``param_spec`` over a whole params (or
+  eval_shape) pytree; ``batch_sharding`` shards batch dim 0 over the
+  data axes.
+
+Only ``mesh.shape`` / ``mesh.axis_names`` are touched, so tests can pass
+stub meshes without building devices.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# mesh context
+# ---------------------------------------------------------------------------
+
+_MESH: list = []   # stack of active meshes
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Activate ``mesh`` for ``logical`` constraints within the block."""
+    _MESH.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH.pop()
+
+
+def current_mesh():
+    return _MESH[-1] if _MESH else None
+
+
+# ---------------------------------------------------------------------------
+# axis resolution
+# ---------------------------------------------------------------------------
+
+def _data_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def _axis_size(mesh, axes) -> int:
+    n = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        n *= mesh.shape[a]
+    return n
+
+
+# logical activation axis -> physical mesh axis ("batch" -> the data axes,
+# model-parallel dims -> "model"; "seq" is the sequence-parallel residual
+# sharding, also over "model").
+_LOGICAL = {
+    "batch": _data_axes,
+    "seq": lambda mesh: "model",
+    "heads": lambda mesh: "model",
+    "ff": lambda mesh: "model",
+    "vocab": lambda mesh: "model",
+    "experts": lambda mesh: "model",
+}
+
+
+def logical(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op meshless)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    assert len(axes) == x.ndim, (axes, x.shape)
+    spec = []
+    for dim, name in zip(x.shape, axes):
+        phys = _LOGICAL[name](mesh) if name is not None else None
+        if phys is not None and dim % _axis_size(mesh, phys) != 0:
+            phys = None
+        spec.append(phys)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# parameter placement
+# ---------------------------------------------------------------------------
+
+def _divisible(mesh, axes, dim: int):
+    if axes is None or dim % _axis_size(mesh, axes) != 0:
+        return None
+    return axes
+
+
+def param_spec(path: str, shape: tuple, mesh) -> P:
+    """PartitionSpec for the parameter at ``path`` with ``shape``.
+
+    Rules (each sharded dim must divide its axes, else replicated):
+      embed (V, d)            -> (model, data)     vocab TP + embed FSDP
+      lm_head (d, V)          -> (data, model)
+      experts_* (E, d, ff)    -> (model, data, -)  expert TP + d FSDP
+      wq/wk/wv (d, H, Dh)     -> (data, model, -)  head TP + d FSDP
+      wo (H, Dh, d)           -> (model, -, data)
+      generic 2-D (din, dout) -> (data, model)     FSDP + output TP
+      norms / 1-D             -> replicated
+    ``blocks/...`` parameters are stacked over layers: the leading layer
+    dim is the scan axis and stays unsharded.
+    """
+    parts = path.split("/")
+    leaf = parts[-1]
+    data = _data_axes(mesh)
+
+    stacked = parts[0] == "blocks"
+    core = shape[1:] if stacked else shape
+
+    if "norm" in parts or leaf in ("scale", "bias") or len(core) < 2:
+        spec = [None] * len(core)
+    elif leaf == "embed":
+        spec = ["model", data]
+    elif leaf == "lm_head":
+        spec = [data, "model"]
+    elif "experts" in leaf:
+        spec = ["model", data] + [None] * (len(core) - 2)
+    elif leaf in ("wq", "wk", "wv") and len(core) == 3:
+        spec = [data, "model", None]
+    elif leaf == "wo" and len(core) == 3:
+        spec = ["model", None, data]
+    elif len(core) == 2:
+        spec = [data, "model"]
+    else:
+        spec = [None] * len(core)
+
+    spec = [_divisible(mesh, s, d) for s, d in zip(spec, core)]
+    if stacked:
+        spec = [None] + spec
+    return P(*spec)
+
+
+def _path_str(key_path) -> str:
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_param_shardings(params: Any, mesh):
+    """NamedSharding for every leaf of a params (or eval_shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, x: NamedSharding(mesh, param_spec(_path_str(kp), x.shape,
+                                                     mesh)),
+        params,
+    )
+
+
+def batch_sharding(mesh):
+    """Batch tensors: dim 0 over the data axes, rest replicated."""
+    return NamedSharding(mesh, P(_data_axes(mesh)))

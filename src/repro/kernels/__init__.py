@@ -1,3 +1,21 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+import jax
+
+
+def round_up(a: int, b: int) -> int:
+    """Round ``a`` up to the next multiple of ``b`` (block padding)."""
+    return (a + b - 1) // b * b
+
+
+def default_use_pallas() -> bool:
+    """Platform dispatch for kernel fast paths.
+
+    True when the active backend compiles Mosaic kernels (TPU); CPU
+    hosts take the XLA reference, which beats the Pallas interpreter by
+    orders of magnitude and keeps numerics identical to the kernel
+    (see the parity tests in tests/test_kernels.py).
+    """
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,6 @@
+from .ops import bucket_probe, bucket_probe_codes  # noqa: F401
+from .ref import bucket_probe_codes_ref, bucket_probe_ref  # noqa: F401
+from .kernel import (  # noqa: F401
+    bucket_probe_codes_pallas,
+    bucket_probe_pallas,
+)

@@ -1,0 +1,196 @@
+"""Fused LSH bucket-probe Pallas TPU kernel: hash + searchsorted + sizes.
+
+The per-step hot op of LGD sampling: given B query vectors, find for
+every hash table t the contiguous slice [lo, hi) of the sorted-code
+index that holds the query's bucket,
+
+    lo[b, t] = #{ n : sorted_codes[t, n] <  code(q_b)[t] }
+    hi[b, t] = #{ n : sorted_codes[t, n] <= code(q_b)[t] }
+
+The XLA reference does this as (matmul, sign, pack) followed by an
+L-way vmap of two ``searchsorted`` binary searches — O(log N) serial
+gathers per table, a layout TPUs hate.  The kernel instead fuses
+
+  1. the query projection matmul (B, d) @ (d, BL*K) on the MXU,
+  2. the sign + bit-pack (a second tiny MXU dot with the power-of-two
+     vector), and
+  3. a *counting* probe: rank-by-comparison against the (BL, BN) tile of
+     sorted codes, accumulated over N blocks
+
+into one VMEM-resident pass.  Counting replaces the binary search with a
+dense VPU reduction — O(N) work but contiguous reads and zero gathers.
+The trade is explicit: the kernel streams all L*N sorted codes per call
+(at HBM bandwidth, amortised over the B query batch), so it wins when
+N/B is moderate and loses to O(log N) searchsorted when a huge index is
+probed by few queries — ``core.tables.bucket_bounds_batched`` auto-
+dispatches on exactly that ratio
+(``COUNTING_PROBE_MAX_POINTS_PER_QUERY``).
+
+Unsigned order trick: codes are uint32 but Mosaic comparisons are
+cleanest in int32, so both sides are *biased* — ``c ^ 0x8000_0000``
+reinterpreted as int32 preserves unsigned order exactly (the wrapper
+biases ``sorted_codes`` once; the kernel biases the query codes it
+computes).
+
+Block layout:
+  grid  = (B / BB, L / BL, N / BN)   — N innermost, sequential
+  q     : (BB, d)        — query tile, reused across L and N steps
+  w     : (d, BL*K)      — projections for BL tables
+  sc    : (BL, BN)       — biased int32 sorted-code tile
+  lo/hi : (BB, BL)       — int32 output tile, accumulated over N steps
+  qc    : (BB, BL)       — scratch: biased query codes, computed at n==0
+
+PERFORMANCE.  VMEM per step ~ BB*d + d*BL*K + BL*BN + 3*BB*BL words
+(< 2 MiB at the defaults); the comparison broadcast (BB, BL, BN) is the
+VPU working set — keep BB*BL*BN ≲ 1M lanes.  The projection matmul runs
+once per (B, L) tile and is fully hidden behind the N-streaming steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BB = 128   # query rows per tile
+DEFAULT_BL = 8     # tables per tile
+DEFAULT_BN = 512   # sorted-code columns per step
+
+def _pack_codes_biased(proj: jax.Array, k: int, bl: int) -> jax.Array:
+    """(BB, BL*K) projections -> (BB, BL) biased-int32 packed codes."""
+    bb = proj.shape[0]
+    if k <= 24:
+        # MXU pack: dot with the power-of-two vector (exact in f32 to 2^24).
+        bits = (proj >= 0.0).astype(jnp.float32).reshape(bb, bl, k)
+        weights = 2.0 ** jnp.arange(k, dtype=jnp.float32)
+        packed = jax.lax.dot_general(
+            bits, weights[:, None],
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[..., 0].astype(jnp.int32)
+    else:
+        bits = (proj >= 0.0).reshape(bb, bl, k).astype(jnp.uint32)
+        weights = jnp.uint32(1) << jnp.arange(k, dtype=jnp.uint32)
+        packed = jax.lax.bitcast_convert_type(
+            jnp.sum(bits * weights, axis=-1, dtype=jnp.uint32), jnp.int32)
+    return packed ^ jnp.int32(-(2 ** 31))   # xor toggles the sign bit
+
+
+def _count_tile(qc, sc, n_off, n_actual, bl, bn):
+    """Rank counts of qc (BB, BL) against the sc (BL, BN) tile."""
+    col = jax.lax.broadcasted_iota(jnp.int32, (bl, bn), 1) + n_off
+    valid = col < n_actual                               # mask N padding
+    less = (sc[None] < qc[:, :, None]) & valid[None]     # (BB, BL, BN)
+    leq = (sc[None] <= qc[:, :, None]) & valid[None]
+    return (jnp.sum(less, axis=2, dtype=jnp.int32),
+            jnp.sum(leq, axis=2, dtype=jnp.int32))
+
+
+def _fused_kernel(q_ref, w_ref, sc_ref, lo_ref, hi_ref, qc_ref,
+                  *, k: int, bl: int, bn: int, n_actual: int):
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        proj = jnp.dot(q_ref[...], w_ref[...],
+                       preferred_element_type=jnp.float32)
+        qc_ref[...] = _pack_codes_biased(proj, k, bl)
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    less, leq = _count_tile(qc_ref[...], sc_ref[...], n_idx * bn, n_actual,
+                            bl, bn)
+    lo_ref[...] += less
+    hi_ref[...] += leq
+
+
+def _codes_kernel(qc_in_ref, sc_ref, lo_ref, hi_ref,
+                  *, bl: int, bn: int, n_actual: int):
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    less, leq = _count_tile(qc_in_ref[...], sc_ref[...], n_idx * bn,
+                            n_actual, bl, bn)
+    lo_ref[...] += less
+    hi_ref[...] += leq
+
+
+def _out_specs(block_b: int, block_l: int):
+    spec = pl.BlockSpec((block_b, block_l), lambda i, j, n: (i, j))
+    return [spec, spec]
+
+
+def bucket_probe_pallas(
+    q: jax.Array,             # (B, d) float32 queries, B % block_b == 0
+    w: jax.Array,             # (d, L*K) float32 projections
+    sc_biased: jax.Array,     # (L, N) int32 biased sorted codes, N padded
+    *,
+    k: int,
+    l: int,
+    n_actual: int,
+    block_b: int = DEFAULT_BB,
+    block_l: int = DEFAULT_BL,
+    block_n: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Fused hash+probe: returns (lo, hi), each (B, L) int32."""
+    b, d = q.shape
+    ll, n = sc_biased.shape
+    assert ll == l and w.shape == (d, l * k), (q.shape, w.shape, sc_biased.shape)
+    assert b % block_b == 0 and l % block_l == 0 and n % block_n == 0
+    grid = (b // block_b, l // block_l, n // block_n)
+    out_shape = [jax.ShapeDtypeStruct((b, l), jnp.int32)] * 2
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, k=k, bl=block_l, bn=block_n,
+                          n_actual=n_actual),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, j, n: (i, 0)),
+            pl.BlockSpec((d, block_l * k), lambda i, j, n: (0, j)),
+            pl.BlockSpec((block_l, block_n), lambda i, j, n: (j, n)),
+        ],
+        out_specs=_out_specs(block_b, block_l),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_b, block_l), jnp.int32)],
+        interpret=interpret,
+    )(q.astype(jnp.float32), w.astype(jnp.float32), sc_biased)
+
+
+def bucket_probe_codes_pallas(
+    qc_biased: jax.Array,     # (B, L) int32 biased query codes
+    sc_biased: jax.Array,     # (L, N) int32 biased sorted codes
+    *,
+    n_actual: int,
+    block_b: int = DEFAULT_BB,
+    block_l: int = DEFAULT_BL,
+    block_n: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Probe-only variant for families hashed outside the kernel
+    (quadratic SRP hashes via a per-function quadratic form, not a single
+    matmul).  Returns (lo, hi), each (B, L) int32."""
+    b, l = qc_biased.shape
+    ll, n = sc_biased.shape
+    assert ll == l, (qc_biased.shape, sc_biased.shape)
+    assert b % block_b == 0 and l % block_l == 0 and n % block_n == 0
+    grid = (b // block_b, l // block_l, n // block_n)
+    out_shape = [jax.ShapeDtypeStruct((b, l), jnp.int32)] * 2
+    return pl.pallas_call(
+        functools.partial(_codes_kernel, bl=block_l, bn=block_n,
+                          n_actual=n_actual),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_l), lambda i, j, n: (i, j)),
+            pl.BlockSpec((block_l, block_n), lambda i, j, n: (j, n)),
+        ],
+        out_specs=_out_specs(block_b, block_l),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(qc_biased, sc_biased)

@@ -1,0 +1,114 @@
+"""Jit'd public wrappers for the bucket-probe kernel (padding + dispatch).
+
+Contract: ``use_pallas=False`` (the CPU-host default chosen by callers)
+runs the pure-XLA oracle; ``use_pallas=True, interpret=True`` runs the
+kernel under the Pallas interpreter and must match the oracle exactly —
+that is the parity surface the tests pin down.  Padding keeps arbitrary
+(B, L, N) shapes legal: B and L are padded to block multiples (padded
+rows/tables are computed then sliced off), N is padded to a block
+multiple and masked *inside* the kernel so padded columns never count.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .. import round_up as _round_up
+from .kernel import (
+    DEFAULT_BB,
+    DEFAULT_BL,
+    DEFAULT_BN,
+    bucket_probe_codes_pallas,
+    bucket_probe_pallas,
+)
+from .ref import bucket_probe_codes_ref, bucket_probe_ref
+
+
+def _bias(codes_u32: jax.Array) -> jax.Array:
+    """uint32 -> order-preserving int32 (toggle the sign bit)."""
+    return jax.lax.bitcast_convert_type(
+        codes_u32 ^ jnp.uint32(0x80000000), jnp.int32)
+
+
+def _blocks(b: int, l: int, n: int):
+    bb = min(DEFAULT_BB, _round_up(b, 8))
+    bl = min(DEFAULT_BL, l)
+    bn = min(DEFAULT_BN, _round_up(n, 128))
+    return bb, bl, bn
+
+
+def _pad_sc(sorted_codes: jax.Array, l_pad: int, n_pad: int) -> jax.Array:
+    l, n = sorted_codes.shape
+    sc = jnp.pad(sorted_codes, ((0, l_pad - l), (0, n_pad - n)))
+    return _bias(sc)
+
+
+@partial(jax.jit, static_argnames=("k", "l", "use_pallas", "interpret"))
+def bucket_probe(
+    q: jax.Array,             # (B, d) or (d,) query vectors
+    w: jax.Array,             # (d, L*K) projections
+    sorted_codes: jax.Array,  # (L, N) uint32, ascending per row
+    *,
+    k: int,
+    l: int,
+    use_pallas: bool = True,
+    interpret: bool = False,
+):
+    """Fused hash+probe -> (lo, hi) int32, (B, L) (or (L,) for 1-D q)."""
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if w.shape != (q.shape[1], l * k):
+        raise ValueError(f"projections {w.shape} != (d={q.shape[1]}, L*K={l * k})")
+    if sorted_codes.shape[0] != l:
+        raise ValueError(f"sorted_codes {sorted_codes.shape} has {sorted_codes.shape[0]} tables, expected L={l}")
+    if not use_pallas:
+        lo, hi = bucket_probe_ref(q, w, sorted_codes, k=k, l=l)
+    else:
+        b, d = q.shape
+        _, n = sorted_codes.shape
+        bb, bl, bn = _blocks(b, l, n)
+        b_pad, l_pad, n_pad = (_round_up(b, bb), _round_up(l, bl),
+                               _round_up(n, bn))
+        lo, hi = bucket_probe_pallas(
+            jnp.pad(q, ((0, b_pad - b), (0, 0))),
+            jnp.pad(w, ((0, 0), (0, (l_pad - l) * k))),
+            _pad_sc(sorted_codes, l_pad, n_pad),
+            k=k, l=l_pad, n_actual=n, block_b=bb, block_l=bl, block_n=bn,
+            interpret=interpret,
+        )
+        lo, hi = lo[:b, :l], hi[:b, :l]
+    return (lo[0], hi[0]) if squeeze else (lo, hi)
+
+
+@partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def bucket_probe_codes(
+    qcodes: jax.Array,        # (B, L) or (L,) uint32 query codes
+    sorted_codes: jax.Array,  # (L, N) uint32, ascending per row
+    *,
+    use_pallas: bool = True,
+    interpret: bool = False,
+):
+    """Probe-only entry point (pre-hashed queries, e.g. quadratic SRP)."""
+    squeeze = qcodes.ndim == 1
+    if squeeze:
+        qcodes = qcodes[None]
+    if not use_pallas:
+        lo, hi = bucket_probe_codes_ref(qcodes, sorted_codes)
+    else:
+        b, l = qcodes.shape
+        _, n = sorted_codes.shape
+        bb, bl, bn = _blocks(b, l, n)
+        b_pad, l_pad, n_pad = (_round_up(b, bb), _round_up(l, bl),
+                               _round_up(n, bn))
+        lo, hi = bucket_probe_codes_pallas(
+            jnp.pad(_bias(qcodes), ((0, b_pad - b), (0, l_pad - l))),
+            _pad_sc(sorted_codes, l_pad, n_pad),
+            n_actual=n, block_b=bb, block_l=bl, block_n=bn,
+            interpret=interpret,
+        )
+        lo, hi = lo[:b, :l], hi[:b, :l]
+    return (lo[0], hi[0]) if squeeze else (lo, hi)

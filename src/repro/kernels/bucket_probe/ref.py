@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the fused bucket-probe kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_probe_codes_ref(qcodes: jax.Array, sorted_codes: jax.Array):
+    """Batched two-binary-search probe.
+
+    qcodes: (B, L) uint32; sorted_codes: (L, N) uint32 ascending per row.
+    Returns (lo, hi) int32 (B, L): per table, the [lo, hi) slice of the
+    query's bucket.
+    """
+    def per_table(sc, c):                       # sc: (N,), c: (B,)
+        lo = jnp.searchsorted(sc, c, side="left")
+        hi = jnp.searchsorted(sc, c, side="right")
+        return lo.astype(jnp.int32), hi.astype(jnp.int32)
+
+    return jax.vmap(per_table, in_axes=(0, 1), out_axes=1)(
+        sorted_codes, qcodes)
+
+
+def bucket_probe_ref(q: jax.Array, w: jax.Array, sorted_codes: jax.Array,
+                     *, k: int, l: int):
+    """Hash B queries then probe: the oracle for the fully fused kernel."""
+    from ..simhash.ref import simhash_codes_ref
+
+    qcodes = simhash_codes_ref(q, w, k=k, l=l)       # (B, L)
+    return bucket_probe_codes_ref(qcodes, sorted_codes)

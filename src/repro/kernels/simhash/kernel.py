@@ -21,6 +21,20 @@ Block layout:
   codes : (BN, BL)      — uint32 output tile
 VMEM per step ~ BN*d + d*BL*K + BN*BL*K floats; defaults keep this
 < 4 MiB for d up to 4096 with BN=256, BL=8, K<=32.
+
+PERFORMANCE.  This is the hot op of ``build_index``/``refresh_index``
+(`repro.core.tables`): one fused pass replaces three XLA ops (matmul,
+compare, reduce-pack) and the (N, L*K) f32 projection intermediate —
+the dominant HBM round-trip at refresh time — never leaves VMEM.
+
+FALLBACK CONTRACT.  ``ops.simhash_codes(use_pallas=False)`` lowers to
+``ref.simhash_codes_ref`` and is bit-identical to the kernel (both are
+f32 matmul + sign + exact pack); ``use_pallas=True, interpret=True``
+runs this kernel under the Pallas interpreter and is the parity surface
+CI pins on CPU.  Callers auto-dispatch via
+``repro.kernels.default_use_pallas()`` — TPU gets the kernel, every
+other backend gets the identical XLA reference, so results never depend
+on the platform.
 """
 
 from __future__ import annotations

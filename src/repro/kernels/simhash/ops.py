@@ -7,12 +7,9 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from .. import round_up as _round_up
 from .kernel import DEFAULT_BL, DEFAULT_BN, simhash_codes_pallas
 from .ref import simhash_codes_ref
-
-
-def _round_up(a: int, b: int) -> int:
-    return (a + b - 1) // b * b
 
 
 @partial(jax.jit, static_argnames=("k", "l", "use_pallas", "interpret"))

@@ -1,0 +1,63 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The container has no ``hypothesis`` wheel and the repo cannot add
+dependencies, so property tests fall back to this shim: each strategy is
+a deterministic example generator and ``@given`` expands the cross of a
+fixed number of pseudo-random draws (seeded, so failures reproduce).
+Only the API surface the test suite uses is implemented: ``given``,
+``settings``, ``strategies.integers``, ``strategies.sampled_from``.
+"""
+
+from __future__ import annotations
+
+import random
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the hypothesis module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: rng.choice(opts))
+
+
+st = strategies
+
+
+def settings(deadline=None, max_examples: int = 10, **_kw):
+    def wrap(fn):
+        fn._max_examples = max_examples
+        return fn
+    return wrap
+
+
+def given(**strats):
+    def wrap(fn):
+        # No functools.wraps: pytest follows __wrapped__ when inspecting
+        # signatures and would treat the drawn parameters as fixtures.
+        def run(*args, **kwargs):
+            # @settings sits ABOVE @given, so it stamps the attribute on
+            # `run` (read at call time); the inner-fn getattr covers the
+            # reversed decorator order.
+            n = getattr(run, "_max_examples",
+                        getattr(fn, "_max_examples", 10))
+            rng = random.Random(0xC0FFEE)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        run.__name__ = fn.__name__
+        run.__doc__ = fn.__doc__
+        run._max_examples = getattr(fn, "_max_examples", 10)
+        return run
+    return wrap

@@ -1,0 +1,274 @@
+"""Parity + integration tests for the fused LSH sampling fast path.
+
+Pins the interpret-mode Pallas kernels to the XLA oracles exactly (the
+contract that lets TPU runs trust CPU CI), across block boundaries and
+non-multiple-of-block shapes through the padding wrappers, and checks
+that the fast path is plumbed end-to-end: index build/refresh, scalar
+and batched sampling.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LSHParams,
+    build_index,
+    bucket_bounds,
+    bucket_bounds_batched,
+    query_codes,
+    refresh_index,
+    sample,
+    sample_batched,
+    sample_drain,
+)
+from repro.kernels.bucket_probe import (
+    bucket_probe,
+    bucket_probe_codes,
+    bucket_probe_codes_ref,
+    bucket_probe_ref,
+)
+from repro.kernels.simhash import simhash_codes_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _unit_rows(key, n, d):
+    x = jax.random.normal(key, (n, d))
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _sorted_codes(key, n, d, k, l):
+    kw, kx = jax.random.split(key)
+    w = jax.random.normal(kw, (d, l * k))
+    x = jax.random.normal(kx, (n, d))
+    codes = simhash_codes_ref(x, w, k=k, l=l).T        # (L, N)
+    return w, jnp.sort(codes, axis=1)
+
+
+class TestBucketProbeKernel:
+    @pytest.mark.parametrize("b,d,k,l,n", [
+        (8, 64, 5, 8, 512),       # exact block fit
+        (3, 91, 5, 100, 300),     # paper-ish dims, padding on every axis
+        (1, 33, 7, 10, 1000),     # single query, ragged N
+        (130, 16, 4, 3, 129),     # B and N just past a block boundary
+        (16, 64, 32, 4, 256),     # max K (uint32 top bit exercised)
+        (5, 24, 1, 1, 8),         # degenerate
+    ])
+    def test_fused_matches_ref(self, b, d, k, l, n):
+        kq, kr = jax.random.split(jax.random.fold_in(KEY, b * d + n))
+        q = jax.random.normal(kq, (b, d))
+        w, sc = _sorted_codes(kr, n, d, k, l)
+        lo_r, hi_r = bucket_probe_ref(q, w, sc, k=k, l=l)
+        lo_p, hi_p = bucket_probe(q, w, sc, k=k, l=l, use_pallas=True,
+                                  interpret=True)
+        np.testing.assert_array_equal(np.asarray(lo_p), np.asarray(lo_r))
+        np.testing.assert_array_equal(np.asarray(hi_p), np.asarray(hi_r))
+
+    @pytest.mark.parametrize("b,k,l,n", [
+        (4, 5, 8, 512),
+        (3, 32, 100, 300),        # k=32: unsigned-order bias trick
+        (1, 7, 10, 257),
+    ])
+    def test_codes_variant_matches_ref(self, b, k, l, n):
+        kq, kr = jax.random.split(jax.random.fold_in(KEY, b + k * n))
+        d = 32
+        q = jax.random.normal(kq, (b, d))
+        w, sc = _sorted_codes(kr, n, d, k, l)
+        qc = simhash_codes_ref(q, w, k=k, l=l)
+        lo_r, hi_r = bucket_probe_codes_ref(qc, sc)
+        lo_p, hi_p = bucket_probe_codes(qc, sc, use_pallas=True,
+                                        interpret=True)
+        np.testing.assert_array_equal(np.asarray(lo_p), np.asarray(lo_r))
+        np.testing.assert_array_equal(np.asarray(hi_p), np.asarray(hi_r))
+
+    def test_single_query_squeeze(self):
+        kq, kr = jax.random.split(KEY)
+        w, sc = _sorted_codes(kr, 200, 16, 5, 9)
+        q = jax.random.normal(kq, (16,))
+        lo, hi = bucket_probe(q, w, sc, k=5, l=9, use_pallas=True,
+                              interpret=True)
+        assert lo.shape == hi.shape == (9,)
+        lo_r, hi_r = bucket_probe(q, w, sc, k=5, l=9, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(lo), np.asarray(lo_r))
+        np.testing.assert_array_equal(np.asarray(hi), np.asarray(hi_r))
+
+
+class TestIndexFastPath:
+    @pytest.mark.parametrize("family", ["dense", "sparse"])
+    def test_build_index_pallas_parity(self, family):
+        p = LSHParams(k=5, l=10, dim=24, family=family)
+        x = _unit_rows(jax.random.PRNGKey(1), 300, 24)   # ragged N
+        ref = build_index(jax.random.PRNGKey(2), x, p, use_pallas=False)
+        fused = build_index(jax.random.PRNGKey(2), x, p, use_pallas=True,
+                            interpret=True)
+        np.testing.assert_array_equal(np.asarray(ref.sorted_codes),
+                                      np.asarray(fused.sorted_codes))
+        np.testing.assert_array_equal(np.asarray(ref.order),
+                                      np.asarray(fused.order))
+
+    def test_refresh_warm_start_equals_cold_rebuild(self):
+        """Warm-started refresh must index the same buckets as a cold
+        rebuild: identical sorted_codes, and per (table, code) identical
+        bucket *membership* (order within ties may legally differ)."""
+        p = LSHParams(k=4, l=6, dim=12, family="dense")
+        x0 = _unit_rows(jax.random.PRNGKey(3), 200, 12)
+        index = build_index(jax.random.PRNGKey(4), x0, p)
+        # drift the points slightly, as between periodic refreshes
+        x1 = x0 + 0.05 * jax.random.normal(jax.random.PRNGKey(5), x0.shape)
+        x1 = x1 / jnp.linalg.norm(x1, axis=-1, keepdims=True)
+        warm = refresh_index(None, index, x1, p, warm_start=True)
+        cold = refresh_index(None, index, x1, p, warm_start=False)
+        np.testing.assert_array_equal(np.asarray(warm.sorted_codes),
+                                      np.asarray(cold.sorted_codes))
+        for t in range(p.l):
+            ow, oc = np.asarray(warm.order[t]), np.asarray(cold.order[t])
+            assert sorted(ow.tolist()) == list(range(200))
+            sc = np.asarray(warm.sorted_codes[t])
+            for code in np.unique(sc):
+                mask = sc == code
+                assert set(ow[mask]) == set(oc[mask])
+
+    def test_refresh_warm_start_is_stable_on_no_drift(self):
+        """No drift => warm-started refresh reproduces the index exactly
+        (the double-buffer property: unchanged codes keep their slots)."""
+        p = LSHParams(k=5, l=8, dim=10, family="sparse")
+        x = _unit_rows(jax.random.PRNGKey(6), 128, 10)
+        index = build_index(jax.random.PRNGKey(7), x, p)
+        again = refresh_index(None, index, x, p, warm_start=True)
+        np.testing.assert_array_equal(np.asarray(index.order),
+                                      np.asarray(again.order))
+        np.testing.assert_array_equal(np.asarray(index.sorted_codes),
+                                      np.asarray(again.sorted_codes))
+
+
+class TestSamplerFastPath:
+    def _setup(self, n=512, d=12, k=4, l=16, family="dense"):
+        p = LSHParams(k=k, l=l, dim=d, family=family)
+        x = _unit_rows(jax.random.PRNGKey(8), n, d)
+        index = build_index(jax.random.PRNGKey(9), x, p)
+        return index, x, p
+
+    @pytest.mark.parametrize("family", ["dense", "quadratic"])
+    def test_bucket_bounds_batched_matches_scalar(self, family):
+        index, x, p = self._setup(family=family)
+        queries = _unit_rows(jax.random.PRNGKey(10), 5, 12)
+        lo_b, hi_b = bucket_bounds_batched(index, queries, p,
+                                           use_pallas=True, interpret=True)
+        assert lo_b.shape == (5, p.l)
+        for i in range(5):
+            qc = query_codes(index, queries[i], p)
+            lo, hi = bucket_bounds(index, qc)
+            np.testing.assert_array_equal(np.asarray(lo_b[i]), np.asarray(lo))
+            np.testing.assert_array_equal(np.asarray(hi_b[i]), np.asarray(hi))
+
+    def test_sample_pallas_path_matches_reference_path(self):
+        """Identical codes => identical bounds => identical samples."""
+        index, x, p = self._setup()
+        q = _unit_rows(jax.random.PRNGKey(11), 1, 12)[0]
+        key = jax.random.PRNGKey(12)
+        ref = sample(key, index, x, q, p, m=32, use_pallas=False)
+        fused = sample(key, index, x, q, p, m=32, use_pallas=True,
+                       interpret=True)
+        for a, b in zip(ref, fused):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        ref_d = sample_drain(key, index, x, q, p, m=8, use_pallas=False)
+        fused_d = sample_drain(key, index, x, q, p, m=8, use_pallas=True,
+                               interpret=True)
+        for a, b in zip(ref_d, fused_d):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_sample_batched_shapes_and_validity(self):
+        index, x, p = self._setup()
+        queries = _unit_rows(jax.random.PRNGKey(13), 4, 12)
+        res = sample_batched(jax.random.PRNGKey(14), index, x, queries, p,
+                             m=16)
+        assert res.indices.shape == (4, 16)
+        assert bool(jnp.all((res.indices >= 0) & (res.indices < 512)))
+        assert bool(jnp.all(res.probs > 0)) and bool(jnp.all(res.probs <= 1))
+        assert bool(jnp.all(jnp.isfinite(res.probs)))
+
+    def test_lgd_step_query_jitter_branch(self):
+        """query_jitter>0 routes lgd_step through sample_batched (one
+        perturbed query per repetition) and must still train."""
+        from repro.core import LGDProblem, full_loss, init, lgd_step
+        from repro.optim import SGD
+
+        kx, ky, kt = jax.random.split(jax.random.PRNGKey(17), 3)
+        x = jax.random.normal(kx, (400, 10))
+        y = x @ jax.random.normal(kt, (10,)) + 0.1 * jax.random.normal(
+            ky, (400,))
+        prob = LGDProblem(
+            kind="regression",
+            lsh=LSHParams(k=5, l=20, dim=11, family="sparse"),
+            minibatch=8, query_jitter=0.05)
+        opt = SGD(lr=5e-3)
+        state, xt, yt, xa = init(jax.random.PRNGKey(18), prob, x, y, opt)
+        loss0 = float(full_loss(state.theta, xt, yt, prob))
+        s = state
+        for i in range(100):
+            s, m = lgd_step(jax.random.fold_in(KEY, i), s, xt, yt, xa,
+                            prob, opt)
+        assert float(full_loss(s.theta, xt, yt, prob)) < loss0
+        assert np.isfinite(float(m["grad_norm"]))
+
+    def test_query_jitter_rejects_drain(self):
+        from repro.core import LGDProblem
+
+        with pytest.raises(ValueError, match="drain"):
+            LGDProblem(kind="regression",
+                       lsh=LSHParams(k=5, l=8, dim=4, family="dense"),
+                       drain=True, query_jitter=0.1)
+
+    def test_pipeline_next_batch_multi(self):
+        """Multi-chain pipeline: one fused probe, one batch per chain,
+        consistent with the single-chain assembly."""
+        from repro.data.lsh_pipeline import (
+            LSHPipelineConfig,
+            LSHSampledPipeline,
+        )
+
+        n, seq, dim = 64, 9, 16
+        tokens = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(19), (n, seq), 0, 50),
+            np.int32)
+        embed = jax.random.normal(jax.random.PRNGKey(20), (50, dim))
+
+        def feature_fn(chunk):            # deterministic toy embedding
+            return jnp.mean(embed[chunk], axis=1)
+
+        pipe = LSHSampledPipeline(
+            jax.random.PRNGKey(21), tokens, jax.jit(feature_fn),
+            lambda: jnp.ones((dim,)),
+            LSHPipelineConfig(k=4, l=6, minibatch=5, refresh_every=2))
+        single = pipe.next_batch()
+        assert single["tokens"].shape == (5, seq - 1)
+        queries = jax.random.normal(jax.random.PRNGKey(22), (3, dim))
+        batches = pipe.next_batch_multi(queries)   # also crosses a refresh
+        assert len(batches) == 3
+        for b in batches:
+            assert b["tokens"].shape == (5, seq - 1)
+            assert b["targets"].shape == (5, seq - 1)
+            assert bool(jnp.all(b["loss_weights"] > 0))
+            assert float(b["loss_weights"].mean()) == pytest.approx(1.0,
+                                                                    rel=1e-4)
+            assert bool(jnp.all((b["example_ids"] >= 0)
+                                & (b["example_ids"] < n)))
+
+    def test_sample_batched_samples_collide_with_own_query(self):
+        """Every non-fallback sample must share a bucket code with *its*
+        query — the per-row pairing the fused probe must preserve."""
+        from repro.core import compute_codes
+
+        index, x, p = self._setup(l=32)
+        queries = _unit_rows(jax.random.PRNGKey(15), 3, 12)
+        res = sample_batched(jax.random.PRNGKey(16), index, x, queries, p,
+                             m=32)
+        codes = np.asarray(compute_codes(x, index.projections, k=p.k, l=p.l))
+        for b in range(3):
+            qc = np.asarray(query_codes(index, queries[b], p))
+            for i, fb in zip(np.asarray(res.indices[b]),
+                             np.asarray(res.fallback[b])):
+                if not fb:
+                    assert any(codes[i, t] == qc[t] for t in range(p.l))

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis wheel; use the shim
+    from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     LGDProblem,
@@ -219,6 +222,38 @@ class TestSampler:
         assert res.indices.shape == (16,)
         # all from the same bucket => same probability basis & same l
         assert len(set(np.asarray(res.n_probes).tolist())) == 1
+
+    @pytest.mark.parametrize("bound", [3, 7, 13])
+    def test_uniform_below_is_uniform(self, bound):
+        """Chi-square regression for the modulo-bias fix: draws in
+        [0, bound) must be uniform.  The old ``randint(0, N) % bound``
+        skewed small residues by up to bound/N relative mass."""
+        from repro.core.sampler import _uniform_below
+
+        draws = 30_000
+        slots = np.asarray(_uniform_below(
+            jax.random.PRNGKey(100 + bound), jnp.int32(bound), (draws,)))
+        assert slots.min() >= 0 and slots.max() < bound
+        counts = np.bincount(slots, minlength=bound)
+        expected = draws / bound
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # 99.9th percentile of chi2 with (bound-1) dof is < 35 for bound<=13
+        assert chi2 < 35.0, (bound, counts.tolist(), chi2)
+
+    def test_within_bucket_sampling_uniform(self):
+        """End-to-end chi-square: identical points share every bucket, so
+        drain-mode sampling must hit each of them uniformly."""
+        n, d = 8, 12
+        p = LSHParams(k=3, l=4, dim=d, family="dense")
+        x = jnp.tile(_unit_rows(jax.random.PRNGKey(22), 1, d), (n, 1))
+        index = build_index(jax.random.PRNGKey(23), x, p)
+        res = sample_drain(jax.random.PRNGKey(24), index, x, x[0], p, m=8192)
+        assert not bool(jnp.any(res.fallback))
+        counts = np.bincount(np.asarray(res.indices), minlength=n)
+        expected = 8192 / n
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # 99.9th percentile of chi2 with 7 dof ~= 24.3
+        assert chi2 < 24.3, (counts.tolist(), chi2)
 
     @settings(deadline=None, max_examples=10)
     @given(
