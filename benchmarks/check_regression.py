@@ -1,0 +1,151 @@
+"""CI benchmark-regression gate for the fused LSH sampling fast path.
+
+Compares a freshly-measured ``sampling_cost.json`` against the committed
+baseline and FAILS (exit 1) on a regression.  CI machines differ wildly
+in absolute speed, so the gate never compares raw microseconds:
+
+  fused_vs_ref      us(lsh_fused) / us(lsh_reference), same run — the
+                    auto-dispatched fast path must stay within
+                    ``--tolerance`` (default 25%) of the committed
+                    baseline ratio.  On CPU both paths lower to the same
+                    XLA program, so this ratio is structurally ~1 on any
+                    host; the limit is max(baseline, 1)*(1+tol) so a
+                    favourably-skewed (<1) committed baseline cannot
+                    turn ordinary CI noise into failures.
+  batched_vs_fused  us(batched, per query) / us(lsh_fused), same run —
+                    the B-query amortisation of ``sample_batched``.  Its
+                    structural value depends on host core count, so it
+                    is gated by an ABSOLUTE cap (default 0.5: batching
+                    must amortise at least 2x per query; ~0.05 here)
+                    rather than a baseline-relative band.  Losing the
+                    fused batch probe sends it to ~1 — a caught
+                    regression on any machine.
+
+``--selftest`` proves the gate can actually fail before it is trusted:
+it injects a 2x fused slowdown and a 20x batched slowdown and asserts
+both comparisons trip.
+
+Usage (mirrors .github/workflows/ci.yml):
+    python benchmarks/run.py tab_sampling_cost --quick
+    python benchmarks/check_regression.py \
+        --baseline /tmp/baseline.json \
+        --fresh benchmarks/results/sampling_cost.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT = os.path.join(HERE, "results", "sampling_cost.json")
+
+
+def ratios(d: dict) -> dict:
+    us = d["us_per_call"]
+    return {
+        "fused_vs_ref": us["lsh_fused"] / us["lsh_reference"],
+        "batched_vs_fused":
+            us["lsh_fused_batched_per_query"] / us["lsh_fused"],
+    }
+
+
+def compare(baseline: dict, fresh: dict, tolerance: float,
+            batched_cap: float) -> list:
+    """Return the list of regression messages (empty = pass)."""
+    failures = []
+    # like-for-like guard: quick vs full runs measure different problem
+    # sizes; comparing them gates on the size mismatch, not a regression
+    for field in ("quick", "n_points", "query_batch"):
+        if baseline.get(field) != fresh.get(field):
+            failures.append(
+                f"baseline/fresh not comparable: {field} "
+                f"{baseline.get(field)} != {fresh.get(field)} — "
+                "regenerate the baseline with run.py tab_sampling_cost "
+                "--quick")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+    base_r, fresh_r = ratios(baseline), ratios(fresh)
+
+    got, base = fresh_r["fused_vs_ref"], base_r["fused_vs_ref"]
+    # the ratio is structurally ~1 on CPU (both paths lower to the same
+    # XLA program); a sub-1 committed baseline is favourable measurement
+    # skew, so gate against max(baseline, 1) — CI must not fail merely
+    # for not reproducing the dev machine's skew.
+    limit = max(base, 1.0) * (1.0 + tolerance)
+    ok = got <= limit
+    print(f"fused_vs_ref: baseline {base:.3f}  fresh {got:.3f}  "
+          f"limit {limit:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"fused sampling regressed: ratio {got:.3f} > {limit:.3f} "
+            f"(baseline {base:.3f} +{tolerance:.0%})")
+
+    got = fresh_r["batched_vs_fused"]
+    ok = got <= batched_cap
+    print(f"batched_vs_fused: baseline {base_r['batched_vs_fused']:.3f}  "
+          f"fresh {got:.3f}  cap {batched_cap:.3f}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"batched sampling amortisation lost: per-query ratio "
+            f"{got:.3f} > cap {batched_cap:.3f}")
+    return failures
+
+
+def selftest(baseline: dict, tolerance: float, batched_cap: float) -> int:
+    """The gate must trip on injected fused and batched slowdowns."""
+    fused_slow = json.loads(json.dumps(baseline))
+    fused_slow["us_per_call"]["lsh_fused"] *= 2.0
+    print("-- selftest 1: injected 2x lsh_fused slowdown --")
+    f1 = compare(baseline, fused_slow, tolerance, batched_cap)
+
+    batched_slow = json.loads(json.dumps(baseline))
+    batched_slow["us_per_call"]["lsh_fused_batched_per_query"] *= 20.0
+    print("-- selftest 2: injected 20x batched slowdown --")
+    f2 = compare(baseline, batched_slow, tolerance, batched_cap)
+
+    if not f1 or not f2:
+        print("selftest FAILED: gate did not trip "
+              f"(fused findings: {len(f1)}, batched findings: {len(f2)})")
+        return 1
+    print("selftest passed: gate tripped on both injected slowdowns")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=DEFAULT,
+                    help="committed baseline JSON")
+    ap.add_argument("--fresh", default=DEFAULT,
+                    help="freshly measured JSON")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fused_vs_ref drift over baseline")
+    ap.add_argument("--batched-cap", type=float, default=0.5,
+                    help="absolute cap on batched per-query / fused ratio")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the gate trips on injected slowdowns")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if args.selftest:
+        return selftest(baseline, args.tolerance, args.batched_cap)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    failures = compare(baseline, fresh, args.tolerance, args.batched_cap)
+    for msg in failures:
+        print(f"::error::{msg}")
+    if failures:
+        return 1
+    print("benchmark gate: no regression")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

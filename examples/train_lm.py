@@ -6,8 +6,28 @@ Presets:
   100m             ~100M-param config (d=768, 12L) for a real host/TPU;
                    identical code path, bigger numbers.
 
+Sampler (``--sampler {uniform,lgd}``):
+  uniform          i.i.d. uniform batches (the SGD baseline).
+  lgd              the paper's LSH-sampled adaptive batches: example
+                   features (pooled last-layer reps) are hashed into
+                   per-shard LSH indexes; each step queries with the
+                   output-layer direction and draws Algorithm-1 samples,
+                   de-biased by 1/(p_i N) importance weights inside the
+                   jitted loss.  The periodic index refresh runs on a
+                   host thread, double-buffered, so re-hashing overlaps
+                   device compute.
+
+Sharded-index contract (``--shards S``): the corpus is split into S
+contiguous equal shards (one per data-parallel group at scale — S
+defaults to 1 on a single host); each shard owns its own LSH index and
+contributes minibatch/S samples per global batch, weighted so the batch
+mean equals the average of per-shard unbiased estimates (see
+``repro/data/lsh_pipeline.py``).  On an elastic restart with a different
+S, ``Trainer.restore`` rebuilds all per-shard indexes deterministically
+from the restored params (``repro/train/elastic.py``).
+
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
-          [--steps 200] [--uniform] [--ckpt /tmp/lm_ckpt]
+          [--steps 200] [--sampler lgd] [--shards 2] [--ckpt /tmp/lm_ckpt]
 """
 
 import argparse
@@ -16,10 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.data import (
-    LSHPipelineConfig, LSHSampledPipeline, make_token_corpus,
-    uniform_batches,
+    LSHPipelineConfig, ShardedLSHPipeline, lm_head_query_fn,
+    make_token_corpus, mean_pool_feature_fn, uniform_batches,
 )
-from repro.models import ModelConfig, forward, init_params, loss
+from repro.models import ModelConfig, init_params, loss
 from repro.optim import Adam, schedules
 from repro.train import Trainer, TrainerConfig
 
@@ -36,10 +56,17 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="demo", choices=list(PRESETS))
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--sampler", default="lgd", choices=["uniform", "lgd"],
+                    help="uniform batches vs LSH-sampled LGD batches")
     ap.add_argument("--uniform", action="store_true",
-                    help="disable LGD sampling (baseline)")
+                    help="deprecated alias for --sampler uniform")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard-by-example LSH index count (one per DP "
+                         "group at scale); must divide the batch size")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
+    if args.uniform:
+        args.sampler = "uniform"
     p = PRESETS[args.preset]
 
     cfg = ModelConfig(
@@ -47,37 +74,26 @@ def main():
         d_model=p["d_model"], n_heads=p["n_heads"],
         n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"], vocab=p["vocab"],
         chunk=64, loss_chunk=128, dtype="float32", rope_theta=10000.0,
-        lgd_enabled=not args.uniform)
+        lgd_enabled=args.sampler == "lgd")
     key = jax.random.PRNGKey(0)
     params = init_params(key, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"model: {n_params/1e6:.1f}M params | LGD sampling: "
-          f"{cfg.lgd_enabled}")
+    print(f"model: {n_params/1e6:.1f}M params | sampler: {args.sampler}"
+          + (f" | shards: {args.shards}" if cfg.lgd_enabled else ""))
 
     corpus = make_token_corpus(1, p["corpus"], p["seq"], cfg.vocab,
                                hard_frac=0.1)
-    holder = {}
 
+    sampler = batches = None
     if cfg.lgd_enabled:
-        def feature_fn(tokens):
-            prm = holder.get("trainer").params if "trainer" in holder \
-                else params
-            h = forward(prm, cfg, {"tokens": tokens})
-            return jnp.mean(h.astype(jnp.float32), axis=1)
-
-        def query_fn():
-            prm = holder.get("trainer").params if "trainer" in holder \
-                else params
-            w = prm["embed_group"]["lm_head"].astype(jnp.float32)
-            return jnp.mean(w, axis=1)
-
-        pipe = LSHSampledPipeline(
-            jax.random.PRNGKey(2), corpus.tokens, jax.jit(feature_fn),
-            query_fn,
+        sampler = ShardedLSHPipeline(
+            jax.random.PRNGKey(2), corpus.tokens,
+            mean_pool_feature_fn(cfg), lm_head_query_fn(),
             LSHPipelineConfig(k=cfg.lgd_k, l=cfg.lgd_l,
                               minibatch=p["batch"],
-                              refresh_every=cfg.lgd_refresh_every))
-        batches = iter(pipe.next_batch, None)
+                              refresh_every=cfg.lgd_refresh_every,
+                              refresh_async=True),
+            n_shards=args.shards, params=params)
     else:
         batches = uniform_batches(corpus, p["batch"], seed=3)
 
@@ -86,15 +102,16 @@ def main():
         Adam(lr=schedules.warmup_cosine(3e-3, 20, args.steps)),
         batches,
         TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=100, log_every=20,
-                      donate=not cfg.lgd_enabled))
-    holder["trainer"] = tr
+                      donate=not cfg.lgd_enabled),
+        sampler=sampler)
 
     eval_batch = {"tokens": jnp.asarray(corpus.tokens[:128, :-1]),
                   "targets": jnp.asarray(corpus.tokens[:128, 1:])}
     eval_fn = jax.jit(lambda prm: loss(prm, cfg, eval_batch))
     for chunk in range(0, args.steps, 50):
         tr.run(min(50, args.steps - chunk))
-        print(f"step {tr.step:5d}  train {tr.metrics_history[-1]['loss']:.4f}"
+        last = tr.metrics_history[-1] if tr.metrics_history else {}
+        print(f"step {tr.step:5d}  train {last.get('loss', float('nan')):.4f}"
               f"  eval {float(eval_fn(tr.params)):.4f}"
               f"  stragglers {tr.straggler_steps}")
     tr.finalize()

@@ -9,6 +9,7 @@ from .synthetic import (  # noqa: F401
 from .lsh_pipeline import (  # noqa: F401
     LSHPipelineConfig,
     LSHSampledPipeline,
+    ShardedLSHPipeline,
     lm_head_query_fn,
     mean_pool_feature_fn,
 )

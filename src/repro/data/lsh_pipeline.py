@@ -4,7 +4,8 @@ The paper's BERT recipe, integrated as a first-class pipeline feature:
 
   * each training example owns a FEATURE VECTOR (for BERT: the pooled
     last-layer representation; here: any per-example embedding the model
-    exposes).  Features are hashed into the LSH index.
+    exposes — see ``repro.models.lm.pooled_features``).  Features are
+    hashed into the LSH index.
   * the QUERY at step t is derived from the output-layer parameters
     (paper: the classification-layer weights) — as the model changes, the
     query changes, but the tables are only refreshed every
@@ -14,19 +15,47 @@ The paper's BERT recipe, integrated as a first-class pipeline feature:
     per-sample probabilities become importance weights 1/(p_i N) on the
     loss so gradients stay unbiased.
 
-SCALE-OUT DESIGN (1000+ nodes): the index is *sharded by example* — each
-data-parallel group builds and queries the index of its own corpus shard
-only.  Because the global corpus is randomly partitioned, per-shard
-LGD sampling + per-shard importance weighting is an unbiased estimator
-of the global gradient (each shard estimates its shard-mean; the
-all-reduce averages shard-means).  No cross-host hash-table traffic,
-no O(N) anything per step — the paper's O(1) property survives scale-out.
+OVERLAPPED REFRESH (double buffering): with ``refresh_async=True`` the
+periodic re-embed + re-hash runs on a host thread into a second buffer,
+launched ``refresh_lead`` steps before the swap boundary; the trainer's
+device steps keep running while the host hashes.  The swap happens at a
+fixed step boundary (the thread is joined there), so the batch sequence
+is bit-deterministic regardless of thread timing — the only semantic
+difference from the synchronous path is that features are embedded from
+the params as of ``refresh_lead`` steps before the boundary, which is
+exactly the paper's amortisation argument (features drift slowly).
+
+SHARD-BY-EXAMPLE SCALE-OUT (1000+ nodes): ``ShardedLSHPipeline`` gives
+each data-parallel group its own index over a contiguous corpus shard
+(bounds from ``repro.dist.sharding.example_shard_bounds``).  Per-shard
+Algorithm-1 sampling with LOCAL importance weights 1/(p_i n_s) is an
+unbiased estimator of the shard mean; re-scaling the local weight by
+n_s * S / N (i.e. w_i = S / (p_i N)) and concatenating equal-size
+per-shard sub-batches makes the plain batch mean equal the average of
+shard-mean estimates — exactly what the DP all-reduce of per-device
+means computes.  No cross-host hash-table traffic, no O(N) anything per
+step: the paper's O(1) property survives scale-out.  Elastic restarts
+that change the mesh (and hence shard count) rebuild every per-shard
+index bit-deterministically from the restored step — see
+``repro.train.elastic.rebuild_sharded_pipeline``.
+
+KEY DISCIPLINE: all randomness derives from the constructor key by
+``fold_in`` with distinct stream salts (build / per-step sampling /
+per-refresh), never by chained ``split``.  The determinism contract is
+that any two pipelines restored at the same step draw bit-identical
+batch sequences (what elastic restarts rely on).  A restore does NOT in
+general replay the uninterrupted run: ``restore_at`` re-embeds features
+from the restored-step params and rebuilds the index canonically (fresh
+argsort, not the history-dependent warm-start chain), so batches match
+the uninterrupted run only when the embedded features are unchanged —
+e.g. params-independent feature hooks with no intervening refresh.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import threading
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +69,14 @@ from repro.core import (
     sample_batched,
 )
 from repro.core.tables import LSHIndex
+from repro.dist.sharding import example_shard_bounds
+
+# fold_in stream salts: one disjoint stream per random consumer, so a
+# pipeline's draw at (stream, counter) is independent of how many draws
+# other streams made — the restore-at-step property.
+_SALT_BUILD = 0x0B11D
+_SALT_STEP = 0x057E9
+_SALT_REFRESH = 0x0F5E5
 
 
 @dataclasses.dataclass
@@ -51,94 +88,249 @@ class LSHPipelineConfig:
     p_floor: float = 1e-8
     use_pallas: Optional[bool] = None   # None = auto (fused kernels on TPU)
     interpret: bool = False
+    # host-side double-buffered refresh: launch the re-embed + re-hash
+    # ``refresh_lead`` steps before the swap boundary on a thread so
+    # hashing overlaps device compute.  Deterministic: the swap still
+    # happens exactly at the boundary (thread joined there).
+    refresh_async: bool = False
+    refresh_lead: int = 1
+    # normalise importance weights to mean 1 over the emitted batch
+    # (keeps the LR scale of uniform sampling).  Sharded sub-pipelines
+    # run with raw weights and normalise once globally.
+    normalize_weights: bool = True
 
 
 class LSHSampledPipeline:
-    """Adaptive example sampler over a (local shard of a) token corpus."""
+    """Adaptive example sampler over a (local shard of a) token corpus.
+
+    ``feature_fn`` / ``query_fn`` come in two flavours:
+      * legacy closures: ``feature_fn(tokens)``, ``query_fn()`` — params
+        are baked into the closure.
+      * params-aware (pass ``params=`` to the constructor):
+        ``feature_fn(params, tokens)``, ``query_fn(params)`` — the
+        trainer pushes fresh params via ``set_params`` after every step,
+        so queries always reflect the live model and refreshes re-embed
+        with the params current at refresh-launch time.
+    """
 
     def __init__(
         self,
         key: jax.Array,
         tokens: np.ndarray,                  # (N, S+1) local shard
-        feature_fn: Callable[[jax.Array], jax.Array],
-        query_fn: Callable[[], jax.Array],
+        feature_fn: Callable,
+        query_fn: Callable,
         config: LSHPipelineConfig,
         feature_batch: int = 512,
+        params: Any = None,
+        example_offset: int = 0,
+        emit_numpy: bool = False,
     ):
         self.cfg = config
+        # sharded sub-pipelines emit host numpy so the composer
+        # concatenates and uploads ONCE instead of S round-trips
+        self.emit_numpy = emit_numpy
         self.tokens = tokens
         self.n = tokens.shape[0]
         self.feature_fn = feature_fn
         self.query_fn = query_fn
         self.feature_batch = feature_batch
-        self._key = key
+        self.params = params
+        self._params_aware = params is not None
+        self.example_offset = example_offset
+        self._base_key = key
+        self._step_stream = jax.random.fold_in(key, _SALT_STEP)
+        self._refresh_stream = jax.random.fold_in(key, _SALT_REFRESH)
+        self._build_key = jax.random.fold_in(key, _SALT_BUILD)
         self._step = 0
+        self._refresh_count = 0
+        self._refresh_thread: Optional[threading.Thread] = None
+        self._refresh_box: Optional[dict] = None
         self.features = self._compute_features()
         dim = self.features.shape[-1]
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
                              family="dense")
-        self._key, sub = jax.random.split(self._key)
         self.index: LSHIndex = build_index(
-            sub, self.features, self.lsh, use_pallas=config.use_pallas,
-            interpret=config.interpret)
+            self._build_key, self.features, self.lsh,
+            use_pallas=config.use_pallas, interpret=config.interpret)
+
+    # -- params hook ---------------------------------------------------------
+
+    def set_params(self, params: Any):
+        """Point the feature/query hooks at fresh model params (cheap).
+
+        No-op signal for legacy-closure pipelines (constructed without
+        ``params=``): their hooks close over params already, so the
+        stored value is never passed to them.
+        """
+        self.params = params
 
     # -- features -----------------------------------------------------------
 
-    def _compute_features(self) -> jax.Array:
+    def _embed(self, chunk: jax.Array, params: Any) -> jax.Array:
+        if self._params_aware:
+            return self.feature_fn(params, chunk)
+        return self.feature_fn(chunk)
+
+    def _compute_features(self, params: Any = None) -> jax.Array:
         """Embed every local example; normalised for SimHash."""
+        params = self.params if params is None else params
         outs = []
         for i in range(0, self.n, self.feature_batch):
             chunk = jnp.asarray(self.tokens[i:i + self.feature_batch, :-1])
-            outs.append(self.feature_fn(chunk))
+            outs.append(self._embed(chunk, params))
         f = jnp.concatenate(outs, axis=0)
         return f / jnp.maximum(
             jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-30)
 
     def refresh(self):
-        """Re-embed + re-hash the local shard (amortised, off critical path).
+        """Re-embed + re-hash the local shard synchronously.
 
         ``refresh_index`` re-sorts with the previous ``order`` as a warm
         start (features drift slowly between refreshes), so the rebuilt
         index double-buffers cleanly: unchanged codes keep their slots.
         """
+        kr = jax.random.fold_in(self._refresh_stream, self._refresh_count)
         self.features = self._compute_features()
-        self._key, sub = jax.random.split(self._key)
         self.index = refresh_index(
-            sub, self.index, self.features, self.lsh,
+            kr, self.index, self.features, self.lsh,
             use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+        self._refresh_count += 1
+
+    def _launch_refresh(self):
+        """Start the double-buffer refresh on a host thread (overlap)."""
+        if self._refresh_thread is not None:
+            return
+        kr = jax.random.fold_in(self._refresh_stream, self._refresh_count)
+        params = self.params          # snapshot: params as of launch step
+        old_index = self.index
+        box: dict = {}
+
+        def work():
+            try:
+                feats = self._compute_features(params)
+                box["features"] = feats
+                box["index"] = refresh_index(
+                    kr, old_index, feats, self.lsh,
+                    use_pallas=self.cfg.use_pallas,
+                    interpret=self.cfg.interpret)
+            except BaseException as e:   # surfaced at the swap boundary
+                box["error"] = e
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        self._refresh_thread, self._refresh_box = t, box
+
+    def _swap_refresh(self):
+        """Join the in-flight refresh and swap buffers (fixed boundary)."""
+        if self._refresh_thread is None:   # e.g. fresh restore: sync path
+            self.refresh()
+            return
+        self._refresh_thread.join()
+        box = self._refresh_box
+        self._refresh_thread, self._refresh_box = None, None
+        if "error" in box:                 # re-raise the worker's failure
+            raise box["error"]
+        self.features = box["features"]
+        self.index = box["index"]
+        self._refresh_count += 1
+
+    def finalize(self):
+        """Join any in-flight refresh thread (call before teardown);
+        re-raises a worker failure that had not yet hit a swap boundary
+        so it cannot vanish at shutdown."""
+        if self._refresh_thread is not None:
+            self._refresh_thread.join()
+            box = self._refresh_box
+            self._refresh_thread, self._refresh_box = None, None
+            if box and "error" in box:
+                raise box["error"]
+
+    def _maybe_refresh(self):
+        re = self.cfg.refresh_every
+        if re <= 0:
+            return
+        s = self._step
+        if self.cfg.refresh_async and self.cfg.refresh_lead > 0:
+            lead = min(self.cfg.refresh_lead, re - 1)
+            if s + lead >= re and (s + lead) % re == 0:
+                self._launch_refresh()
+            if s >= re and s % re == 0:
+                self._swap_refresh()
+        elif s >= re and s % re == 0:
+            self.refresh()
 
     # -- batches ------------------------------------------------------------
 
     def _tick(self):
         """Shared refresh gate + per-step key for both batch entry points."""
-        if self._step > 0 and self._step % self.cfg.refresh_every == 0:
-            self.refresh()
+        self._maybe_refresh()
+        sub = jax.random.fold_in(self._step_stream, self._step)
         self._step += 1
-        self._key, sub = jax.random.split(self._key)
         return sub
+
+    def restore_at(self, step: int, rebuild: bool = True):
+        """Elastic/deterministic resume: rewind counters to ``step`` and
+        canonically rebuild the index from current params.
+
+        The rebuilt index reuses the original projections (same build
+        key) on freshly-embedded features with a fresh argsort — NOT the
+        warm-started order chain, which is history-dependent through tie
+        layouts.  Two restores at the same step are therefore bitwise
+        identical, and the fold_in key streams make every subsequent
+        batch identical across restores too.
+
+        ``rebuild=False`` skips the O(N) re-embed + re-hash; valid ONLY
+        when the pipeline was just constructed from the restored params
+        (its ``__init__`` build is bitwise what the rebuild would
+        produce) — the elastic restore path uses this to avoid paying
+        the corpus embed twice.
+        """
+        self.finalize()
+        re = self.cfg.refresh_every
+        self._step = step
+        self._refresh_count = (
+            0 if re <= 0 or step < 1 else (step - 1) // re)
+        if rebuild:
+            self.features = self._compute_features()
+            self.index = build_index(
+                self._build_key, self.features, self.lsh,
+                use_pallas=self.cfg.use_pallas,
+                interpret=self.cfg.interpret)
 
     def _assemble_batch(self, indices, probs) -> Dict[str, jax.Array]:
         """Gather tokens + importance weights 1/(p*N) for one sample draw.
 
-        Weights are normalised to mean 1 over the batch (keeps the LR
-        scale of uniform sampling; relative weighting is what de-biases
-        the adaptive sampling).
+        With ``normalize_weights`` the weights are scaled to mean 1 over
+        the batch (keeps the LR scale of uniform sampling; relative
+        weighting is what de-biases the adaptive sampling).  Sharded
+        composition runs with raw weights instead.
         """
         idx = np.asarray(indices)
         chunk = self.tokens[idx]
         w = 1.0 / (np.maximum(np.asarray(probs), self.cfg.p_floor) * self.n)
-        w = w / max(w.mean(), 1e-30)
-        return {
-            "tokens": jnp.asarray(chunk[:, :-1]),
-            "targets": jnp.asarray(chunk[:, 1:]),
-            "loss_weights": jnp.asarray(w, jnp.float32),
-            "example_ids": jnp.asarray(idx, jnp.int32),
+        if self.cfg.normalize_weights:
+            w = w / max(w.mean(), 1e-30)
+        batch = {
+            "tokens": chunk[:, :-1],
+            "targets": chunk[:, 1:],
+            "loss_weights": w.astype(np.float32),
+            "example_ids": (idx + self.example_offset).astype(np.int32),
         }
+        if self.emit_numpy:
+            return batch
+        return {k: jnp.asarray(v) for k, v in batch.items()}
 
-    def next_batch(self) -> Dict[str, jax.Array]:
+    def _query(self) -> jax.Array:
+        q = self.query_fn(self.params) if self._params_aware \
+            else self.query_fn()
+        return q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
+
+    def next_batch(self, query: Optional[jax.Array] = None
+                   ) -> Dict[str, jax.Array]:
+        """Draw one batch; ``query`` (already normalised) lets a sharded
+        owner compute the shared global query once for all shards."""
         sub = self._tick()
-        q = self.query_fn()
-        q = q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
+        q = self._query() if query is None else query
         res = sample(sub, self.index, self.features, q, self.lsh,
                      m=self.cfg.minibatch, use_pallas=self.cfg.use_pallas,
                      interpret=self.cfg.interpret)
@@ -163,21 +355,137 @@ class LSHSampledPipeline:
                 for c in range(queries.shape[0])]
 
 
-def mean_pool_feature_fn(params, cfg, forward):
-    """Default feature: mean-pooled final hidden state (BERT-pooled analogue)."""
-    def fn(tokens: jax.Array) -> jax.Array:
-        h = forward(params, cfg, {"tokens": tokens})
-        return jnp.mean(h.astype(jnp.float32), axis=1)
+class ShardedLSHPipeline:
+    """Shard-by-example LGD: one LSH index per data-parallel corpus shard.
+
+    The global corpus (N examples) is split into ``n_shards`` contiguous
+    shards (``example_shard_bounds``); shard s owns an independent
+    ``LSHSampledPipeline`` keyed by ``fold_in(key, s)`` over its n_s
+    examples.  Every global batch is the concatenation of equal-size
+    per-shard sub-batches (minibatch must divide by n_shards), laid out
+    so dim 0 slices map shard s's examples to DP group s under
+    ``dist.sharding.batch_sharding`` — the DP all-reduce of per-device
+    weighted means is then exactly the average of per-shard estimates.
+
+    UNBIASEDNESS: shard s's local estimator (1/m_s) sum_j g_j / (p_j n_s)
+    is unbiased for the shard mean; the emitted global weight is the
+    local weight rescaled by n_s * S / N, i.e. w_j = S / (p_j N), which
+    makes the plain mean over the whole (m = S * m_s)-example batch equal
+    the average of shard-mean estimates — an unbiased estimator of the
+    full-corpus mean gradient for ANY shard sizes (each shard estimates
+    its shard-sum / (N/S); contiguous balanced bounds keep n_s equal up
+    to 1).  With ``normalize_weights`` the composed weights are finally
+    scaled to mean 1 over the global batch, preserving relative (and
+    cross-shard) weighting.
+
+    Each shard refreshes its own index on the shared schedule — with
+    ``refresh_async`` all S host-side re-hashes overlap device compute.
+    """
+
+    def __init__(
+        self,
+        key: jax.Array,
+        tokens: np.ndarray,                  # (N, S+1) global corpus
+        feature_fn: Callable,
+        query_fn: Callable,
+        config: LSHPipelineConfig,
+        n_shards: int = 1,
+        feature_batch: int = 512,
+        params: Any = None,
+        mesh=None,
+    ):
+        if config.minibatch % n_shards != 0:
+            raise ValueError(
+                f"minibatch={config.minibatch} must divide by "
+                f"n_shards={n_shards}")
+        self.cfg = config
+        self.n = tokens.shape[0]
+        self.n_shards = n_shards
+        self.mesh = mesh
+        shard_cfg = dataclasses.replace(
+            config, minibatch=config.minibatch // n_shards,
+            normalize_weights=False)
+        self.shards: List[LSHSampledPipeline] = []
+        for s in range(n_shards):
+            lo, hi = example_shard_bounds(self.n, s, n_shards)
+            self.shards.append(LSHSampledPipeline(
+                jax.random.fold_in(key, s), tokens[lo:hi], feature_fn,
+                query_fn, shard_cfg, feature_batch=feature_batch,
+                params=params, example_offset=lo, emit_numpy=True))
+
+    @property
+    def params(self):
+        return self.shards[0].params
+
+    def set_params(self, params: Any):
+        for p in self.shards:
+            p.set_params(params)
+
+    def restore_at(self, step: int, rebuild: bool = True):
+        """Rebuild every per-shard index at ``step`` (elastic restore)."""
+        for p in self.shards:
+            p.restore_at(step, rebuild=rebuild)
+
+    def finalize(self):
+        for p in self.shards:
+            p.finalize()
+
+    def refresh(self):
+        for p in self.shards:
+            p.refresh()
+
+    def next_batch(self) -> Dict[str, jax.Array]:
+        # the global query is shard-independent: compute + normalise it
+        # once and share it across all S per-shard sample calls.
+        q = self.shards[0]._query()
+        subs = [p.next_batch(query=q) for p in self.shards]
+        m_s = self.cfg.minibatch // self.n_shards
+        parts: Dict[str, list] = {k: [] for k in
+                                  ("tokens", "targets", "loss_weights",
+                                   "example_ids")}
+        shard_ids = []
+        for s, (p, b) in enumerate(zip(self.shards, subs)):
+            # local 1/(p n_s) -> global S/(p N): each sample stands in
+            # for N/S corpus examples under the batch mean.
+            scale = p.n * self.n_shards / self.n
+            parts["loss_weights"].append(
+                np.asarray(b["loss_weights"], np.float64) * scale)
+            for k in ("tokens", "targets", "example_ids"):
+                parts[k].append(np.asarray(b[k]))
+            shard_ids.append(np.full((m_s,), s, np.int32))
+        w = np.concatenate(parts["loss_weights"])
+        if self.cfg.normalize_weights:
+            w = w / max(w.mean(), 1e-30)
+        batch = {
+            "tokens": jnp.asarray(np.concatenate(parts["tokens"])),
+            "targets": jnp.asarray(np.concatenate(parts["targets"])),
+            "loss_weights": jnp.asarray(w, jnp.float32),
+            "example_ids": jnp.asarray(
+                np.concatenate(parts["example_ids"]), jnp.int32),
+            "shard_ids": jnp.asarray(np.concatenate(shard_ids)),
+        }
+        if self.mesh is not None and isinstance(self.mesh,
+                                                jax.sharding.Mesh):
+            from repro.dist.sharding import batch_sharding
+            sh = batch_sharding(self.mesh)
+            batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+        return batch
+
+
+def mean_pool_feature_fn(cfg):
+    """Params-aware feature hook: mean-pooled final hidden state
+    (the paper's BERT pooled-representation recipe) — pass the result as
+    ``feature_fn`` with ``params=`` so the trainer keeps it fresh."""
+    from repro.models.lm import pooled_features
+
+    def fn(params, tokens: jax.Array) -> jax.Array:
+        return pooled_features(params, cfg, {"tokens": tokens})
     return jax.jit(fn)
 
 
-def lm_head_query_fn(params):
-    """Query from the output layer (paper: classifier weights): the
-    direction in feature space along which next-token loss is largest is
-    approximated by the mean lm_head column weighted by... in practice the
-    mean output embedding works as the paper's 'classification layer
-    parameters as queries'."""
-    def fn() -> jax.Array:
-        w = params["embed_group"]["lm_head"].astype(jnp.float32)
-        return jnp.mean(w, axis=1)
-    return fn
+def lm_head_query_fn():
+    """Params-aware query hook from the output layer (paper: classifier
+    weights as queries): the mean lm_head column approximates the
+    direction in feature space along which next-token loss is largest."""
+    from repro.models.lm import lm_head_query
+    return lm_head_query

@@ -65,6 +65,29 @@ def _axis_size(mesh, axes) -> int:
     return n
 
 
+def data_axis_size(mesh) -> int:
+    """Total data-parallel degree of ``mesh`` (pod x data on multi-pod)."""
+    return _axis_size(mesh, _data_axes(mesh))
+
+
+def example_shard_bounds(n: int, shard_id: int, n_shards: int):
+    """Contiguous [lo, hi) bounds of corpus shard ``shard_id``.
+
+    Balanced split (sizes differ by at most 1, remainder to the lowest
+    ids).  This is the shard-by-example contract for LGD scale-out: DP
+    group s builds/refreshes/queries ONLY the LSH index of examples
+    [lo, hi) — see ``repro/data/lsh_pipeline.ShardedLSHPipeline`` for
+    how per-shard importance weights compose into an unbiased global
+    estimator under the DP all-reduce.
+    """
+    if not (0 <= shard_id < n_shards):
+        raise ValueError(f"shard_id {shard_id} not in [0, {n_shards})")
+    base, rem = divmod(n, n_shards)
+    lo = shard_id * base + min(shard_id, rem)
+    hi = lo + base + (1 if shard_id < rem else 0)
+    return lo, hi
+
+
 # logical activation axis -> physical mesh axis ("batch" -> the data axes,
 # model-parallel dims -> "model"; "seq" is the sequence-parallel residual
 # sharding, also over "model").

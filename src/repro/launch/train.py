@@ -19,11 +19,11 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.data import (
-    LSHPipelineConfig, LSHSampledPipeline, make_token_corpus,
-    uniform_batches,
+    LSHPipelineConfig, ShardedLSHPipeline, lm_head_query_fn,
+    make_token_corpus, mean_pool_feature_fn, uniform_batches,
 )
 from repro.dist.sharding import (
-    batch_sharding, tree_param_shardings, use_mesh,
+    batch_sharding, data_axis_size, tree_param_shardings, use_mesh,
 )
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import forward, init_params, loss
@@ -70,24 +70,29 @@ def main():
                 "examples/serve.py or the dryrun for this arch")
         corpus = make_token_corpus(0, args.corpus, args.seq, cfg.vocab)
 
-        holder = {}
+        sampler = batches = None
         if args.lgd:
-            def feature_fn(tokens):
-                prm = holder["trainer"].params if "trainer" in holder \
-                    else params
-                h = forward(prm, cfg, {"tokens": tokens})
-                return jnp.mean(h.astype(jnp.float32), axis=1)
-
-            def query_fn():
-                prm = holder["trainer"].params if "trainer" in holder \
-                    else params
-                return jnp.mean(
-                    prm["embed_group"]["lm_head"].astype(jnp.float32), 1)
-
-            pipe = LSHSampledPipeline(
-                jax.random.PRNGKey(2), corpus.tokens, jax.jit(feature_fn),
-                query_fn, LSHPipelineConfig(minibatch=args.batch))
-            batches = iter(pipe.next_batch, None)
+            # shard-by-example: one LSH index per data-parallel group
+            # (each queries only its corpus shard), composed into an
+            # unbiased global estimator by the DP all-reduce.
+            dp = data_axis_size(mesh)
+            n_shards = dp if args.batch % dp == 0 else 1
+            if n_shards != dp:
+                print(f"WARNING: the DP degree {dp} does not divide "
+                      f"batch={args.batch}; falling back to ONE global "
+                      f"LSH index on host-placed batches (per-shard "
+                      f"indexing disabled — every host re-embeds the "
+                      f"full corpus on refresh)")
+            sampler = ShardedLSHPipeline(
+                jax.random.PRNGKey(2), corpus.tokens,
+                mean_pool_feature_fn(cfg), lm_head_query_fn(),
+                LSHPipelineConfig(minibatch=args.batch,
+                                  refresh_async=True),
+                n_shards=n_shards, params=params,
+                # device placement needs dim 0 divisible by the DP
+                # degree; in the fallback it is not, so leave batches
+                # host-side and let jit shard on entry.
+                mesh=mesh if n_shards == dp else None)
         else:
             batches = uniform_batches(corpus, args.batch, seed=1)
 
@@ -96,8 +101,8 @@ def main():
             Adam(lr=schedules.warmup_cosine(args.lr, 10, args.steps)),
             batches,
             TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=50, log_every=10,
-                          donate=not args.lgd))
-        holder["trainer"] = tr
+                          donate=not args.lgd),
+            sampler=sampler)
         tr.run(args.steps)
         tr.finalize()
         for m in tr.metrics_history[-5:]:

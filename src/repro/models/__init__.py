@@ -5,7 +5,9 @@ from .lm import (  # noqa: F401
     forward,
     init_cache,
     init_params,
+    lm_head_query,
     logits,
     loss,
+    pooled_features,
     prefill,
 )

@@ -239,6 +239,28 @@ def logits(params, cfg: ModelConfig, batch) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# LGD feature-extraction hooks (paper Sec. 3.2: the BERT recipe)
+# ---------------------------------------------------------------------------
+
+def pooled_features(params, cfg: ModelConfig, batch) -> jax.Array:
+    """Per-example feature vector: mean-pooled final hidden state (f32).
+
+    The paper hashes each example's pooled last-layer representation into
+    the LSH index; this is the model-side half of that contract (the
+    pipeline half is ``repro.data.LSHSampledPipeline``).
+    """
+    h = forward(params, cfg, batch)
+    return jnp.mean(h.astype(jnp.float32), axis=1)
+
+
+def lm_head_query(params) -> jax.Array:
+    """LGD query from the output layer (paper: classification-layer
+    weights as queries): the mean lm_head column, in feature space."""
+    w = params["embed_group"]["lm_head"].astype(jnp.float32)
+    return jnp.mean(w, axis=1)
+
+
+# ---------------------------------------------------------------------------
 # cache init / prefill / decode
 # ---------------------------------------------------------------------------
 

@@ -4,15 +4,24 @@ The checkpoint format is mesh-agnostic (host numpy per leaf), so scaling
 a job up/down is: build the new mesh, recompute the parameter shardings
 for it, and restore with reshard-on-load.  The same path handles node
 failure (restart on the surviving smaller mesh) and scale-up.
+
+LGD shard-by-example state is NOT checkpointed: per-shard LSH indexes
+are a pure function of (pipeline key, corpus shard, restored params,
+restored step), so an elastic restart — including one that CHANGES the
+mesh shape and hence the shard count — rebuilds them with
+``rebuild_sharded_pipeline``.  The rebuild is bit-deterministic (fold_in
+key streams + canonical fresh argsort; see
+``LSHSampledPipeline.restore_at``), so two restores of the same
+checkpoint onto the same mesh draw identical batch sequences.
 """
 
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 
-from repro.dist.sharding import tree_param_shardings
+from repro.dist.sharding import data_axis_size, tree_param_shardings
 from . import checkpoint as ckpt
 
 
@@ -25,6 +34,44 @@ def restore_on_mesh(
     """Restore ``template``-structured state onto ``mesh`` (any shape)."""
     shardings = tree_param_shardings(template, mesh) if mesh else None
     return ckpt.restore(ckpt_dir, step, template, shardings)
+
+
+def rebuild_sharded_pipeline(
+    key: jax.Array,
+    tokens,
+    feature_fn: Callable,
+    query_fn: Callable,
+    config,
+    step: int,
+    *,
+    n_shards: Optional[int] = None,
+    mesh=None,
+    params: Any = None,
+    feature_batch: int = 512,
+):
+    """Reshard-on-restore for the LGD pipeline: rebuild per-shard indexes.
+
+    ``n_shards`` defaults to the data-parallel degree of ``mesh`` — the
+    shard count follows the restored mesh shape, so a job that comes
+    back on fewer (or more) hosts re-partitions the corpus to match.
+    ``params`` should be the RESTORED model params: features are
+    re-embedded from them, matching the paper's periodic-refresh
+    semantics (the pre-failure features were at most one refresh period
+    fresher).  Calling this twice with the same arguments yields
+    bitwise-identical indexes and batch sequences.
+    """
+    from repro.data.lsh_pipeline import ShardedLSHPipeline
+
+    if n_shards is None:
+        n_shards = data_axis_size(mesh) if mesh is not None else 1
+    pipe = ShardedLSHPipeline(
+        key, tokens, feature_fn, query_fn, config, n_shards=n_shards,
+        feature_batch=feature_batch, params=params, mesh=mesh)
+    # the constructor just built every index from the restored params
+    # and build keys — bitwise what restore_at would rebuild — so only
+    # the counters need rewinding (skips a second O(N) corpus embed).
+    pipe.restore_at(step, rebuild=False)
+    return pipe
 
 
 def rescale_plan(old_devices: int, new_devices: int,

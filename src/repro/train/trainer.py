@@ -16,6 +16,20 @@ counted and surfaced in metrics — on a fleet this signal feeds the
 controller that evicts/replaces slow hosts.  Data loading is
 double-buffered (next batch prepared while the step runs) so host-side
 sampling (the LGD hash lookups) overlaps device compute.
+
+LGD sampler hook: pass ``sampler=`` (an ``LSHSampledPipeline`` /
+``ShardedLSHPipeline``) instead of ``batches``.  The trainer then
+  * draws batches from ``sampler.next_batch`` — importance weights
+    1/(p_i N) ride in ``batch["loss_weights"]`` and are applied INSIDE
+    the jitted loss (``models.layers.chunked_cross_entropy``), keeping
+    the adaptive-sampling gradient unbiased;
+  * pushes fresh params via ``sampler.set_params`` after every step, so
+    queries track the live model and the periodic index refresh (which
+    the pipeline runs on a host thread, double-buffered) re-embeds from
+    near-current params while the device step runs;
+  * forces ``donate=False`` (the sampler's feature/query closures read
+    live param buffers) and, on restore, rewinds the sampler with
+    ``restore_at(step)`` instead of replaying consumed batches.
 """
 
 from __future__ import annotations
@@ -61,11 +75,23 @@ class Trainer:
         cfg: ModelConfig,
         params,
         optimizer,
-        batches: Iterator[Dict[str, jax.Array]],
+        batches: Optional[Iterator[Dict[str, jax.Array]]] = None,
         tcfg: TrainerConfig = TrainerConfig(),
         resume: bool = True,
         loss_fn: Optional[Callable] = None,
+        sampler=None,
     ):
+        if (batches is None) == (sampler is None):
+            raise ValueError("pass exactly one of batches= or sampler=")
+        self._sampler = sampler
+        if sampler is not None:
+            if hasattr(sampler, "set_params"):
+                sampler.set_params(params)
+            batches = iter(sampler.next_batch, None)
+            if tcfg.donate:
+                # sampler closures read live param buffers; donating
+                # them to the step would hand the sampler freed memory.
+                tcfg = dataclasses.replace(tcfg, donate=False)
         self.cfg = cfg
         self.optimizer = optimizer
         self.batches = batches
@@ -159,17 +185,32 @@ class Trainer:
         self.params = tree["params"]
         self.opt_state = tree["opt_state"]
         self.step = extra.get("step", step)
-        # deterministic data resume: skip already-consumed batches
-        for _ in range(self.step):
-            next(self.batches)
+        if self._sampler is not None and hasattr(self._sampler,
+                                                 "restore_at"):
+            # rebuild the sampler's index from the restored params and
+            # rewind its key streams — O(refresh) instead of O(steps),
+            # and bit-deterministic across restores.
+            if hasattr(self._sampler, "set_params"):
+                self._sampler.set_params(self.params)
+            self._sampler.restore_at(self.step)
+        else:
+            # deterministic data resume: skip already-consumed batches
+            for _ in range(self.step):
+                next(self.batches)
 
     def finalize(self):
         self._ckpt.wait()
+        if self._sampler is not None and hasattr(self._sampler, "finalize"):
+            self._sampler.finalize()
 
     # -- loop ----------------------------------------------------------------
 
     def run(self, n_steps: int) -> Dict[str, list]:
         losses = []
+        if n_steps <= 0:
+            # never touch the data stream: batch k must train step k,
+            # and a no-op run() must not tick the sampler's key stream.
+            return {"losses": losses}
         target = self.step + n_steps
         next_batch = next(self.batches)          # double buffering
         while self.step < target:
@@ -180,9 +221,23 @@ class Trainer:
                 getattr(self, "_ef_residual", None))
             if ef is not None:
                 self._ef_residual = ef
-            try:
-                next_batch = next(self.batches)  # overlap with device step
-            except StopIteration:
+            if self._sampler is not None and \
+                    hasattr(self._sampler, "set_params"):
+                # point the sampler at the post-step params (async jax
+                # values — sampling ops just enqueue behind the step)
+                # BEFORE drawing the next batch, so its query reflects
+                # the live model.
+                self._sampler.set_params(self.params)
+            if self.step + 1 < target:
+                # prefetch ONLY if another step will run: batch k must
+                # train step k, never be thrown away at loop exit —
+                # otherwise chunked run() calls desync the data stream
+                # from self.step and restore-at-step resume diverges.
+                try:
+                    next_batch = next(self.batches)  # overlap device step
+                except StopIteration:
+                    next_batch = None
+            else:
                 next_batch = None
             l = float(l)
             dt = time.time() - t0
