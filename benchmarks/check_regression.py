@@ -1,10 +1,13 @@
-"""CI benchmark-regression gate for the fused LSH sampling fast path.
+"""CI benchmark-regression gate for the LGD fast paths.
 
-Compares a freshly-measured ``sampling_cost.json`` against the committed
-baseline and FAILS (exit 1) on a regression.  CI machines differ wildly
-in absolute speed, so the gate never compares raw microseconds:
+Compares freshly-measured benchmark JSONs against the committed
+baselines and FAILS (exit 1) on a regression.  CI machines differ
+wildly in absolute speed, so the gate never compares raw microseconds —
+every comparison is a SAME-RUN ratio (machine speed cancels) checked
+against either the committed baseline ratio or an absolute cap.
 
-  fused_vs_ref      us(lsh_fused) / us(lsh_reference), same run — the
+Sampling (``sampling_cost.json``):
+  fused_vs_ref      us(lsh_fused) / us(lsh_reference) — the
                     auto-dispatched fast path must stay within
                     ``--tolerance`` (default 25%) of the committed
                     baseline ratio.  On CPU both paths lower to the same
@@ -12,24 +15,42 @@ in absolute speed, so the gate never compares raw microseconds:
                     host; the limit is max(baseline, 1)*(1+tol) so a
                     favourably-skewed (<1) committed baseline cannot
                     turn ordinary CI noise into failures.
-  batched_vs_fused  us(batched, per query) / us(lsh_fused), same run —
-                    the B-query amortisation of ``sample_batched``.  Its
-                    structural value depends on host core count, so it
-                    is gated by an ABSOLUTE cap (default 0.5: batching
-                    must amortise at least 2x per query; ~0.05 here)
-                    rather than a baseline-relative band.  Losing the
-                    fused batch probe sends it to ~1 — a caught
-                    regression on any machine.
+  batched_vs_fused  us(batched, per query) / us(lsh_fused) — the B-query
+                    amortisation of ``sample_batched``, gated by an
+                    ABSOLUTE cap (default 0.5).  Losing the fused batch
+                    probe sends it to ~1 — caught on any machine.
+  probe_dispatch    us(probe dispatched) / us(probe reference),
+                    interleaved same-run measurement — the dispatch
+                    heuristic must never pick a losing path, so this is
+                    capped at ``--probe-cap`` (default 1.15: wins or
+                    ties, with headroom for timer noise only).
+
+Refresh (``refresh_cost.json``):
+  delta_speedup     full-refresh / delta-refresh wall time at 10% dirty
+                    fraction, same run.  Delta refresh re-embeds and
+                    re-hashes only the dirty rows, so this must stay
+                    >= ``--refresh-min-speedup`` (default 2.0 — the
+                    device-resident LGD acceptance bar).
+
+Train step (``train_step.json``):
+  step_overhead     us(lgd step) / us(uniform step), same run — the
+                    end-to-end cost of adaptive sampling on the
+                    device-resident path, gated within
+                    ``--train-tolerance`` (default 35%: trainer-level
+                    timings are noisier than microbenchmarks) of the
+                    committed baseline ratio.
 
 ``--selftest`` proves the gate can actually fail before it is trusted:
-it injects a 2x fused slowdown and a 20x batched slowdown and asserts
-both comparisons trip.
+it injects a slowdown into every gated quantity and asserts each
+comparison trips.
 
 Usage (mirrors .github/workflows/ci.yml):
-    python benchmarks/run.py tab_sampling_cost --quick
+    python benchmarks/run.py tab_sampling_cost tab_refresh_cost \
+        tab_train_step --quick
     python benchmarks/check_regression.py \
-        --baseline /tmp/baseline.json \
-        --fresh benchmarks/results/sampling_cost.json
+        --baseline /tmp/baseline.json --fresh benchmarks/results/sampling_cost.json \
+        --baseline-refresh /tmp/refresh.json --fresh-refresh benchmarks/results/refresh_cost.json \
+        --baseline-train /tmp/train.json --fresh-train benchmarks/results/train_step.json
 """
 
 from __future__ import annotations
@@ -41,30 +62,41 @@ import sys
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT = os.path.join(HERE, "results", "sampling_cost.json")
+DEFAULT_REFRESH = os.path.join(HERE, "results", "refresh_cost.json")
+DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
 
 
 def ratios(d: dict) -> dict:
     us = d["us_per_call"]
-    return {
+    out = {
         "fused_vs_ref": us["lsh_fused"] / us["lsh_reference"],
         "batched_vs_fused":
             us["lsh_fused_batched_per_query"] / us["lsh_fused"],
     }
+    probe = d.get("probe_stage_us_per_query")
+    if probe:
+        out["probe_dispatch"] = probe["fused"] / probe["reference"]
+    return out
+
+
+def _comparable(baseline: dict, fresh: dict, fields, what: str) -> list:
+    """Like-for-like guard: quick vs full runs measure different problem
+    sizes; comparing them gates on the size mismatch, not a regression."""
+    failures = []
+    for field in fields:
+        if baseline.get(field) != fresh.get(field):
+            failures.append(
+                f"{what} baseline/fresh not comparable: {field} "
+                f"{baseline.get(field)} != {fresh.get(field)} — "
+                "regenerate the baseline with run.py --quick")
+    return failures
 
 
 def compare(baseline: dict, fresh: dict, tolerance: float,
-            batched_cap: float) -> list:
-    """Return the list of regression messages (empty = pass)."""
-    failures = []
-    # like-for-like guard: quick vs full runs measure different problem
-    # sizes; comparing them gates on the size mismatch, not a regression
-    for field in ("quick", "n_points", "query_batch"):
-        if baseline.get(field) != fresh.get(field):
-            failures.append(
-                f"baseline/fresh not comparable: {field} "
-                f"{baseline.get(field)} != {fresh.get(field)} — "
-                "regenerate the baseline with run.py tab_sampling_cost "
-                "--quick")
+            batched_cap: float, probe_cap: float) -> list:
+    """Sampling-cost gates; returns regression messages (empty = pass)."""
+    failures = _comparable(baseline, fresh,
+                           ("quick", "n_points", "query_batch"), "sampling")
     if failures:
         for msg in failures:
             print(msg)
@@ -94,51 +126,155 @@ def compare(baseline: dict, fresh: dict, tolerance: float,
         failures.append(
             f"batched sampling amortisation lost: per-query ratio "
             f"{got:.3f} > cap {batched_cap:.3f}")
+
+    got = fresh_r.get("probe_dispatch")
+    if got is not None:
+        ok = got <= probe_cap
+        print(f"probe_dispatch: baseline "
+              f"{base_r.get('probe_dispatch', float('nan')):.3f}  "
+              f"fresh {got:.3f}  cap {probe_cap:.3f}  "
+              f"[{'ok' if ok else 'FAIL'}]")
+        if not ok:
+            failures.append(
+                f"probe dispatch picks a losing path: fused/ref "
+                f"{got:.3f} > cap {probe_cap:.3f} (the dispatched probe "
+                "must win or tie the reference)")
     return failures
 
 
-def selftest(baseline: dict, tolerance: float, batched_cap: float) -> int:
-    """The gate must trip on injected fused and batched slowdowns."""
+def compare_refresh(baseline: dict, fresh: dict, min_speedup: float) -> list:
+    failures = _comparable(baseline, fresh, ("quick", "n_points", "l"),
+                           "refresh")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+    got = fresh["delta_speedup_at_0.10"]
+    base = baseline["delta_speedup_at_0.10"]
+    ok = got >= min_speedup
+    print(f"refresh delta_speedup@10%: baseline {base:.2f}x  fresh "
+          f"{got:.2f}x  floor {min_speedup:.2f}x  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"delta refresh lost its amortisation: {got:.2f}x < "
+            f"{min_speedup:.2f}x over full refresh at 10% dirty")
+    return failures
+
+
+def compare_train(baseline: dict, fresh: dict, tolerance: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "batch", "n_corpus"), "train")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+    got = fresh["step_us"]["overhead"]
+    base = baseline["step_us"]["overhead"]
+    limit = max(base, 1.0) * (1.0 + tolerance)
+    ok = got <= limit
+    print(f"train step_overhead: baseline {base:.3f}  fresh {got:.3f}  "
+          f"limit {limit:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"LGD train step regressed: lgd/uniform {got:.3f} > "
+            f"{limit:.3f} (baseline {base:.3f} +{tolerance:.0%})")
+    return failures
+
+
+def selftest(baseline: dict, refresh_base: dict, train_base: dict,
+             args) -> int:
+    """Every gate must trip on an injected slowdown of its quantity."""
+    results = []
+
     fused_slow = json.loads(json.dumps(baseline))
     fused_slow["us_per_call"]["lsh_fused"] *= 2.0
     print("-- selftest 1: injected 2x lsh_fused slowdown --")
-    f1 = compare(baseline, fused_slow, tolerance, batched_cap)
+    results.append(bool(compare(baseline, fused_slow, args.tolerance,
+                                args.batched_cap, args.probe_cap)))
 
     batched_slow = json.loads(json.dumps(baseline))
     batched_slow["us_per_call"]["lsh_fused_batched_per_query"] *= 20.0
     print("-- selftest 2: injected 20x batched slowdown --")
-    f2 = compare(baseline, batched_slow, tolerance, batched_cap)
+    results.append(bool(compare(baseline, batched_slow, args.tolerance,
+                                args.batched_cap, args.probe_cap)))
 
-    if not f1 or not f2:
-        print("selftest FAILED: gate did not trip "
-              f"(fused findings: {len(f1)}, batched findings: {len(f2)})")
+    probe_slow = json.loads(json.dumps(baseline))
+    probe_slow["probe_stage_us_per_query"]["fused"] *= 2.0
+    print("-- selftest 3: injected 2x dispatched-probe slowdown --")
+    results.append(bool(compare(baseline, probe_slow, args.tolerance,
+                                args.batched_cap, args.probe_cap)))
+
+    refresh_slow = json.loads(json.dumps(refresh_base))
+    refresh_slow["delta_speedup_at_0.10"] = args.refresh_min_speedup * 0.5
+    print("-- selftest 4: injected delta-refresh amortisation loss --")
+    results.append(bool(compare_refresh(refresh_base, refresh_slow,
+                                        args.refresh_min_speedup)))
+
+    train_slow = json.loads(json.dumps(train_base))
+    train_slow["step_us"]["overhead"] *= 2.0
+    print("-- selftest 5: injected 2x LGD step-overhead slowdown --")
+    results.append(bool(compare_train(train_base, train_slow,
+                                      args.train_tolerance)))
+
+    if not all(results):
+        missed = [i + 1 for i, r in enumerate(results) if not r]
+        print(f"selftest FAILED: gate(s) {missed} did not trip")
         return 1
-    print("selftest passed: gate tripped on both injected slowdowns")
+    print("selftest passed: every gate tripped on its injected slowdown")
     return 0
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", default=DEFAULT,
-                    help="committed baseline JSON")
+                    help="committed sampling-cost baseline JSON")
     ap.add_argument("--fresh", default=DEFAULT,
-                    help="freshly measured JSON")
+                    help="freshly measured sampling-cost JSON")
+    ap.add_argument("--baseline-refresh", default=DEFAULT_REFRESH,
+                    help="committed refresh-cost baseline JSON")
+    ap.add_argument("--fresh-refresh", default=DEFAULT_REFRESH,
+                    help="freshly measured refresh-cost JSON")
+    ap.add_argument("--baseline-train", default=DEFAULT_TRAIN,
+                    help="committed train-step baseline JSON")
+    ap.add_argument("--fresh-train", default=DEFAULT_TRAIN,
+                    help="freshly measured train-step JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
                     help="absolute cap on batched per-query / fused ratio")
+    ap.add_argument("--probe-cap", type=float, default=1.15,
+                    help="absolute cap on dispatched-probe / reference-"
+                         "probe ratio (dispatch must win or tie)")
+    ap.add_argument("--refresh-min-speedup", type=float, default=2.0,
+                    help="required full/delta refresh speedup at 10% dirty")
+    ap.add_argument("--train-tolerance", type=float, default=0.35,
+                    help="allowed lgd/uniform step-overhead drift")
     ap.add_argument("--selftest", action="store_true",
-                    help="verify the gate trips on injected slowdowns")
+                    help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
 
     with open(args.baseline) as f:
         baseline = json.load(f)
+    with open(args.baseline_refresh) as f:
+        refresh_base = json.load(f)
+    with open(args.baseline_train) as f:
+        train_base = json.load(f)
     if args.selftest:
-        return selftest(baseline, args.tolerance, args.batched_cap)
+        return selftest(baseline, refresh_base, train_base, args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
-    failures = compare(baseline, fresh, args.tolerance, args.batched_cap)
+    with open(args.fresh_refresh) as f:
+        refresh_fresh = json.load(f)
+    with open(args.fresh_train) as f:
+        train_fresh = json.load(f)
+    failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
+                       args.probe_cap)
+    failures += compare_refresh(refresh_base, refresh_fresh,
+                                args.refresh_min_speedup)
+    failures += compare_train(train_base, train_fresh,
+                              args.train_tolerance)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

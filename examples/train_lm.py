@@ -13,9 +13,22 @@ Sampler (``--sampler {uniform,lgd}``):
                    per-shard LSH indexes; each step queries with the
                    output-layer direction and draws Algorithm-1 samples,
                    de-biased by 1/(p_i N) importance weights inside the
-                   jitted loss.  The periodic index refresh runs on a
-                   host thread, double-buffered, so re-hashing overlaps
+                   jitted loss.  Batches are DEVICE-RESIDENT: the token
+                   store is uploaded once and each draw is a single
+                   compiled sample->gather->weight call — watch the
+                   ``sampler`` fraction in the progress line sit near
+                   zero.  The periodic index refresh runs on a host
+                   thread, double-buffered, so re-hashing overlaps
                    device compute.
+
+Refresh mode (``--refresh-mode {full,delta}``):
+  full             re-embed + re-hash the whole corpus every
+                   ``refresh_every`` steps.
+  delta            re-embed/re-hash only the examples VISITED since the
+                   last refresh plus a drift-sampled remainder, merged
+                   into the sorted index through the previous order —
+                   refresh cost scales with drift, not corpus size
+                   (benchmarks/run.py tab_refresh_cost quantifies it).
 
 Sharded-index contract (``--shards S``): the corpus is split into S
 contiguous equal shards (one per data-parallel group at scale — S
@@ -31,6 +44,7 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
 """
 
 import argparse
+import time
 
 import jax
 import jax.numpy as jnp
@@ -63,6 +77,10 @@ def main():
     ap.add_argument("--shards", type=int, default=1,
                     help="shard-by-example LSH index count (one per DP "
                          "group at scale); must divide the batch size")
+    ap.add_argument("--refresh-mode", default="full",
+                    choices=["full", "delta"],
+                    help="full: re-hash the whole corpus each refresh; "
+                         "delta: only visited + drift-sampled rows")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.uniform:
@@ -92,7 +110,8 @@ def main():
             LSHPipelineConfig(k=cfg.lgd_k, l=cfg.lgd_l,
                               minibatch=p["batch"],
                               refresh_every=cfg.lgd_refresh_every,
-                              refresh_async=True),
+                              refresh_async=True,
+                              refresh_mode=args.refresh_mode),
             n_shards=args.shards, params=params)
     else:
         batches = uniform_batches(corpus, p["batch"], seed=3)
@@ -109,10 +128,18 @@ def main():
                   "targets": jnp.asarray(corpus.tokens[:128, 1:])}
     eval_fn = jax.jit(lambda prm: loss(prm, cfg, eval_batch))
     for chunk in range(0, args.steps, 50):
-        tr.run(min(50, args.steps - chunk))
+        n = min(50, args.steps - chunk)
+        d0, w0 = tr.data_seconds, time.perf_counter()
+        tr.run(n)
+        wall = time.perf_counter() - w0
+        # steps/sec + the fraction of wall time blocked on batch draws:
+        # the device-resident data path shows up as sampler -> ~0.
+        sampler_frac = (tr.data_seconds - d0) / max(wall, 1e-12)
         last = tr.metrics_history[-1] if tr.metrics_history else {}
         print(f"step {tr.step:5d}  train {last.get('loss', float('nan')):.4f}"
               f"  eval {float(eval_fn(tr.params)):.4f}"
+              f"  steps/s {n / max(wall, 1e-12):6.2f}"
+              f"  sampler {sampler_frac:5.1%}"
               f"  stragglers {tr.straggler_steps}")
     tr.finalize()
 

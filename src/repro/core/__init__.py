@@ -21,15 +21,20 @@ from .tables import (  # noqa: F401
     bucket_bounds,
     bucket_bounds_batched,
     build_index,
+    hash_points,
     query_codes,
     refresh_index,
+    refresh_index_delta,
 )
 from .sampler import (  # noqa: F401
+    GatherBatch,
     SampleResult,
     exact_inclusion_probability,
     sample,
     sample_batched,
     sample_drain,
+    sample_gather,
+    sample_gather_batched,
 )
 from .estimator import (  # noqa: F401
     VarianceReport,

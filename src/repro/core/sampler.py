@@ -21,6 +21,13 @@ Three modes are provided:
   (perturbed-query minibatches, multi-chain training, per-example
   queries); per-query sampling stays the exact Algorithm 1.
 
+* ``sample_gather`` / ``sample_gather_batched`` — the device-resident
+  step path: Algorithm 1 PLUS the token-row gather and the 1/(p·N)
+  importance-weight computation, fused into one jitted program over a
+  device-resident token store (``kernels.gather_weight``).  The trainer
+  consumes the returned ``GatherBatch`` directly — no host numpy, no
+  device round-trip anywhere in the per-step loop.
+
 Probing uses a *static* upper bound ``max_probes`` on the number of table
 draws so the computation stays shape-static under jit; if every probed
 bucket is empty the sampler falls back to a uniform draw with p = 1/N
@@ -39,6 +46,9 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import default_use_pallas
+from repro.kernels.gather_weight import gather_weight
+
 from .simhash import (
     LSHParams,
     collision_probability,
@@ -53,6 +63,18 @@ class SampleResult(NamedTuple):
     n_probes: jax.Array      # (m,) int32 — l, tables probed
     bucket_sizes: jax.Array  # (m,) int32 — |S_b| of chosen bucket
     fallback: jax.Array      # (m,) bool  — True where uniform fallback used
+
+
+class GatherBatch(NamedTuple):
+    """One fully-assembled device-resident LGD batch (all fields (m, ...))."""
+
+    tokens: jax.Array        # (m, S) int32 — input token rows
+    targets: jax.Array       # (m, S) int32 — next-token targets
+    loss_weights: jax.Array  # (m,) f32 — 1/(p·N), optionally mean-1 scaled
+    example_ids: jax.Array   # (m,) int32 — GLOBAL example ids (offset applied)
+    indices: jax.Array       # (m,) int32 — store-local sampled row ids
+    probs: jax.Array         # (m,) f32 — raw Algorithm-1 probabilities
+    fallback: jax.Array      # (m,) bool — uniform-fallback flags
 
 
 def _cp_fn(params: LSHParams):
@@ -176,6 +198,109 @@ def sample_batched(
         )(ks)
 
     return jax.vmap(per_query)(keys, lo, hi, queries)
+
+
+def _assemble(res: SampleResult, store: jax.Array, example_offset,
+              p_floor: float, normalize: bool, use_pallas: Optional[bool],
+              interpret: bool, row_width: Optional[int]) -> GatherBatch:
+    """Gather token rows + compute 1/(p·N) weights for one draw (m,)."""
+    if use_pallas is None:
+        use_pallas = default_use_pallas()
+    rows, w = gather_weight(store, res.indices, res.probs,
+                            p_floor=p_floor, use_pallas=use_pallas,
+                            interpret=interpret)
+    if normalize:
+        w = w / jnp.maximum(jnp.mean(w), 1e-30)
+    ids = (res.indices
+           + jnp.asarray(example_offset, jnp.int32)).astype(jnp.int32)
+    # row_width: logical S+1 of a store whose rows were lane-padded at
+    # build time (Pallas gather path) — slice the padding back off.
+    sw = store.shape[1] if row_width is None else row_width
+    return GatherBatch(
+        tokens=rows[:, :sw - 1],
+        targets=rows[:, 1:sw],
+        loss_weights=w.astype(jnp.float32),
+        example_ids=ids,
+        indices=res.indices,
+        probs=res.probs,
+        fallback=res.fallback,
+    )
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "p_floor",
+                                   "normalize", "use_pallas", "interpret",
+                                   "row_width"))
+def sample_gather(
+    key: jax.Array,
+    index: LSHIndex,
+    x_aug: jax.Array,
+    query: jax.Array,
+    store: jax.Array,            # (N, S+1) int32 device-resident token rows
+    params: LSHParams,
+    m: int = 1,
+    example_offset: jax.Array | int = 0,
+    max_probes: Optional[int] = None,
+    p_floor: float = 1e-8,
+    normalize: bool = True,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    row_width: Optional[int] = None,
+) -> GatherBatch:
+    """The device-resident LGD step: Algorithm 1 + gather + weights, one
+    compiled program.
+
+    ``sample`` draws m exact-probability indices, ``kernels.gather_weight``
+    gathers the corresponding token rows from the device-resident store
+    and computes w = 1/(max(p, p_floor)·N); ``normalize`` rescales the
+    weights to mean 1 over the batch (sharded composition passes False
+    and normalises once globally).  ``example_offset`` (traced, so all
+    corpus shards share one compilation) lifts store-local row ids to
+    global example ids.  ``row_width`` is the logical S+1 when the
+    store's rows were lane-padded once at build for the Pallas gather
+    (keeps the per-call pad zero-width).
+    """
+    res = sample(key, index, x_aug, query, params, m=m,
+                 max_probes=max_probes, use_pallas=use_pallas,
+                 interpret=interpret)
+    return _assemble(res, store, example_offset, p_floor, normalize,
+                     use_pallas, interpret, row_width)
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "p_floor",
+                                   "normalize", "use_pallas", "interpret",
+                                   "row_width"))
+def sample_gather_batched(
+    key: jax.Array,
+    index: LSHIndex,
+    x_aug: jax.Array,
+    queries: jax.Array,          # (C, d)
+    store: jax.Array,            # (N, S+1) int32
+    params: LSHParams,
+    m: int = 1,
+    example_offset: jax.Array | int = 0,
+    max_probes: Optional[int] = None,
+    p_floor: float = 1e-8,
+    normalize: bool = True,
+    use_pallas: Optional[bool] = None,
+    interpret: bool = False,
+    row_width: Optional[int] = None,
+) -> GatherBatch:
+    """``sample_gather`` for C queries at once; every field comes back
+    (C, m, ...).  The C·m gathered rows run through ONE gather+weight
+    pass (flattened), and weight normalisation is per chain."""
+    c = queries.shape[0]
+    res = sample_batched(key, index, x_aug, queries, params, m=m,
+                         max_probes=max_probes, use_pallas=use_pallas,
+                         interpret=interpret)          # fields (C, m)
+    flat = SampleResult(*(f.reshape((-1,) + f.shape[2:]) for f in res))
+    batch = _assemble(flat, store, example_offset, p_floor, False,
+                      use_pallas, interpret, row_width)
+    unflat = GatherBatch(*(f.reshape((c, m) + f.shape[1:]) for f in batch))
+    if normalize:
+        w = unflat.loss_weights
+        w = w / jnp.maximum(jnp.mean(w, axis=1, keepdims=True), 1e-30)
+        unflat = unflat._replace(loss_weights=w)
+    return unflat
 
 
 @partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",

@@ -135,6 +135,54 @@ def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
     return LSHIndex(index.projections, sorted_codes, order)
 
 
+@jax.jit
+def refresh_index_delta(index: LSHIndex, dirty_ids: jax.Array,
+                        dirty_codes: jax.Array) -> LSHIndex:
+    """Merge re-hashed codes for a dirty subset into the sorted index.
+
+    ``dirty_ids``: (D,) int32 point ids whose features changed (callers
+    pad D to a static bucket; duplicate ids are legal as long as their
+    code columns agree — the scatter then writes identical values).
+    ``dirty_codes``: (L, D) uint32, the fresh codes of exactly those
+    points.  Clean points are NOT re-hashed — that is the whole point:
+    the O(N·d·L·K) hash (and the O(N·model) re-embed upstream) scale
+    with |dirty|, and only the merge below touches all N entries.
+
+    The merge works in the old-sorted domain, through the previous
+    ``order`` — the same tie-stability contract as the warm-started
+    ``refresh_index``: scatter the dirty codes into their previous
+    sorted slots (the clean segments stay sorted), then compose a
+    *stable* argsort back through the old permutation.  Entries are
+    therefore (re)placed by the key (new code, previous position), which
+    is bitwise what ``refresh_index(warm_start=True)`` computes when the
+    clean codes are unchanged — in particular, delta-refresh with ALL
+    points dirty is bit-identical to a full warm-started refresh, and a
+    dirty point whose code did not change keeps its exact slot.  The
+    stable sort costs O(L·N log N) on packed uint32 codes — memcpy-rate
+    device work, dwarfed by the avoided re-embed + re-hash.
+    """
+    order = index.order
+    l, n = order.shape
+    iota = jnp.arange(n, dtype=jnp.int32)
+    # position of each point id in the old sorted order, per table
+    pos = jnp.zeros_like(order).at[
+        jnp.arange(l, dtype=jnp.int32)[:, None], order].set(iota[None])
+    pos_d = jnp.take(pos, dirty_ids.astype(jnp.int32), axis=1)  # (L, D)
+    permuted = jax.vmap(lambda sc, p, c: sc.at[p].set(c))(
+        index.sorted_codes, pos_d, dirty_codes)
+    delta = jnp.argsort(permuted, axis=1, stable=True).astype(jnp.int32)
+    new_order = jnp.take_along_axis(order, delta, axis=1)
+    new_sorted = jnp.take_along_axis(permuted, delta, axis=1)
+    return LSHIndex(index.projections, new_sorted, new_order)
+
+
+def hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
+                *, use_pallas: Optional[bool] = None,
+                interpret: bool = False) -> jax.Array:
+    """Public (L, N)-layout hashing entry: the delta-refresh re-hash path."""
+    return _hash_points(x, proj, params, use_pallas, interpret)
+
+
 def query_codes(index: LSHIndex, q: jax.Array, params: LSHParams) -> jax.Array:
     """Hash a query (d,) or batch (m, d) -> (L,) or (m, L) uint32."""
     return compute_codes(
@@ -182,7 +230,12 @@ def bucket_bounds_batched(index: LSHIndex, queries: jax.Array,
     kernel reads every sorted code, so for very large indexes probed by
     few queries the reference binary search is the faster path (see
     ``COUNTING_PROBE_MAX_POINTS_PER_QUERY``).  Pass ``use_pallas=True``
-    to force the kernel regardless.
+    to force the kernel regardless.  The dispatch-never-loses contract
+    is gated in CI: ``benchmarks/run.py tab_sampling_cost`` times the
+    dispatched path against the reference INTERLEAVED in one loop
+    (sequential loops once recorded machine-load drift as a phantom 9%
+    probe regression) and ``check_regression.py`` caps the ratio at
+    ``--probe-cap``.
     """
     if use_pallas is None:
         b = queries.shape[0] if queries.ndim == 2 else 1

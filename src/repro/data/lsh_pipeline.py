@@ -15,15 +15,43 @@ The paper's BERT recipe, integrated as a first-class pipeline feature:
     per-sample probabilities become importance weights 1/(p_i N) on the
     loss so gradients stay unbiased.
 
+DEVICE-RESIDENT STEP PATH: the token corpus is uploaded to device ONCE
+at pipeline build (``self.store``, lane-padded for the kernel gather;
+committed via ``dist.sharding.shard_store_device`` — mesh-replicated
+under a single-controller mesh), and every ``next_batch`` /
+``next_batch_multi`` is a single jitted on-device program
+(``core.sampler.sample_gather``): query hash -> fused bucket probe ->
+within-bucket draw -> token-row gather -> 1/(p·N) weight computation
+(the ``kernels/gather_weight`` Pallas kernel on TPU, its bit-identical
+XLA reference elsewhere).  No host numpy touches the per-step loop; the
+sharded composer concatenates sub-batches on device under the mesh
+(``dist.sharding.compose_sharded_batch`` — per-shard parts are adopted
+zero-copy as the shards of the global batch).
+
+REFRESH MODES (``refresh_mode``):
+  * ``"full"`` (default) — re-embed + re-hash the whole shard, the
+    original periodic-refresh semantics.
+  * ``"delta"`` — refresh cost proportional to drift, not to N: the
+    pipeline tracks which examples were VISITED since the last refresh
+    (a device-side dirty mask updated by every draw) plus a
+    drift-sampled remainder (``drift_frac`` of the shard, drawn from the
+    refresh key stream so restores stay deterministic), re-embeds and
+    re-hashes ONLY that subset, and merges the changed codes into the
+    sorted-code index through the previous ``order``
+    (``core.tables.refresh_index_delta`` — tie-stable, and bit-identical
+    to a full warm-started refresh when every row is dirty).  Dirty
+    counts are padded to power-of-two buckets so jit recompilation stays
+    bounded.  ``refresh(full=True)`` forces the full path at any time.
+
 OVERLAPPED REFRESH (double buffering): with ``refresh_async=True`` the
-periodic re-embed + re-hash runs on a host thread into a second buffer,
-launched ``refresh_lead`` steps before the swap boundary; the trainer's
-device steps keep running while the host hashes.  The swap happens at a
+periodic refresh runs on a host thread into a second buffer, launched
+``refresh_lead`` steps before the swap boundary; the trainer's device
+steps keep running while the refresh computes.  The swap happens at a
 fixed step boundary (the thread is joined there), so the batch sequence
-is bit-deterministic regardless of thread timing — the only semantic
-difference from the synchronous path is that features are embedded from
-the params as of ``refresh_lead`` steps before the boundary, which is
-exactly the paper's amortisation argument (features drift slowly).
+is bit-deterministic regardless of thread timing.  In delta mode the
+dirty mask is snapshotted (and reset) at LAUNCH time: examples visited
+during the lead window roll into the next refresh — the same
+features-drift-slowly amortisation argument as the lead itself.
 
 SHARD-BY-EXAMPLE SCALE-OUT (1000+ nodes): ``ShardedLSHPipeline`` gives
 each data-parallel group its own index over a contiguous corpus shard
@@ -45,10 +73,12 @@ per-refresh), never by chained ``split``.  The determinism contract is
 that any two pipelines restored at the same step draw bit-identical
 batch sequences (what elastic restarts rely on).  A restore does NOT in
 general replay the uninterrupted run: ``restore_at`` re-embeds features
-from the restored-step params and rebuilds the index canonically (fresh
-argsort, not the history-dependent warm-start chain), so batches match
-the uninterrupted run only when the embedded features are unchanged —
-e.g. params-independent feature hooks with no intervening refresh.
+from the restored-step params, rebuilds the index canonically (fresh
+argsort, not the history-dependent warm-start chain) and clears the
+dirty mask, so batches match the uninterrupted run only when the
+embedded features are unchanged — e.g. params-independent feature hooks
+(then every refresh, full or delta, is an index no-op and the two runs
+coincide bitwise; pinned by tests/test_sharded_lgd.py).
 """
 
 from __future__ import annotations
@@ -64,12 +94,19 @@ import numpy as np
 from repro.core import (
     LSHParams,
     build_index,
+    hash_points,
     refresh_index,
-    sample,
-    sample_batched,
+    refresh_index_delta,
+    sample_gather,
+    sample_gather_batched,
 )
 from repro.core.tables import LSHIndex
-from repro.dist.sharding import example_shard_bounds
+from repro.dist.sharding import (
+    compose_sharded_batch,
+    example_shard_bounds,
+    shard_store_device,
+)
+from repro.kernels import default_use_pallas
 
 # fold_in stream salts: one disjoint stream per random consumer, so a
 # pipeline's draw at (stream, counter) is independent of how many draws
@@ -77,6 +114,14 @@ from repro.dist.sharding import example_shard_bounds
 _SALT_BUILD = 0x0B11D
 _SALT_STEP = 0x057E9
 _SALT_REFRESH = 0x0F5E5
+
+
+def _dirty_bucket(n: int) -> int:
+    """Pad a dirty count to a power-of-two bucket (bounded recompiles)."""
+    b = 64
+    while b < n:
+        b <<= 1
+    return b
 
 
 @dataclasses.dataclass
@@ -90,14 +135,26 @@ class LSHPipelineConfig:
     interpret: bool = False
     # host-side double-buffered refresh: launch the re-embed + re-hash
     # ``refresh_lead`` steps before the swap boundary on a thread so
-    # hashing overlaps device compute.  Deterministic: the swap still
-    # happens exactly at the boundary (thread joined there).
+    # refresh work overlaps device compute.  Deterministic: the swap
+    # still happens exactly at the boundary (thread joined there).
     refresh_async: bool = False
     refresh_lead: int = 1
+    # "full": re-embed + re-hash the whole shard every refresh.
+    # "delta": re-embed + re-hash only the visited-since-last-refresh
+    # rows plus a drift-sampled ``drift_frac`` remainder, merged into
+    # the index through the previous order (cost ~ drift, not N).
+    refresh_mode: str = "full"
+    drift_frac: float = 0.05
     # normalise importance weights to mean 1 over the emitted batch
     # (keeps the LR scale of uniform sampling).  Sharded sub-pipelines
     # run with raw weights and normalise once globally.
     normalize_weights: bool = True
+
+    def __post_init__(self):
+        if self.refresh_mode not in ("full", "delta"):
+            raise ValueError(
+                f"refresh_mode must be 'full' or 'delta', "
+                f"got {self.refresh_mode!r}")
 
 
 class LSHSampledPipeline:
@@ -111,6 +168,10 @@ class LSHSampledPipeline:
         trainer pushes fresh params via ``set_params`` after every step,
         so queries always reflect the live model and refreshes re-embed
         with the params current at refresh-launch time.
+
+    ``store_device`` pins the device-resident token store (and hence all
+    per-step sampling compute) to a specific device — the sharded owner
+    passes each shard's DP-group device (``shard_store_device``).
     """
 
     def __init__(
@@ -123,14 +184,23 @@ class LSHSampledPipeline:
         feature_batch: int = 512,
         params: Any = None,
         example_offset: int = 0,
-        emit_numpy: bool = False,
+        store_device=None,
     ):
         self.cfg = config
-        # sharded sub-pipelines emit host numpy so the composer
-        # concatenates and uploads ONCE instead of S round-trips
-        self.emit_numpy = emit_numpy
         self.tokens = tokens
         self.n = tokens.shape[0]
+        # the device-resident example store: uploaded exactly once; every
+        # subsequent step gathers from it on device.  On the Pallas
+        # gather path the row width is lane-padded HERE, once, so the
+        # kernel wrapper's per-call pad is zero-width and compiles away
+        # (``row_width`` keeps the logical S+1 for slicing).
+        self.row_width = tokens.shape[1]
+        store = jnp.asarray(tokens, jnp.int32)
+        if (config.use_pallas if config.use_pallas is not None
+                else default_use_pallas()):
+            store = jnp.pad(store, ((0, 0), (0, (-self.row_width) % 128)))
+        self.store = (jax.device_put(store, store_device)
+                      if store_device is not None else store)
         self.feature_fn = feature_fn
         self.query_fn = query_fn
         self.feature_batch = feature_batch
@@ -145,6 +215,9 @@ class LSHSampledPipeline:
         self._refresh_count = 0
         self._refresh_thread: Optional[threading.Thread] = None
         self._refresh_box: Optional[dict] = None
+        self._track_dirty = (config.refresh_mode == "delta"
+                             and config.refresh_every > 0)
+        self._dirty = jnp.zeros((self.n,), jnp.bool_)
         self.features = self._compute_features()
         dim = self.features.shape[-1]
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
@@ -171,29 +244,90 @@ class LSHSampledPipeline:
             return self.feature_fn(params, chunk)
         return self.feature_fn(chunk)
 
-    def _compute_features(self, params: Any = None) -> jax.Array:
-        """Embed every local example; normalised for SimHash."""
-        params = self.params if params is None else params
-        outs = []
-        for i in range(0, self.n, self.feature_batch):
-            chunk = jnp.asarray(self.tokens[i:i + self.feature_batch, :-1])
-            outs.append(self._embed(chunk, params))
-        f = jnp.concatenate(outs, axis=0)
+    def _normalize(self, f: jax.Array) -> jax.Array:
         return f / jnp.maximum(
             jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-30)
 
-    def refresh(self):
+    def _compute_features(self, params: Any = None) -> jax.Array:
+        """Embed every local example; normalised for SimHash."""
+        params = self.params if params is None else params
+        w = self.row_width
+        outs = []
+        for i in range(0, self.n, self.feature_batch):
+            outs.append(self._embed(
+                self.store[i:i + self.feature_batch, :w - 1], params))
+        return self._normalize(jnp.concatenate(outs, axis=0))
+
+    def _embed_rows(self, ids: jax.Array, params: Any) -> jax.Array:
+        """Embed a gathered subset of rows (delta refresh), normalised.
+
+        Chunked exactly like ``_compute_features`` so an all-rows subset
+        produces bitwise the same features as a full re-embed.
+        """
+        rows = jnp.take(self.store, ids, axis=0)[:, :self.row_width - 1]
+        outs = []
+        for i in range(0, rows.shape[0], self.feature_batch):
+            outs.append(self._embed(rows[i:i + self.feature_batch], params))
+        return self._normalize(jnp.concatenate(outs, axis=0))
+
+    # -- refresh ------------------------------------------------------------
+
+    def _take_dirty(self) -> jax.Array:
+        """Snapshot and clear the dirty mask (refresh claims the dirt)."""
+        dirty, self._dirty = self._dirty, jnp.zeros((self.n,), jnp.bool_)
+        return dirty
+
+    def _delta_refresh_values(self, kr: jax.Array, params: Any,
+                              dirty: jax.Array, features: jax.Array,
+                              index: LSHIndex):
+        """(features, index) after a delta refresh of ``dirty`` rows.
+
+        Pure in its explicit inputs so the async thread can run it on a
+        launch-time snapshot.  The visited mask is widened by a
+        ``drift_frac`` Bernoulli draw from the refresh key stream —
+        deterministic per refresh index, so restores replay it — then
+        padded to a power-of-two id bucket (duplicate ids are benign:
+        identical rows re-embed to identical codes, and the scatter
+        writes identical values).
+        """
+        if self.cfg.drift_frac > 0.0:
+            kd = jax.random.fold_in(kr, 1)
+            dirty = jnp.logical_or(
+                dirty,
+                jax.random.bernoulli(kd, self.cfg.drift_frac, (self.n,)))
+        nd = int(jnp.sum(dirty))
+        if nd == 0:
+            return features, index
+        size = min(_dirty_bucket(nd), self.n)
+        ids = jnp.flatnonzero(dirty, size=size,
+                              fill_value=jnp.argmax(dirty))
+        feats_d = self._embed_rows(ids, params)
+        codes_d = hash_points(feats_d, index.projections, self.lsh,
+                              use_pallas=self.cfg.use_pallas,
+                              interpret=self.cfg.interpret)
+        return (features.at[ids].set(feats_d),
+                refresh_index_delta(index, ids, codes_d))
+
+    def refresh(self, full: Optional[bool] = None):
         """Re-embed + re-hash the local shard synchronously.
 
-        ``refresh_index`` re-sorts with the previous ``order`` as a warm
-        start (features drift slowly between refreshes), so the rebuilt
-        index double-buffers cleanly: unchanged codes keep their slots.
+        ``full=None`` follows ``cfg.refresh_mode``; ``full=True`` forces
+        the whole-shard path regardless of mode.  Both paths re-sort
+        through the previous ``order`` (warm start / delta merge), so
+        the rebuilt index double-buffers cleanly: unchanged codes keep
+        their slots.
         """
+        full = (self.cfg.refresh_mode != "delta") if full is None else full
         kr = jax.random.fold_in(self._refresh_stream, self._refresh_count)
-        self.features = self._compute_features()
-        self.index = refresh_index(
-            kr, self.index, self.features, self.lsh,
-            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+        dirty = self._take_dirty()
+        if full:
+            self.features = self._compute_features()
+            self.index = refresh_index(
+                kr, self.index, self.features, self.lsh,
+                use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+        else:
+            self.features, self.index = self._delta_refresh_values(
+                kr, self.params, dirty, self.features, self.index)
         self._refresh_count += 1
 
     def _launch_refresh(self):
@@ -202,17 +336,24 @@ class LSHSampledPipeline:
             return
         kr = jax.random.fold_in(self._refresh_stream, self._refresh_count)
         params = self.params          # snapshot: params as of launch step
-        old_index = self.index
+        full = self.cfg.refresh_mode != "delta"
+        dirty = self._take_dirty()    # delta dirt is claimed at launch
+        old_index, old_features = self.index, self.features
         box: dict = {}
 
         def work():
             try:
-                feats = self._compute_features(params)
-                box["features"] = feats
-                box["index"] = refresh_index(
-                    kr, old_index, feats, self.lsh,
-                    use_pallas=self.cfg.use_pallas,
-                    interpret=self.cfg.interpret)
+                if full:
+                    feats = self._compute_features(params)
+                    box["features"] = feats
+                    box["index"] = refresh_index(
+                        kr, old_index, feats, self.lsh,
+                        use_pallas=self.cfg.use_pallas,
+                        interpret=self.cfg.interpret)
+                else:
+                    box["features"], box["index"] = \
+                        self._delta_refresh_values(
+                            kr, params, dirty, old_features, old_index)
             except BaseException as e:   # surfaced at the swap boundary
                 box["error"] = e
 
@@ -277,7 +418,9 @@ class LSHSampledPipeline:
         warm-started order chain, which is history-dependent through tie
         layouts.  Two restores at the same step are therefore bitwise
         identical, and the fold_in key streams make every subsequent
-        batch identical across restores too.
+        batch identical across restores too.  The dirty mask restarts
+        empty: a restored pipeline re-embeds everything, so it owes no
+        deferred refresh work.
 
         ``rebuild=False`` skips the O(N) re-embed + re-hash; valid ONLY
         when the pipeline was just constructed from the restored params
@@ -290,6 +433,7 @@ class LSHSampledPipeline:
         self._step = step
         self._refresh_count = (
             0 if re <= 0 or step < 1 else (step - 1) // re)
+        self._dirty = jnp.zeros((self.n,), jnp.bool_)
         if rebuild:
             self.features = self._compute_features()
             self.index = build_index(
@@ -297,62 +441,64 @@ class LSHSampledPipeline:
                 use_pallas=self.cfg.use_pallas,
                 interpret=self.cfg.interpret)
 
-    def _assemble_batch(self, indices, probs) -> Dict[str, jax.Array]:
-        """Gather tokens + importance weights 1/(p*N) for one sample draw.
-
-        With ``normalize_weights`` the weights are scaled to mean 1 over
-        the batch (keeps the LR scale of uniform sampling; relative
-        weighting is what de-biases the adaptive sampling).  Sharded
-        composition runs with raw weights instead.
-        """
-        idx = np.asarray(indices)
-        chunk = self.tokens[idx]
-        w = 1.0 / (np.maximum(np.asarray(probs), self.cfg.p_floor) * self.n)
-        if self.cfg.normalize_weights:
-            w = w / max(w.mean(), 1e-30)
-        batch = {
-            "tokens": chunk[:, :-1],
-            "targets": chunk[:, 1:],
-            "loss_weights": w.astype(np.float32),
-            "example_ids": (idx + self.example_offset).astype(np.int32),
-        }
-        if self.emit_numpy:
-            return batch
-        return {k: jnp.asarray(v) for k, v in batch.items()}
-
     def _query(self) -> jax.Array:
         q = self.query_fn(self.params) if self._params_aware \
             else self.query_fn()
         return q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
 
+    def _mark_dirty(self, indices: jax.Array):
+        if self._track_dirty:
+            self._dirty = self._dirty.at[indices.reshape(-1)].set(True)
+
     def next_batch(self, query: Optional[jax.Array] = None
                    ) -> Dict[str, jax.Array]:
-        """Draw one batch; ``query`` (already normalised) lets a sharded
-        owner compute the shared global query once for all shards."""
+        """Draw one batch — a single jitted on-device program; ``query``
+        (already normalised) lets a sharded owner compute the shared
+        global query once for all shards."""
         sub = self._tick()
         q = self._query() if query is None else query
-        res = sample(sub, self.index, self.features, q, self.lsh,
-                     m=self.cfg.minibatch, use_pallas=self.cfg.use_pallas,
-                     interpret=self.cfg.interpret)
-        return self._assemble_batch(res.indices, res.probs)
+        gb = sample_gather(
+            sub, self.index, self.features, q, self.store, self.lsh,
+            m=self.cfg.minibatch, example_offset=self.example_offset,
+            p_floor=self.cfg.p_floor,
+            normalize=self.cfg.normalize_weights,
+            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
+            row_width=self.row_width)
+        self._mark_dirty(gb.indices)
+        return {
+            "tokens": gb.tokens,
+            "targets": gb.targets,
+            "loss_weights": gb.loss_weights,
+            "example_ids": gb.example_ids,
+        }
 
     def next_batch_multi(self, queries: jax.Array) -> list:
         """One batch per query row (multi-chain / perturbed-query training).
 
         ``queries``: (C, dim).  All C queries are hashed and probed by a
-        SINGLE fused bucket-probe pass (``sample_batched``), amortising
-        the L*K projection matmul across chains; each chain still gets
+        SINGLE fused bucket-probe pass, and all C·m rows are gathered and
+        weighted by a single gather+weight pass
+        (``core.sampler.sample_gather_batched``); each chain still gets
         exact per-sample Algorithm-1 probabilities under its own query.
         """
         sub = self._tick()
         qn = queries / jnp.maximum(
             jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-30)
-        res = sample_batched(
-            sub, self.index, self.features, qn, self.lsh,
-            m=self.cfg.minibatch, use_pallas=self.cfg.use_pallas,
-            interpret=self.cfg.interpret)             # fields (C, m)
-        return [self._assemble_batch(res.indices[c], res.probs[c])
-                for c in range(queries.shape[0])]
+        gb = sample_gather_batched(
+            sub, self.index, self.features, qn, self.store, self.lsh,
+            m=self.cfg.minibatch, example_offset=self.example_offset,
+            p_floor=self.cfg.p_floor,
+            normalize=self.cfg.normalize_weights,
+            use_pallas=self.cfg.use_pallas,
+            interpret=self.cfg.interpret,
+            row_width=self.row_width)                # fields (C, m, ...)
+        self._mark_dirty(gb.indices)
+        return [{
+            "tokens": gb.tokens[c],
+            "targets": gb.targets[c],
+            "loss_weights": gb.loss_weights[c],
+            "example_ids": gb.example_ids[c],
+        } for c in range(queries.shape[0])]
 
 
 class ShardedLSHPipeline:
@@ -361,11 +507,19 @@ class ShardedLSHPipeline:
     The global corpus (N examples) is split into ``n_shards`` contiguous
     shards (``example_shard_bounds``); shard s owns an independent
     ``LSHSampledPipeline`` keyed by ``fold_in(key, s)`` over its n_s
-    examples.  Every global batch is the concatenation of equal-size
-    per-shard sub-batches (minibatch must divide by n_shards), laid out
-    so dim 0 slices map shard s's examples to DP group s under
-    ``dist.sharding.batch_sharding`` — the DP all-reduce of per-device
-    weighted means is then exactly the average of per-shard estimates.
+    examples, with its token store uploaded once and committed via
+    ``shard_store_device`` — NOTE: under a single-controller mesh that
+    placement is MESH-REPLICATED (the mesh-sharded model params force
+    every embed/sample computation to span the mesh; budget HBM for
+    every store on every device).  True per-DP-group store residency is
+    the multi-controller deployment, where each process constructs only
+    its own shard's pipeline.  Every global batch is the concatenation
+    of equal-size per-shard sub-batches (minibatch must divide by
+    n_shards), laid out so dim 0 slices map shard s's examples to DP
+    group s under ``dist.sharding.batch_sharding`` — with a mesh the
+    composition is ``compose_sharded_batch``: the per-shard device
+    arrays are adopted zero-copy as the shards of the global batch, so
+    batch assembly costs no host round-trip and no cross-host traffic.
 
     UNBIASEDNESS: shard s's local estimator (1/m_s) sum_j g_j / (p_j n_s)
     is unbiased for the shard mean; the emitted global weight is the
@@ -379,7 +533,9 @@ class ShardedLSHPipeline:
     cross-shard) weighting.
 
     Each shard refreshes its own index on the shared schedule — with
-    ``refresh_async`` all S host-side re-hashes overlap device compute.
+    ``refresh_async`` all S refreshes overlap device compute, and with
+    ``refresh_mode="delta"`` each shard re-embeds only its own visited
+    rows.
     """
 
     def __init__(
@@ -411,7 +567,8 @@ class ShardedLSHPipeline:
             self.shards.append(LSHSampledPipeline(
                 jax.random.fold_in(key, s), tokens[lo:hi], feature_fn,
                 query_fn, shard_cfg, feature_batch=feature_batch,
-                params=params, example_offset=lo, emit_numpy=True))
+                params=params, example_offset=lo,
+                store_device=shard_store_device(mesh, s, n_shards)))
 
     @property
     def params(self):
@@ -430,9 +587,15 @@ class ShardedLSHPipeline:
         for p in self.shards:
             p.finalize()
 
-    def refresh(self):
+    def refresh(self, full: Optional[bool] = None):
         for p in self.shards:
-            p.refresh()
+            p.refresh(full=full)
+
+    def _compose(self, parts: list) -> jax.Array:
+        if self.mesh is not None and isinstance(self.mesh,
+                                                jax.sharding.Mesh):
+            return compose_sharded_batch(parts, self.mesh)
+        return jnp.concatenate(parts)
 
     def next_batch(self) -> Dict[str, jax.Array]:
         # the global query is shard-independent: compute + normalise it
@@ -440,35 +603,22 @@ class ShardedLSHPipeline:
         q = self.shards[0]._query()
         subs = [p.next_batch(query=q) for p in self.shards]
         m_s = self.cfg.minibatch // self.n_shards
-        parts: Dict[str, list] = {k: [] for k in
-                                  ("tokens", "targets", "loss_weights",
-                                   "example_ids")}
-        shard_ids = []
-        for s, (p, b) in enumerate(zip(self.shards, subs)):
-            # local 1/(p n_s) -> global S/(p N): each sample stands in
-            # for N/S corpus examples under the batch mean.
-            scale = p.n * self.n_shards / self.n
-            parts["loss_weights"].append(
-                np.asarray(b["loss_weights"], np.float64) * scale)
-            for k in ("tokens", "targets", "example_ids"):
-                parts[k].append(np.asarray(b[k]))
-            shard_ids.append(np.full((m_s,), s, np.int32))
-        w = np.concatenate(parts["loss_weights"])
-        if self.cfg.normalize_weights:
-            w = w / max(w.mean(), 1e-30)
         batch = {
-            "tokens": jnp.asarray(np.concatenate(parts["tokens"])),
-            "targets": jnp.asarray(np.concatenate(parts["targets"])),
-            "loss_weights": jnp.asarray(w, jnp.float32),
-            "example_ids": jnp.asarray(
-                np.concatenate(parts["example_ids"]), jnp.int32),
-            "shard_ids": jnp.asarray(np.concatenate(shard_ids)),
+            k: self._compose([b[k] for b in subs])
+            for k in ("tokens", "targets", "example_ids")
         }
-        if self.mesh is not None and isinstance(self.mesh,
-                                                jax.sharding.Mesh):
-            from repro.dist.sharding import batch_sharding
-            sh = batch_sharding(self.mesh)
-            batch = {k: jax.device_put(v, sh) for k, v in batch.items()}
+        # local 1/(p n_s) -> global S/(p N): each sample stands in for
+        # N/S corpus examples under the batch mean.  Scaled per shard on
+        # the shard's device, composed, then normalised globally — all
+        # device ops.
+        w = self._compose([
+            b["loss_weights"] * (p.n * self.n_shards / self.n)
+            for p, b in zip(self.shards, subs)])
+        if self.cfg.normalize_weights:
+            w = w / jnp.maximum(jnp.mean(w), 1e-30)
+        batch["loss_weights"] = w.astype(jnp.float32)
+        batch["shard_ids"] = self._compose([
+            jnp.full((m_s,), s, jnp.int32) for s in range(self.n_shards)])
         return batch
 
 

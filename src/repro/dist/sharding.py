@@ -194,3 +194,62 @@ def tree_param_shardings(params: Any, mesh):
 def batch_sharding(mesh):
     """Batch tensors: dim 0 over the data axes, rest replicated."""
     return NamedSharding(mesh, P(_data_axes(mesh)))
+
+
+# ---------------------------------------------------------------------------
+# device-resident example stores (LGD shard-by-example)
+# ---------------------------------------------------------------------------
+
+def shard_store_device(mesh, shard_id: int, n_shards: int):
+    """Placement for corpus shard ``shard_id``'s token/feature store.
+
+    The LGD pipeline uploads each shard's example store ONCE at build
+    time; all per-step sampling, gathering and weighting then runs where
+    the data lives — no host round-trip.  Under a single-controller mesh
+    the store must be committed MESH-WIDE (replicated): the feature/query
+    hooks take the model params, which are sharded across the whole
+    mesh, and jit refuses inputs committed to mismatched device sets —
+    a store pinned to one device cannot feed a mesh-spanning embed.
+    (True per-DP-group residency is the multi-controller deployment,
+    where each process only constructs its own shard's pipeline and the
+    store never leaves the group's hosts; ``shard_id``/``n_shards``
+    stay in the signature for that path.)  Returns None without a mesh
+    (single-device hosts: the default device is the only choice).
+    """
+    del shard_id, n_shards
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P())
+
+
+def compose_sharded_batch(parts, mesh):
+    """Assemble per-shard sub-batches into one global batch — on device.
+
+    ``parts``: equal-length dim-0 slices, part s committed to shard s's
+    device (see ``shard_store_device``).  The composed array is exactly
+    the concatenation under ``batch_sharding(mesh)``, built with
+    ``jax.make_array_from_single_device_arrays`` so a part that already
+    sits on its DP group's device is adopted ZERO-COPY; the only
+    transfers are device-to-device (model-axis replicas, or shard counts
+    that do not match the data-parallel degree).  No host numpy anywhere.
+    """
+    sh = batch_sharding(mesh)
+    rows = sum(p.shape[0] for p in parts)
+    shape = (rows,) + tuple(parts[0].shape[1:])
+    per = rows // len(parts)
+
+    def pieces(start, stop):
+        out, s = [], start // per
+        while start < stop:
+            take = min(stop, (s + 1) * per) - start
+            out.append(parts[s][start - s * per:start - s * per + take])
+            start, s = start + take, s + 1
+        return out
+
+    arrs = []
+    for dev, idx in sh.addressable_devices_indices_map(shape).items():
+        start = idx[0].start or 0
+        stop = idx[0].stop if idx[0].stop is not None else rows
+        ps = [jax.device_put(x, dev) for x in pieces(start, stop)]
+        arrs.append(ps[0] if len(ps) == 1 else jax.numpy.concatenate(ps))
+    return jax.make_array_from_single_device_arrays(shape, sh, arrs)

@@ -1,0 +1,3 @@
+from .kernel import gather_weight_pallas  # noqa: F401
+from .ops import gather_weight  # noqa: F401
+from .ref import gather_weight_ref  # noqa: F401

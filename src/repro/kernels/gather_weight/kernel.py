@@ -1,0 +1,88 @@
+"""Fused gather+weight Pallas TPU kernel: token-row gather + 1/(p·N) weights.
+
+The last host-resident op of the LGD step path: Algorithm 1 emits m
+sampled example ids and their exact probabilities; the batch the trainer
+consumes is the gathered token rows plus the importance weights
+
+    w_j = 1 / (max(p_j, p_floor) * N)
+
+that de-bias the adaptive draw.  Before this kernel the gather ran on
+the host (``np.asarray`` per batch — a device->host->device round-trip
+every step); here the token store stays resident in HBM and the whole
+batch assembly is one kernel launch appended to the step's program.
+
+HARDWARE ADAPTATION.  A row gather with data-dependent row ids cannot be
+expressed with static BlockSpecs alone — the block index must be
+computed from the sampled ids.  This is the canonical scalar-prefetch
+pattern: the ids are a ``PrefetchScalarGridSpec`` scalar operand, so the
+index_map of the token-store input reads ``idx_ref[i]`` and DMAs exactly
+the sampled row into VMEM for grid step i.  The weight is computed in
+the same step on the VPU from the (1, 1) probability block — the
+probabilities never round-trip anywhere else.
+
+Block layout:
+  grid   = (m,)                  — one sampled row per step
+  idx    : (m,) int32            — scalar-prefetch operand (SMEM)
+  probs  : (1, 1) f32            — probability block of row i
+  store  : (1, S_pad) int32      — token row idx[i], selected by index_map
+  rows   : (1, S_pad) int32      — output tile i
+  w      : (1, 1) f32            — output weight i
+
+m is tiny (a minibatch, 8..512), S_pad is the 128-padded row width; the
+per-step VMEM footprint is a single token row, and the m DMAs are issued
+back-to-back by the pipelined grid.  The XLA reference (``ref.py``) is
+``store[idx]`` + the same arithmetic — bit-identical, and the path CPU
+hosts auto-dispatch to (see ``ops.gather_weight``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_weight_kernel(idx_ref, probs_ref, store_ref, rows_ref, w_ref,
+                          *, n_points: int, p_floor: float):
+    del idx_ref  # consumed by the index_map; the body only copies blocks
+    rows_ref[...] = store_ref[...]
+    p = jnp.maximum(probs_ref[0, 0], p_floor)
+    w_ref[0, 0] = 1.0 / (p * n_points)
+
+
+def gather_weight_pallas(
+    store: jax.Array,       # (N, S_pad) int32 token rows, S_pad % 128 == 0
+    idx: jax.Array,         # (m,) int32 sampled row ids
+    probs: jax.Array,       # (m, 1) f32 Algorithm-1 probabilities
+    *,
+    p_floor: float,
+    interpret: bool = False,
+):
+    """Fused gather+weight: returns (rows (m, S_pad) int32, w (m, 1) f32)."""
+    n, s_pad = store.shape
+    m = idx.shape[0]
+    assert probs.shape == (m, 1), (probs.shape, m)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, s_pad), lambda i, idx_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s_pad), lambda i, idx_ref: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, idx_ref: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_weight_kernel, n_points=n, p_floor=p_floor),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, s_pad), jnp.int32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(idx.astype(jnp.int32), probs.astype(jnp.float32), store)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the fused gather+weight kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_weight_ref(store: jax.Array, idx: jax.Array, probs: jax.Array,
+                      *, p_floor: float):
+    """rows = store[idx]; w = 1/(max(p, p_floor) * N).
+
+    store: (N, S) int32; idx: (m,) int32; probs: (m,) f32.
+    Returns (rows (m, S) int32, w (m,) f32).
+    """
+    rows = jnp.take(store, idx, axis=0)
+    w = 1.0 / (jnp.maximum(probs.astype(jnp.float32), p_floor)
+               * store.shape[0])
+    return rows, w

@@ -22,7 +22,11 @@ LGD sampler hook: pass ``sampler=`` (an ``LSHSampledPipeline`` /
   * draws batches from ``sampler.next_batch`` — importance weights
     1/(p_i N) ride in ``batch["loss_weights"]`` and are applied INSIDE
     the jitted loss (``models.layers.chunked_cross_entropy``), keeping
-    the adaptive-sampling gradient unbiased;
+    the adaptive-sampling gradient unbiased.  Batches arrive as DEVICE
+    arrays (the pipeline's sample->gather->weight program runs on
+    device against its resident token store), so drawing costs only the
+    dispatch of one compiled call — there is no host-side batch
+    assembly or re-upload anywhere in the loop;
   * pushes fresh params via ``sampler.set_params`` after every step, so
     queries track the live model and the periodic index refresh (which
     the pipeline runs on a host thread, double-buffered) re-embeds from
@@ -30,6 +34,13 @@ LGD sampler hook: pass ``sampler=`` (an ``LSHSampledPipeline`` /
   * forces ``donate=False`` (the sampler's feature/query closures read
     live param buffers) and, on restore, rewinds the sampler with
     ``restore_at(step)`` instead of replaying consumed batches.
+
+Sampler-overhead accounting: the host-blocking time spent drawing every
+batch is accumulated in ``data_seconds`` (total loop wall time in
+``loop_seconds``); ``sampler_overhead`` is their ratio and per-entry
+``metrics_history`` carries ``data_dt`` (the LAST draw's host-blocking
+seconds, per-step like ``dt``) — the number the device-resident data
+path is meant to drive toward zero.
 """
 
 from __future__ import annotations
@@ -103,6 +114,9 @@ class Trainer:
         self._ckpt = ckpt.AsyncCheckpointer()
         self._ewma_dt = None
         self.straggler_steps = 0
+        self.data_seconds = 0.0     # host-blocking batch-draw time (total)
+        self.loop_seconds = 0.0     # total run() wall time
+        self._last_draw_dt = 0.0    # host-blocking time of the last draw
         loss_fn = loss_fn or (lambda p, b: lm_loss(p, cfg, b))
 
         clip = tcfg.grad_clip
@@ -205,6 +219,19 @@ class Trainer:
 
     # -- loop ----------------------------------------------------------------
 
+    @property
+    def sampler_overhead(self) -> float:
+        """Fraction of loop wall time spent blocked on batch draws."""
+        return self.data_seconds / max(self.loop_seconds, 1e-12)
+
+    def _draw(self):
+        t0 = time.time()
+        try:
+            return next(self.batches)
+        finally:
+            self._last_draw_dt = time.time() - t0
+            self.data_seconds += self._last_draw_dt
+
     def run(self, n_steps: int) -> Dict[str, list]:
         losses = []
         if n_steps <= 0:
@@ -212,7 +239,8 @@ class Trainer:
             # and a no-op run() must not tick the sampler's key stream.
             return {"losses": losses}
         target = self.step + n_steps
-        next_batch = next(self.batches)          # double buffering
+        t_loop = time.time()
+        next_batch = self._draw()                # double buffering
         while self.step < target:
             t0 = time.time()
             batch = next_batch
@@ -228,13 +256,19 @@ class Trainer:
                 # BEFORE drawing the next batch, so its query reflects
                 # the live model.
                 self._sampler.set_params(self.params)
+                # the draw's query depends on the step's output params,
+                # and dispatching on a pending input blocks on backends
+                # without cross-dependency async (CPU) — sync the loss
+                # first so data_seconds measures the DRAW, not the
+                # in-flight step it would otherwise absorb.
+                l = float(l)
             if self.step + 1 < target:
                 # prefetch ONLY if another step will run: batch k must
                 # train step k, never be thrown away at loop exit —
                 # otherwise chunked run() calls desync the data stream
                 # from self.step and restore-at-step resume diverges.
                 try:
-                    next_batch = next(self.batches)  # overlap device step
+                    next_batch = self._draw()        # overlap device step
                 except StopIteration:
                     next_batch = None
             else:
@@ -251,6 +285,7 @@ class Trainer:
                 self.metrics_history.append({
                     "step": self.step, "loss": l,
                     "grad_norm": float(gnorm), "dt": dt,
+                    "data_dt": self._last_draw_dt,
                     "stragglers": self.straggler_steps,
                 })
             if self.tcfg.ckpt_dir and \
@@ -258,4 +293,5 @@ class Trainer:
                 self.save()
             if next_batch is None:
                 break
+        self.loop_seconds += time.time() - t_loop
         return {"losses": losses}

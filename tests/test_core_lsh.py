@@ -18,8 +18,11 @@ from repro.core import (
     collision_probability_quadratic,
     compute_codes,
     exact_inclusion_probability,
+    hash_points,
     make_projections,
     query_codes,
+    refresh_index,
+    refresh_index_delta,
     regression_query,
     sample,
     sample_drain,
@@ -148,6 +151,73 @@ class TestIndex:
         for t in range(p.l):
             members = np.asarray(index.order[t, int(lo[t]):int(hi[t])])
             assert 13 in members
+
+
+# ---------------------------------------------------------------------------
+# delta refresh (segmented merge through the previous order)
+# ---------------------------------------------------------------------------
+
+class TestDeltaRefresh:
+    def _setup(self, n=257, d=16, k=4, l=8):
+        p = LSHParams(k=k, l=l, dim=d, family="dense")
+        x = _unit_rows(jax.random.PRNGKey(11), n, d)
+        index = build_index(jax.random.PRNGKey(12), x, p)
+        x2 = _unit_rows(jax.random.PRNGKey(13), n, d)
+        return index, x, x2, p
+
+    def test_all_dirty_bitwise_equals_full_warm_start(self):
+        index, _, x2, p = self._setup()
+        full = refresh_index(KEY, index, x2, p, use_pallas=False)
+        codes = hash_points(x2, index.projections, p, use_pallas=False)
+        got = refresh_index_delta(
+            index, jnp.arange(x2.shape[0], dtype=jnp.int32), codes)
+        np.testing.assert_array_equal(np.asarray(full.order),
+                                      np.asarray(got.order))
+        np.testing.assert_array_equal(np.asarray(full.sorted_codes),
+                                      np.asarray(got.sorted_codes))
+
+    def test_partial_dirty_equals_full_refresh_of_mixed_features(self):
+        """Merging D changed rows must equal the full warm-started
+        refresh of the corpus where exactly those rows changed —
+        including duplicate (padding) ids in the dirty set."""
+        index, x, x2, p = self._setup()
+        changed = jnp.array([0, 3, 17, 100, 256], jnp.int32)
+        dirty = jnp.concatenate([changed,
+                                 jnp.array([3, 3, 17], jnp.int32)])  # pad
+        x_mixed = x.at[changed].set(x2[changed])
+        want = refresh_index(KEY, index, x_mixed, p, use_pallas=False)
+        codes_d = hash_points(x_mixed[dirty], index.projections, p,
+                              use_pallas=False)
+        got = refresh_index_delta(index, dirty, codes_d)
+        np.testing.assert_array_equal(np.asarray(want.order),
+                                      np.asarray(got.order))
+        np.testing.assert_array_equal(np.asarray(want.sorted_codes),
+                                      np.asarray(got.sorted_codes))
+
+    def test_unchanged_codes_keep_slots(self):
+        """A dirty row whose code did not change keeps its exact slot
+        (the tie-stability / double-buffer contract)."""
+        index, x, _, p = self._setup()
+        dirty = jnp.array([5, 42, 99], jnp.int32)
+        codes_d = hash_points(x[dirty], index.projections, p,
+                              use_pallas=False)   # same features -> same codes
+        got = refresh_index_delta(index, dirty, codes_d)
+        np.testing.assert_array_equal(np.asarray(index.order),
+                                      np.asarray(got.order))
+        np.testing.assert_array_equal(np.asarray(index.sorted_codes),
+                                      np.asarray(got.sorted_codes))
+
+    def test_merge_preserves_permutation_and_sortedness(self):
+        index, _, x2, p = self._setup()
+        dirty = jnp.arange(0, 257, 3, dtype=jnp.int32)
+        codes_d = hash_points(x2[dirty], index.projections, p,
+                              use_pallas=False)
+        got = refresh_index_delta(index, dirty, codes_d)
+        for t in range(p.l):
+            assert sorted(np.asarray(got.order[t]).tolist()) == \
+                list(range(257))
+        assert bool(jnp.all(jnp.diff(
+            got.sorted_codes.astype(jnp.int64), axis=1) >= 0))
 
 
 # ---------------------------------------------------------------------------

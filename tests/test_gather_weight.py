@@ -1,0 +1,176 @@
+"""Parity + contract tests for the fused gather+weight kernel and the
+device-resident draw entry points built on it."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LSHParams,
+    build_index,
+    sample,
+    sample_batched,
+    sample_gather,
+    sample_gather_batched,
+)
+from repro.kernels.gather_weight import gather_weight, gather_weight_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _store(n, s, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (n, s), 0, 997,
+                              jnp.int32)
+
+
+class TestGatherWeightKernel:
+    @pytest.mark.parametrize("n,s,m", [
+        (256, 128, 16),     # lane-exact row width
+        (200, 33, 8),       # padding needed (33 -> 128)
+        (1000, 17, 64),     # short rows, bigger batch
+        (64, 257, 1),       # single-sample draw, two-lane rows
+    ])
+    def test_matches_ref(self, n, s, m):
+        store = _store(n, s, seed=n + s)
+        idx = jax.random.randint(jax.random.PRNGKey(2), (m,), 0, n,
+                                 jnp.int32)
+        probs = jax.random.uniform(jax.random.PRNGKey(3), (m,),
+                                   minval=1e-6, maxval=0.2)
+        rows_k, w_k = gather_weight(store, idx, probs,
+                                    use_pallas=True, interpret=True)
+        rows_r, w_r = gather_weight_ref(store, idx, probs, p_floor=1e-8)
+        np.testing.assert_array_equal(np.asarray(rows_k),
+                                      np.asarray(rows_r))
+        np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+
+    def test_p_floor_clips_tiny_probabilities(self):
+        store = _store(32, 8)
+        idx = jnp.array([0, 1], jnp.int32)
+        probs = jnp.array([0.0, 0.5], jnp.float32)
+        for up in (False, True):
+            _, w = gather_weight(store, idx, probs, p_floor=1e-4,
+                                 use_pallas=up, interpret=up)
+            np.testing.assert_allclose(
+                np.asarray(w), [1.0 / (1e-4 * 32), 1.0 / (0.5 * 32)],
+                rtol=1e-6)
+
+    def test_duplicate_indices(self):
+        store = _store(32, 8)
+        idx = jnp.array([5, 5, 5, 9], jnp.int32)
+        probs = jnp.full((4,), 0.1, jnp.float32)
+        for up in (False, True):
+            rows, _ = gather_weight(store, idx, probs,
+                                    use_pallas=up, interpret=up)
+            np.testing.assert_array_equal(np.asarray(rows[:3]),
+                                          np.asarray(store[jnp.array([5] * 3)]))
+
+    def test_shape_validation(self):
+        store = _store(32, 8)
+        with pytest.raises(ValueError):
+            gather_weight(store, jnp.zeros((4,), jnp.int32),
+                          jnp.zeros((5,)), use_pallas=False)
+
+
+class TestSampleGather:
+    def _setup(self, n=300, d=12, s=10):
+        p = LSHParams(k=4, l=8, dim=d, family="dense")
+        x = jax.random.normal(jax.random.PRNGKey(4), (n, d))
+        x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+        index = build_index(jax.random.PRNGKey(5), x, p)
+        store = _store(n, s, seed=6)
+        return index, x, p, store
+
+    def test_matches_separate_sample_plus_gather(self):
+        """sample_gather == sample() then gather: same indices/probs, and
+        the gathered rows + weights are exactly the reference assembly."""
+        index, x, p, store = self._setup()
+        k = jax.random.PRNGKey(7)
+        gb = sample_gather(k, index, x, x[0], store, p, m=16,
+                           example_offset=50, use_pallas=False)
+        res = sample(k, index, x, x[0], p, m=16, use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(gb.indices),
+                                      np.asarray(res.indices))
+        np.testing.assert_array_equal(np.asarray(gb.probs),
+                                      np.asarray(res.probs))
+        np.testing.assert_array_equal(
+            np.asarray(gb.tokens), np.asarray(store)[res.indices, :-1])
+        np.testing.assert_array_equal(
+            np.asarray(gb.targets), np.asarray(store)[res.indices, 1:])
+        np.testing.assert_array_equal(
+            np.asarray(gb.example_ids), np.asarray(res.indices) + 50)
+        w = 1.0 / (np.maximum(np.asarray(res.probs), 1e-8) * x.shape[0])
+        np.testing.assert_allclose(
+            np.asarray(gb.loss_weights), w / w.mean(), rtol=1e-6)
+
+    def test_raw_weights_without_normalize(self):
+        index, x, p, store = self._setup()
+        gb = sample_gather(jax.random.PRNGKey(8), index, x, x[1], store, p,
+                           m=8, normalize=False, use_pallas=False)
+        w = 1.0 / (np.maximum(np.asarray(gb.probs), 1e-8) * x.shape[0])
+        np.testing.assert_allclose(np.asarray(gb.loss_weights), w,
+                                   rtol=1e-6)
+
+    def test_batched_matches_sample_batched(self):
+        index, x, p, store = self._setup()
+        qs = x[:3]
+        k = jax.random.PRNGKey(9)
+        gb = sample_gather_batched(k, index, x, qs, store, p, m=4,
+                                   use_pallas=False)
+        res = sample_batched(k, index, x, qs, p, m=4, use_pallas=False)
+        assert gb.tokens.shape == (3, 4, store.shape[1] - 1)
+        np.testing.assert_array_equal(np.asarray(gb.indices),
+                                      np.asarray(res.indices))
+        # per-chain mean-1 normalisation
+        np.testing.assert_allclose(
+            np.asarray(gb.loss_weights).mean(axis=1), 1.0, rtol=1e-5)
+
+    def test_kernel_and_ref_paths_agree_end_to_end(self):
+        """Dispatch parity: identical integer draw, float fields equal up
+        to compile-order rounding (the two paths are different XLA
+        programs, so cp/weight floats may differ by ~1 ulp)."""
+        index, x, p, store = self._setup()
+        k = jax.random.PRNGKey(10)
+        ref = sample_gather(k, index, x, x[2], store, p, m=8,
+                            use_pallas=False)
+        ker = sample_gather(k, index, x, x[2], store, p, m=8,
+                            use_pallas=True, interpret=True)
+        for name in ("tokens", "targets", "example_ids", "indices",
+                     "fallback"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(ref, name)),
+                np.asarray(getattr(ker, name)))
+        np.testing.assert_allclose(np.asarray(ref.probs),
+                                   np.asarray(ker.probs), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(ref.loss_weights),
+                                   np.asarray(ker.loss_weights), rtol=1e-5)
+
+    def test_pipeline_pads_store_once_for_kernel_path(self):
+        """A use_pallas pipeline lane-pads its device store at BUILD (so
+        the kernel wrapper's per-call pad is zero-width) and still draws
+        batches identical to the reference pipeline, with logical-width
+        token rows."""
+        from repro.data import LSHPipelineConfig, LSHSampledPipeline
+        embed = jax.random.normal(jax.random.PRNGKey(1), (50, 16))
+        params = {"e": embed}
+        tokens = np.asarray(jax.random.randint(
+            jax.random.PRNGKey(2), (64, 9), 0, 50), np.int32)
+        ffn = lambda p, c: jnp.mean(p["e"][c], axis=1)      # noqa: E731
+        qfn = lambda p: jnp.ones((16,))                      # noqa: E731
+
+        def mk(up, itp):
+            return LSHSampledPipeline(
+                jax.random.PRNGKey(7), tokens, ffn, qfn,
+                LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=3,
+                                  use_pallas=up, interpret=itp),
+                params=params)
+
+        ref, ker = mk(False, False), mk(True, True)
+        assert ker.store.shape == (64, 128)        # padded once at build
+        assert ref.store.shape == (64, 9)
+        for _ in range(7):                 # crosses a refresh boundary
+            br, bk = ref.next_batch(), ker.next_batch()
+            assert bk["tokens"].shape == (8, 8)
+            for k in ("example_ids", "tokens", "targets"):
+                np.testing.assert_array_equal(np.asarray(br[k]),
+                                              np.asarray(bk[k]))

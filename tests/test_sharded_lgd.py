@@ -153,6 +153,149 @@ class TestShardedBatches:
             _pipe(n_shards=3, minibatch=16)
 
 
+class TestDeviceResidentBatches:
+    def test_next_batch_never_touches_host_numpy(self, monkeypatch):
+        """The per-step path must be pure device work: a batch draw that
+        calls ANY host-numpy function fails this test, and every emitted
+        field must be a jax.Array (not a host ndarray)."""
+        import repro.data.lsh_pipeline as L
+        pipe = _pipe(refresh_every=0)
+        pipe.next_batch()                  # warm up compile caches
+        monkeypatch.setattr(L, "np", _NumpyGuardModule())
+        b = pipe.next_batch()
+        for k, v in b.items():
+            assert isinstance(v, jax.Array), (k, type(v))
+            assert not isinstance(v, np.ndarray), k
+
+    def test_refresh_boundary_also_numpy_free(self, monkeypatch):
+        """Crossing a (sync, full) refresh boundary stays off host numpy."""
+        import repro.data.lsh_pipeline as L
+        pipe = _pipe(refresh_every=2)
+        for _ in range(2):
+            pipe.next_batch()
+        monkeypatch.setattr(L, "np", _NumpyGuardModule())
+        pipe.next_batch()                  # step 2: refresh fires here
+
+    def test_single_pipeline_batch_is_device_resident(self, monkeypatch):
+        from repro.data import LSHSampledPipeline
+        import repro.data.lsh_pipeline as L
+        pipe = LSHSampledPipeline(
+            jax.random.PRNGKey(3), _tokens(n=64), feature_fn, query_fn,
+            LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=0),
+            params=PARAMS)
+        pipe.next_batch()
+        monkeypatch.setattr(L, "np", _NumpyGuardModule())
+        b = pipe.next_batch()
+        assert all(isinstance(v, jax.Array) for v in b.values())
+        multi = pipe.next_batch_multi(jnp.stack([PARAMS["q"], -PARAMS["q"]]))
+        assert len(multi) == 2
+        assert all(isinstance(v, jax.Array)
+                   for m in multi for v in m.values())
+
+
+class _NumpyGuardModule:
+    def __getattr__(self, name):
+        raise AssertionError(
+            f"host numpy.{name} called inside the step path")
+
+
+class TestDeltaRefresh:
+    def test_all_dirty_delta_bitwise_equals_full_refresh(self):
+        """refresh(full=False) with every row dirty must produce the
+        bit-exact index and features of refresh(full=True)."""
+        tokens = _tokens(n=128, seed=8)
+        cfg = LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=0,
+                                refresh_mode="delta", drift_frac=0.0)
+        from repro.data import LSHSampledPipeline
+        a = LSHSampledPipeline(jax.random.PRNGKey(4), tokens, feature_fn,
+                               query_fn, cfg, params=PARAMS)
+        b = LSHSampledPipeline(jax.random.PRNGKey(4), tokens, feature_fn,
+                               query_fn, cfg, params=PARAMS)
+        a._dirty = jnp.ones((a.n,), jnp.bool_)     # mark ALL rows dirty
+        a.refresh(full=False)
+        b.refresh(full=True)
+        assert a._refresh_count == b._refresh_count == 1
+        np.testing.assert_array_equal(np.asarray(a.index.order),
+                                      np.asarray(b.index.order))
+        np.testing.assert_array_equal(np.asarray(a.index.sorted_codes),
+                                      np.asarray(b.index.sorted_codes))
+        np.testing.assert_array_equal(np.asarray(a.features),
+                                      np.asarray(b.features))
+
+    def test_delta_mode_draws_match_full_mode_when_features_static(self):
+        """With params-independent features a delta refresh is an index
+        no-op (codes unchanged -> every row keeps its slot), so delta-
+        and full-mode pipelines draw bit-identical batch sequences
+        across refresh boundaries."""
+        full = _pipe(refresh_every=5)
+        delta = _pipe(refresh_every=5, refresh_mode="delta",
+                      drift_frac=0.25)
+        for _ in range(17):
+            bf, bd = full.next_batch(), delta.next_batch()
+            np.testing.assert_array_equal(np.asarray(bf["example_ids"]),
+                                          np.asarray(bd["example_ids"]))
+            np.testing.assert_array_equal(np.asarray(bf["loss_weights"]),
+                                          np.asarray(bd["loss_weights"]))
+        assert all(p._refresh_count >= 3 for p in delta.shards)
+
+    def test_restored_delta_pipeline_replays_uninterrupted_run(self):
+        """fold_in-salt contract under delta refresh: a pipeline rebuilt
+        at step t (canonical build + empty dirty mask) draws the exact
+        batches of the uninterrupted delta-mode run, params unchanged —
+        every delta refresh re-hashes to identical codes, so both order
+        chains stay at the canonical layout."""
+        tokens = _tokens(n=120, seed=9)
+        cfg = LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=4,
+                                refresh_mode="delta", drift_frac=0.3)
+        live = ShardedLSHPipeline(jax.random.PRNGKey(15), tokens,
+                                  feature_fn, query_fn, cfg, n_shards=2,
+                                  params=PARAMS)
+        for _ in range(9):                 # crosses two refresh boundaries
+            live.next_batch()
+        restored = rebuild_sharded_pipeline(
+            jax.random.PRNGKey(15), tokens, feature_fn, query_fn, cfg,
+            step=9, n_shards=2, params=PARAMS)
+        assert all(p._refresh_count == 2 for p in restored.shards)
+        for _ in range(8):                 # crosses another boundary
+            bl, br = live.next_batch(), restored.next_batch()
+            np.testing.assert_array_equal(np.asarray(bl["example_ids"]),
+                                          np.asarray(br["example_ids"]))
+            np.testing.assert_array_equal(np.asarray(bl["loss_weights"]),
+                                          np.asarray(br["loss_weights"]))
+
+    def test_async_delta_refresh_is_deterministic(self):
+        """Two async delta pipelines (same key) stay bitwise in lock-step
+        through overlapped refreshes — thread timing must not leak."""
+        mk = lambda: _pipe(refresh_every=4, refresh_mode="delta",   # noqa: E731
+                           refresh_async=True, refresh_lead=2,
+                           drift_frac=0.2)
+        a, b = mk(), mk()
+        for _ in range(14):
+            ba, bb = a.next_batch(), b.next_batch()
+            np.testing.assert_array_equal(np.asarray(ba["example_ids"]),
+                                          np.asarray(bb["example_ids"]))
+        a.finalize(), b.finalize()
+
+    def test_dirty_mask_tracks_visits_and_resets(self):
+        from repro.data import LSHSampledPipeline
+        pipe = LSHSampledPipeline(
+            jax.random.PRNGKey(5), _tokens(n=64), feature_fn, query_fn,
+            LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=100,
+                              refresh_mode="delta"),
+            params=PARAMS)
+        seen = set()
+        for _ in range(3):
+            seen |= set(np.asarray(pipe.next_batch()["example_ids"]).tolist())
+        dirty = set(np.flatnonzero(np.asarray(pipe._dirty)).tolist())
+        assert dirty == seen
+        pipe.refresh(full=False)
+        assert not np.any(np.asarray(pipe._dirty))
+
+    def test_invalid_refresh_mode_rejected(self):
+        with pytest.raises(ValueError):
+            LSHPipelineConfig(refresh_mode="incremental")
+
+
 class TestOverlappedRefresh:
     def test_async_refresh_bit_matches_sync(self):
         """The double-buffered host-thread refresh swaps at the same step
