@@ -40,6 +40,21 @@ Train step (``train_step.json``):
                     timings are noisier than microbenchmarks) of the
                     committed baseline ratio.
 
+Optimizers (``optimizers.json``):
+  adam step         us(lgd-adam step) / us(uniform-adam step), same
+                    run, with the LGD pipeline running multiprobe=2 —
+                    ABSOLUTE cap ``--optim-step-cap`` (default 1.3:
+                    the paper's "works under Adam/AdaGrad" claim must
+                    not cost more than 30% per step in quick CPU mode).
+  adam variance     Tr Cov(LGD minibatch estimator) / Tr Cov(uniform),
+                    Lemma-1 pareto regime — must stay BELOW
+                    ``--optim-var-cap`` (default 1.0: adaptive sampling
+                    must actually reduce estimator variance).
+  fallback          multi-probe fallback rate / single-probe fallback
+                    rate on the skewed corpus — capped at
+                    ``--fallback-cap`` (default 0.75: the Hamming-ball
+                    walk must strictly beat single-probe, with margin).
+
 ``--selftest`` proves the gate can actually fail before it is trusted:
 it injects a slowdown into every gated quantity and asserts each
 comparison trips.
@@ -64,6 +79,7 @@ HERE = os.path.dirname(os.path.abspath(__file__))
 DEFAULT = os.path.join(HERE, "results", "sampling_cost.json")
 DEFAULT_REFRESH = os.path.join(HERE, "results", "refresh_cost.json")
 DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
+DEFAULT_OPTIM = os.path.join(HERE, "results", "optimizers.json")
 
 
 def ratios(d: dict) -> dict:
@@ -182,8 +198,66 @@ def compare_train(baseline: dict, fresh: dict, tolerance: float) -> list:
     return failures
 
 
+def compare_optimizers(baseline: dict, fresh: dict, step_cap: float,
+                       var_cap: float, fallback_cap: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "batch", "n_corpus", "multiprobe"),
+                           "optimizers")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+
+    adam = fresh["optimizers"]["adam"]
+    base_adam = baseline["optimizers"]["adam"]
+
+    got = adam["step_us"]["overhead"]
+    ok = got <= step_cap
+    print(f"optim adam step_overhead: baseline "
+          f"{base_adam['step_us']['overhead']:.3f}  fresh {got:.3f}  "
+          f"cap {step_cap:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"LGD-Adam step regressed: lgd/uniform {got:.3f} > cap "
+            f"{step_cap:.3f} (adaptive sampling must stay cheap under "
+            "adaptive optimizers)")
+
+    got = adam["estimator_variance"]["ratio"]
+    ok = got < var_cap
+    print(f"optim adam var_ratio: baseline "
+          f"{base_adam['estimator_variance']['ratio']:.3f}  fresh "
+          f"{got:.3f}  cap {var_cap:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"LGD-Adam estimator variance not below uniform: ratio "
+            f"{got:.3f} >= {var_cap:.3f} (the adaptive-sampling variance "
+            "win is the point of the paper)")
+
+    single, multi = fresh["fallback"]["single"], fresh["fallback"]["multi"]
+    got = multi / max(single, 1e-12)
+    ok = single > 0 and got <= fallback_cap
+    print(f"optim fallback multi/single: baseline "
+          f"{baseline['fallback']['multi'] / max(baseline['fallback']['single'], 1e-12):.3f}"
+          f"  fresh {got:.3f}  cap {fallback_cap:.3f}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        if single <= 0:
+            # degenerate regime, not a multi-probe regression: the gate
+            # is vacuous without single-probe fallbacks to beat.
+            failures.append(
+                "skewed-corpus benchmark regime produced ZERO single-"
+                "probe fallbacks — the fallback gate is vacuous; "
+                "recalibrate tab_optimizers' skewed corpus (run.py)")
+        else:
+            failures.append(
+                f"multi-probe no longer beats single-probe on the skewed "
+                f"corpus: fallback ratio {got:.3f} > cap {fallback_cap:.3f} "
+                f"(single {single:.3f}, multi {multi:.3f})")
+    return failures
+
+
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
-             args) -> int:
+             optim_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -217,6 +291,27 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_train(train_base, train_slow,
                                       args.train_tolerance)))
 
+    optim_args = (args.optim_step_cap, args.optim_var_cap,
+                  args.fallback_cap)
+    adam_slow = json.loads(json.dumps(optim_base))
+    adam_slow["optimizers"]["adam"]["step_us"]["overhead"] *= 2.0
+    print("-- selftest 6: injected 2x LGD-Adam step slowdown --")
+    results.append(bool(compare_optimizers(optim_base, adam_slow,
+                                           *optim_args)))
+
+    var_bad = json.loads(json.dumps(optim_base))
+    var_bad["optimizers"]["adam"]["estimator_variance"]["ratio"] = \
+        args.optim_var_cap * 1.5
+    print("-- selftest 7: injected LGD-Adam variance-win loss --")
+    results.append(bool(compare_optimizers(optim_base, var_bad,
+                                           *optim_args)))
+
+    fb_bad = json.loads(json.dumps(optim_base))
+    fb_bad["fallback"]["multi"] = fb_bad["fallback"]["single"]
+    print("-- selftest 8: injected multi-probe fallback-win loss --")
+    results.append(bool(compare_optimizers(optim_base, fb_bad,
+                                           *optim_args)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -239,6 +334,10 @@ def main() -> int:
                     help="committed train-step baseline JSON")
     ap.add_argument("--fresh-train", default=DEFAULT_TRAIN,
                     help="freshly measured train-step JSON")
+    ap.add_argument("--baseline-optim", default=DEFAULT_OPTIM,
+                    help="committed optimizers baseline JSON")
+    ap.add_argument("--fresh-optim", default=DEFAULT_OPTIM,
+                    help="freshly measured optimizers JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
@@ -250,6 +349,14 @@ def main() -> int:
                     help="required full/delta refresh speedup at 10% dirty")
     ap.add_argument("--train-tolerance", type=float, default=0.35,
                     help="allowed lgd/uniform step-overhead drift")
+    ap.add_argument("--optim-step-cap", type=float, default=1.3,
+                    help="absolute cap on LGD-Adam/uniform-Adam step ratio")
+    ap.add_argument("--optim-var-cap", type=float, default=1.0,
+                    help="LGD-Adam estimator variance ratio must stay "
+                         "below this (adaptive sampling must win)")
+    ap.add_argument("--fallback-cap", type=float, default=0.75,
+                    help="cap on multi-probe / single-probe fallback-rate "
+                         "ratio on the skewed corpus")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
@@ -260,8 +367,11 @@ def main() -> int:
         refresh_base = json.load(f)
     with open(args.baseline_train) as f:
         train_base = json.load(f)
+    with open(args.baseline_optim) as f:
+        optim_base = json.load(f)
     if args.selftest:
-        return selftest(baseline, refresh_base, train_base, args)
+        return selftest(baseline, refresh_base, train_base, optim_base,
+                        args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -269,12 +379,17 @@ def main() -> int:
         refresh_fresh = json.load(f)
     with open(args.fresh_train) as f:
         train_fresh = json.load(f)
+    with open(args.fresh_optim) as f:
+        optim_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
                                 args.refresh_min_speedup)
     failures += compare_train(train_base, train_fresh,
                               args.train_tolerance)
+    failures += compare_optimizers(optim_base, optim_fresh,
+                                   args.optim_step_cap, args.optim_var_cap,
+                                   args.fallback_cap)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

@@ -39,8 +39,20 @@ mean equals the average of per-shard unbiased estimates (see
 S, ``Trainer.restore`` rebuilds all per-shard indexes deterministically
 from the restored params (``repro/train/elastic.py``).
 
+Optimizer (``--optimizer {sgd,momentum,adagrad,adam}``): LGD only
+replaces the gradient ESTIMATOR — the 1/(p·N) weights are applied
+inside the jitted loss, so any update rule's moments accumulate the
+unbiased estimate unchanged (gated end-to-end by
+``benchmarks/run.py tab_optimizers``).
+
+Multi-probe (``--multiprobe K``): walk K extra Hamming-ball probe
+codes per table before giving up on it — empty buckets resolve to
+probability-corrected near-bucket samples instead of uniform
+fallbacks (watch the ``fallback`` column drop on skewed corpora).
+
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
           [--steps 200] [--sampler lgd] [--shards 2] [--ckpt /tmp/lm_ckpt]
+          [--optimizer adam] [--multiprobe 2]
 """
 
 import argparse
@@ -54,7 +66,7 @@ from repro.data import (
     make_token_corpus, mean_pool_feature_fn, uniform_batches,
 )
 from repro.models import ModelConfig, init_params, loss
-from repro.optim import Adam, schedules
+from repro.optim import make_optimizer, schedules
 from repro.train import Trainer, TrainerConfig
 
 PRESETS = {
@@ -81,6 +93,16 @@ def main():
                     choices=["full", "delta"],
                     help="full: re-hash the whole corpus each refresh; "
                          "delta: only visited + drift-sampled rows")
+    ap.add_argument("--optimizer", default="adam",
+                    choices=["sgd", "momentum", "adagrad", "adam"],
+                    help="update rule; the LGD sampler composes with any "
+                         "of them (importance weights enter the loss, so "
+                         "moments accumulate the unbiased estimate)")
+    ap.add_argument("--multiprobe", type=int, default=0,
+                    help="extra Hamming-ball probe codes per table (0 = "
+                         "single-probe): empty buckets resolve to "
+                         "probability-corrected near-bucket samples "
+                         "instead of uniform fallbacks")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.uniform:
@@ -97,7 +119,9 @@ def main():
     params = init_params(key, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"model: {n_params/1e6:.1f}M params | sampler: {args.sampler}"
-          + (f" | shards: {args.shards}" if cfg.lgd_enabled else ""))
+          f" | optimizer: {args.optimizer}"
+          + (f" | shards: {args.shards} | multiprobe: {args.multiprobe}"
+             if cfg.lgd_enabled else ""))
 
     corpus = make_token_corpus(1, p["corpus"], p["seq"], cfg.vocab,
                                hard_frac=0.1)
@@ -111,14 +135,17 @@ def main():
                               minibatch=p["batch"],
                               refresh_every=cfg.lgd_refresh_every,
                               refresh_async=True,
-                              refresh_mode=args.refresh_mode),
+                              refresh_mode=args.refresh_mode,
+                              multiprobe=args.multiprobe),
             n_shards=args.shards, params=params)
     else:
         batches = uniform_batches(corpus, p["batch"], seed=3)
 
+    peak = 3e-3 if args.optimizer == "adam" else 3e-2
     tr = Trainer(
         cfg, params,
-        Adam(lr=schedules.warmup_cosine(3e-3, 20, args.steps)),
+        make_optimizer(args.optimizer,
+                       schedules.warmup_cosine(peak, 20, args.steps)),
         batches,
         TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=100, log_every=20,
                       donate=not cfg.lgd_enabled),
@@ -136,10 +163,12 @@ def main():
         # the device-resident data path shows up as sampler -> ~0.
         sampler_frac = (tr.data_seconds - d0) / max(wall, 1e-12)
         last = tr.metrics_history[-1] if tr.metrics_history else {}
+        fb = (f"  fallback {sampler.sampler_stats()['fallback_rate']:5.1%}"
+              if sampler is not None else "")
         print(f"step {tr.step:5d}  train {last.get('loss', float('nan')):.4f}"
               f"  eval {float(eval_fn(tr.params)):.4f}"
               f"  steps/s {n / max(wall, 1e-12):6.2f}"
-              f"  sampler {sampler_frac:5.1%}"
+              f"  sampler {sampler_frac:5.1%}{fb}"
               f"  stragglers {tr.straggler_steps}")
     tr.finalize()
 

@@ -14,12 +14,14 @@ from .simhash import (  # noqa: F401
     compute_codes,
     logistic_query,
     make_projections,
+    probe_masks,
     regression_query,
 )
 from .tables import (  # noqa: F401
     LSHIndex,
     bucket_bounds,
     bucket_bounds_batched,
+    bucket_bounds_multi,
     build_index,
     hash_points,
     query_codes,

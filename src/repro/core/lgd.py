@@ -101,6 +101,10 @@ class LGDProblem:
     #                                hashed as a single fused batched probe
     #                                (incompatible with drain: the drained
     #                                bucket belongs to ONE query)
+    multiprobe: int = 0            # extra Hamming-ball probe codes walked
+    #                                per table before the next table draw
+    #                                (probability-corrected, stays unbiased;
+    #                                0 = the paper's single-probe Alg. 1)
     use_pallas: Optional[bool] = None   # None = auto (TPU: fused kernels)
     interpret: bool = False        # Pallas interpreter (kernel tests only)
 
@@ -109,6 +113,10 @@ class LGDProblem:
             raise ValueError(
                 "query_jitter requires per-repetition queries; drain mode "
                 "draws the whole minibatch from one query's bucket")
+        if self.multiprobe > 0 and self.drain:
+            raise ValueError(
+                "multiprobe is not supported in drain mode: the drained "
+                "bucket belongs to ONE (table, code) pair (Appendix B.2)")
 
     def query_fn(self) -> Callable[[jax.Array], jax.Array]:
         return regression_query if self.kind == "regression" else logistic_query
@@ -176,14 +184,22 @@ def lgd_step(
             k_jit, (problem.minibatch,) + query.shape, query.dtype)
         res = sample_batched(
             key, state.index, x_aug, queries, problem.lsh, m=1,
+            multiprobe=problem.multiprobe,
             use_pallas=problem.use_pallas, interpret=problem.interpret)
         res = SampleResult(*(a[:, 0] for a in res))      # (B, 1) -> (B,)
-    else:
-        sampler = sample_drain if problem.drain else sample
-        res: SampleResult = sampler(
+    elif problem.drain:
+        # drain mode stays single-probe: the drained bucket belongs to
+        # ONE (table, code) pair by construction (Appendix B.2).
+        res: SampleResult = sample_drain(
             key, state.index, x_aug, query, problem.lsh,
             m=problem.minibatch, use_pallas=problem.use_pallas,
             interpret=problem.interpret,
+        )
+    else:
+        res = sample(
+            key, state.index, x_aug, query, problem.lsh,
+            m=problem.minibatch, multiprobe=problem.multiprobe,
+            use_pallas=problem.use_pallas, interpret=problem.interpret,
         )
     xb, yb = x[res.indices], y[res.indices]
     grad = est.lgd_gradient(
@@ -197,6 +213,8 @@ def lgd_step(
         "n_probes_mean": jnp.mean(res.n_probes.astype(jnp.float32)),
         "bucket_size_mean": jnp.mean(res.bucket_sizes.astype(jnp.float32)),
         "fallback_frac": jnp.mean(res.fallback.astype(jnp.float32)),
+        "primary_miss_frac": jnp.mean(
+            (res.probe_code != 0).astype(jnp.float32)),
         "grad_norm": jnp.linalg.norm(grad),
     }
     return LGDState(theta, opt_state, state.index, state.step + 1), metrics

@@ -33,6 +33,27 @@ draws so the computation stays shape-static under jit; if every probed
 bucket is empty the sampler falls back to a uniform draw with p = 1/N
 (flagged in the result), which preserves unbiasedness.
 
+MULTI-PROBE (``multiprobe > 0``): before giving up on a drawn table,
+the query walks a deterministic Hamming-ball probe sequence of
+``J = 1 + multiprobe`` codes per table — the exact bucket, then flip-1
+perturbations of the packed code, then flip-2 (``simhash.probe_masks``)
+— taking the FIRST non-empty bucket in (table-draw, probe) lexicographic
+order.  The reported probability is corrected for the sequence so the
+1/(p·N) weights stay exactly unbiased: with per-bit collision
+probability cp, a point lands in the bucket of a weight-r mask with
+probability q_r = cp^(K-r) (1-cp)^r, the J probe buckets of one table
+are DISJOINT (distinct codes), so for a sample found at table-draw l
+via probe j,
+
+    p = q_{r_j} * (1 - Q)^(l-1) / |S_b|,      Q = sum_{i<J} q_{r_i}.
+
+``multiprobe=0`` reduces to the paper's single-probe formula
+(q_0 = cp^K, Q = cp^K) bit-identically.  Multi-probe replaces most
+uniform fallbacks (which sample with probability 1/N regardless of the
+query) with genuinely adaptive near-bucket samples — the fallback rate
+drops and the estimator variance with it (gated by
+``benchmarks/run.py tab_optimizers`` on a skewed corpus).
+
 Within-bucket draws use ``_uniform_below`` — a dynamic-bound uniform
 integer draw via floor(U * size) — NOT ``randint(0, N) % size``, which
 over-weights small residues whenever size does not divide N.
@@ -53,8 +74,9 @@ from .simhash import (
     LSHParams,
     collision_probability,
     collision_probability_quadratic,
+    probe_masks,
 )
-from .tables import LSHIndex, bucket_bounds_batched
+from .tables import LSHIndex, bucket_bounds_batched, bucket_bounds_multi
 
 
 class SampleResult(NamedTuple):
@@ -63,6 +85,9 @@ class SampleResult(NamedTuple):
     n_probes: jax.Array      # (m,) int32 — l, tables probed
     bucket_sizes: jax.Array  # (m,) int32 — |S_b| of chosen bucket
     fallback: jax.Array      # (m,) bool  — True where uniform fallback used
+    probe_code: jax.Array = None  # (m,) int32 — probe-sequence index of the
+    #                               winning bucket (0 = exact bucket,
+    #                               -1 = uniform fallback)
 
 
 class GatherBatch(NamedTuple):
@@ -75,6 +100,8 @@ class GatherBatch(NamedTuple):
     indices: jax.Array       # (m,) int32 — store-local sampled row ids
     probs: jax.Array         # (m,) f32 — raw Algorithm-1 probabilities
     fallback: jax.Array      # (m,) bool — uniform-fallback flags
+    probe_code: jax.Array = None  # (m,) int32 — winning probe index
+    #                               (0 = exact bucket, -1 = fallback)
 
 
 def _cp_fn(params: LSHParams):
@@ -99,22 +126,34 @@ def _uniform_below(key: jax.Array, bound: jax.Array, shape=()) -> jax.Array:
 
 
 def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
-                max_probes: int):
-    """Single repetition of Algorithm 1 given precomputed bucket bounds."""
+                max_probes: int, masks: tuple):
+    """Single repetition of Algorithm 1 given precomputed bucket bounds.
+
+    ``lo``/``hi`` are (J, L) — bucket bounds of the J Hamming-ball probe
+    codes per table (J = len(masks); J = 1 is the paper's single-probe
+    algorithm).  Each of the ``max_probes`` table draws walks the probe
+    sequence in order; the first non-empty bucket in (table-draw, probe)
+    lexicographic order wins, and the reported probability is corrected
+    for the walk (module docstring derives the formula).
+    """
     n_tables, n_points = order.shape
-    sizes = hi - lo
+    j_codes = len(masks)
+    sizes = hi - lo                                # (J, L)
     k_tables, k_slot, k_fb = jax.random.split(key, 3)
 
-    # Draw tables with replacement; l = index of first non-empty + 1.
+    # Draw tables with replacement; walk the J probe codes within each.
     ts = jax.random.randint(k_tables, (max_probes,), 0, n_tables)
-    nonempty = sizes[ts] > 0
+    nonempty = (sizes[:, ts] > 0).T.reshape(-1)    # (max_probes*J,),
+    #                                                table-draw major
     found = jnp.any(nonempty)
-    j = jnp.argmax(nonempty)                       # first non-empty probe
-    t = ts[j]
-    l = (j + 1).astype(jnp.int32)
+    first = jnp.argmax(nonempty)                   # first non-empty probe
+    i = first // j_codes                           # table-draw index
+    pj = first % j_codes                           # probe-sequence index
+    t = ts[i]
+    l = (i + 1).astype(jnp.int32)
 
-    size = jnp.maximum(sizes[t], 1)
-    slot = lo[t] + _uniform_below(k_slot, size)
+    size = jnp.maximum(sizes[pj, t], 1)
+    slot = lo[pj, t] + _uniform_below(k_slot, size)
     idx = order[t, slot]
 
     fb_idx = jax.random.randint(k_fb, (), 0, n_points)
@@ -122,20 +161,46 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
 
     x = x_aug[idx]
     cp = _cp_fn(params)(x, query)
-    cpk = cp ** params.k
-    p_lsh = cpk * (1.0 - cpk) ** (l - 1) / size.astype(jnp.float32)
+    if j_codes == 1:
+        cpk = cp ** params.k
+        p_lsh = cpk * (1.0 - cpk) ** (l - 1) / size.astype(jnp.float32)
+    else:
+        # q_r = cp^(K-r) (1-cp)^r per probed mask; the J buckets of one
+        # table are disjoint, so the per-table miss probability is
+        # 1 - sum(q) and the winning probe contributes its own q.
+        rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
+        q_all = cp ** (params.k - rs) * (1.0 - cp) ** rs       # (J,)
+        miss = jnp.maximum(1.0 - jnp.sum(q_all), 0.0)
+        p_lsh = q_all[pj] * miss ** (l - 1) / size.astype(jnp.float32)
     p = jnp.where(found, p_lsh, 1.0 / n_points)
     return SampleResult(
         indices=idx,
         probs=p.astype(jnp.float32),
         n_probes=jnp.where(found, l, max_probes).astype(jnp.int32),
-        bucket_sizes=jnp.where(found, sizes[t], 0).astype(jnp.int32),
+        bucket_sizes=jnp.where(found, sizes[pj, t], 0).astype(jnp.int32),
         fallback=~found,
+        probe_code=jnp.where(found, pj, -1).astype(jnp.int32),
     )
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",
-                                   "interpret"))
+def _probe_bounds(index, queries, params, masks, use_pallas, interpret):
+    """(J, L)-shaped bucket bounds for the probe sequence.
+
+    J == 1 keeps the original single-code probe path (and its compiled
+    program) and lifts the (…, L) bounds to (…, 1, L); J > 1 routes
+    through ``bucket_bounds_multi``.
+    """
+    if len(masks) == 1:
+        lo, hi = bucket_bounds_batched(index, queries, params,
+                                       use_pallas=use_pallas,
+                                       interpret=interpret)
+        return lo[..., None, :], hi[..., None, :]
+    return bucket_bounds_multi(index, queries, params, masks,
+                               use_pallas=use_pallas, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "multiprobe",
+                                   "use_pallas", "interpret"))
 def sample(
     key: jax.Array,
     index: LSHIndex,
@@ -144,24 +209,49 @@ def sample(
     params: LSHParams,
     m: int = 1,
     max_probes: Optional[int] = None,
+    multiprobe: int = 0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
 ) -> SampleResult:
-    """m independent LSH samples for one query (paper Algorithm 1 x m)."""
+    """m independent LSH samples for one query (paper Algorithm 1 x m).
+
+    Args:
+      key: PRNG key; split into m per-repetition keys.
+      index / x_aug: the LSH index and the (N, d) hashed vectors.
+      query: (d,) query vector.
+      params: hash-family hyper-parameters (static).
+      m: number of independent repetitions.
+      max_probes: static cap on table draws per repetition
+        (default ``max(2L, 8)``).
+      multiprobe: number of ADDITIONAL Hamming-ball probe codes walked
+        per table before moving to the next table draw (0 = the paper's
+        single-probe Algorithm 1, bit-identical to previous behaviour).
+      use_pallas / interpret: kernel dispatch, see ``tables``.
+
+    Returns:
+      ``SampleResult`` with every field shaped (m,).  ``probs`` is the
+      exact per-sample probability (probe-sequence corrected when
+      ``multiprobe > 0``), so ``1/(probs * N)`` importance weights are
+      unbiased.
+
+    Determinism: a pure function of (key, index, inputs) — same key,
+    same draw, on every backend (kernel and reference paths are
+    bit-identical).
+    """
     max_probes = max_probes or max(2 * params.l, 8)
-    lo, hi = bucket_bounds_batched(index, query, params,
-                                   use_pallas=use_pallas,
-                                   interpret=interpret)   # (L,), (L,)
+    masks = probe_masks(params.k, 1 + multiprobe)
+    lo, hi = _probe_bounds(index, query, params, masks,
+                           use_pallas, interpret)          # (J, L)
     keys = jax.random.split(key, m)
     res = jax.vmap(
         lambda k: _sample_one(k, lo, hi, index.order, x_aug, query, params,
-                              max_probes)
+                              max_probes, masks)
     )(keys)
     return res
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes", "use_pallas",
-                                   "interpret"))
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "multiprobe",
+                                   "use_pallas", "interpret"))
 def sample_batched(
     key: jax.Array,
     index: LSHIndex,
@@ -170,31 +260,33 @@ def sample_batched(
     params: LSHParams,
     m: int = 1,
     max_probes: Optional[int] = None,
+    multiprobe: int = 0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
 ) -> SampleResult:
     """Algorithm 1 for B queries at once; every field comes back (B, m).
 
-    One fused bucket-probe pass hashes all B queries and finds all B*L
-    bucket slices; sampling then vmaps ``_sample_one`` over (B, m).
-    Each (query b, repetition j) pair is an independent, exact-probability
-    Algorithm-1 sample, so averaging over either axis stays unbiased.
+    One fused bucket-probe pass hashes all B queries and finds all
+    B*J*L bucket slices; sampling then vmaps ``_sample_one`` over
+    (B, m).  Each (query b, repetition j) pair is an independent,
+    exact-probability Algorithm-1 sample, so averaging over either axis
+    stays unbiased.  ``multiprobe`` as in ``sample``.
     """
     if queries.ndim != 2:
         raise ValueError(
             f"sample_batched expects queries (B, d), got {queries.shape}; "
             "use sample() for a single query")
     max_probes = max_probes or max(2 * params.l, 8)
+    masks = probe_masks(params.k, 1 + multiprobe)
     b = queries.shape[0]
-    lo, hi = bucket_bounds_batched(index, queries, params,
-                                   use_pallas=use_pallas,
-                                   interpret=interpret)   # (B, L)
+    lo, hi = _probe_bounds(index, queries, params, masks,
+                           use_pallas, interpret)          # (B, J, L)
     keys = jax.random.split(key, (b, m))
 
     def per_query(ks, lo_q, hi_q, q):
         return jax.vmap(
             lambda kk: _sample_one(kk, lo_q, hi_q, index.order, x_aug, q,
-                                   params, max_probes)
+                                   params, max_probes, masks)
         )(ks)
 
     return jax.vmap(per_query)(keys, lo, hi, queries)
@@ -224,12 +316,13 @@ def _assemble(res: SampleResult, store: jax.Array, example_offset,
         indices=res.indices,
         probs=res.probs,
         fallback=res.fallback,
+        probe_code=res.probe_code,
     )
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes", "p_floor",
-                                   "normalize", "use_pallas", "interpret",
-                                   "row_width"))
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "multiprobe",
+                                   "p_floor", "normalize", "use_pallas",
+                                   "interpret", "row_width"))
 def sample_gather(
     key: jax.Array,
     index: LSHIndex,
@@ -240,6 +333,7 @@ def sample_gather(
     m: int = 1,
     example_offset: jax.Array | int = 0,
     max_probes: Optional[int] = None,
+    multiprobe: int = 0,
     p_floor: float = 1e-8,
     normalize: bool = True,
     use_pallas: Optional[bool] = None,
@@ -249,26 +343,44 @@ def sample_gather(
     """The device-resident LGD step: Algorithm 1 + gather + weights, one
     compiled program.
 
-    ``sample`` draws m exact-probability indices, ``kernels.gather_weight``
-    gathers the corresponding token rows from the device-resident store
-    and computes w = 1/(max(p, p_floor)·N); ``normalize`` rescales the
-    weights to mean 1 over the batch (sharded composition passes False
-    and normalises once globally).  ``example_offset`` (traced, so all
-    corpus shards share one compilation) lifts store-local row ids to
-    global example ids.  ``row_width`` is the logical S+1 when the
-    store's rows were lane-padded once at build for the Pallas gather
-    (keeps the per-call pad zero-width).
+    Args:
+      key: PRNG key for this draw.
+      index / x_aug: LSH index and hashed feature vectors (N, d).
+      query: (d,) normalised query vector.
+      store: (N, S+1) int32 device-resident token rows (lane-padded on
+        the Pallas gather path — see ``row_width``).
+      params: hash-family hyper-parameters (static).
+      m: minibatch size (independent Algorithm-1 repetitions).
+      example_offset: traced offset lifting store-local row ids to
+        global example ids (all corpus shards share one compilation).
+      max_probes: static cap on table draws per repetition.
+      multiprobe: extra Hamming-ball probe codes per table (see
+        ``sample``); 0 keeps the single-probe paper algorithm.
+      p_floor: probability floor inside the weight computation.
+      normalize: rescale weights to mean 1 over the batch (sharded
+        composition passes False and normalises once globally).
+      row_width: logical S+1 when the store rows were lane-padded once
+        at build (keeps the per-call pad zero-width).
+
+    Returns:
+      ``GatherBatch`` with every field shaped (m, ...): token rows,
+      next-token targets, 1/(p·N) loss weights, global example ids and
+      the per-sample sampling diagnostics (probs / fallback /
+      probe_code).
+
+    Determinism: pure in (key, index, inputs); the trainer's per-step
+    key stream makes restored runs draw bit-identical batches.
     """
     res = sample(key, index, x_aug, query, params, m=m,
-                 max_probes=max_probes, use_pallas=use_pallas,
-                 interpret=interpret)
+                 max_probes=max_probes, multiprobe=multiprobe,
+                 use_pallas=use_pallas, interpret=interpret)
     return _assemble(res, store, example_offset, p_floor, normalize,
                      use_pallas, interpret, row_width)
 
 
-@partial(jax.jit, static_argnames=("params", "m", "max_probes", "p_floor",
-                                   "normalize", "use_pallas", "interpret",
-                                   "row_width"))
+@partial(jax.jit, static_argnames=("params", "m", "max_probes", "multiprobe",
+                                   "p_floor", "normalize", "use_pallas",
+                                   "interpret", "row_width"))
 def sample_gather_batched(
     key: jax.Array,
     index: LSHIndex,
@@ -279,6 +391,7 @@ def sample_gather_batched(
     m: int = 1,
     example_offset: jax.Array | int = 0,
     max_probes: Optional[int] = None,
+    multiprobe: int = 0,
     p_floor: float = 1e-8,
     normalize: bool = True,
     use_pallas: Optional[bool] = None,
@@ -287,10 +400,12 @@ def sample_gather_batched(
 ) -> GatherBatch:
     """``sample_gather`` for C queries at once; every field comes back
     (C, m, ...).  The C·m gathered rows run through ONE gather+weight
-    pass (flattened), and weight normalisation is per chain."""
+    pass (flattened), and weight normalisation is per chain.  Args as
+    in ``sample_gather`` (``queries`` replaces ``query``)."""
     c = queries.shape[0]
     res = sample_batched(key, index, x_aug, queries, params, m=m,
-                         max_probes=max_probes, use_pallas=use_pallas,
+                         max_probes=max_probes, multiprobe=multiprobe,
+                         use_pallas=use_pallas,
                          interpret=interpret)          # fields (C, m)
     flat = SampleResult(*(f.reshape((-1,) + f.shape[2:]) for f in res))
     batch = _assemble(flat, store, example_offset, p_floor, False,
@@ -349,17 +464,29 @@ def sample_drain(
         n_probes=jnp.full((m,), jnp.where(found, l, max_probes), jnp.int32),
         bucket_sizes=jnp.full((m,), jnp.where(found, sizes[t], 0), jnp.int32),
         fallback=jnp.broadcast_to(~found, (m,)),
+        probe_code=jnp.full((m,), jnp.where(found, 0, -1), jnp.int32),
     )
 
 
 def exact_inclusion_probability(
     index: LSHIndex, x_aug: jax.Array, query: jax.Array, params: LSHParams,
     l: jax.Array | int = 1,
+    multiprobe: int = 0,
 ) -> jax.Array:
-    """p_i = cp(x_i, q)^K (1-cp^K)^(l-1) for *all* points (O(N d), analysis only).
+    """p_i = Q_i (1-Q_i)^(l-1) for *all* points (O(N d), analysis only).
 
-    Used by tests and the variance diagnostics; never on the training path.
+    ``Q_i`` is the probability that point i lands in SOME probed bucket
+    of one table: ``cp_i^K`` for single-probe, and the probe-sequence
+    sum ``sum_j cp_i^(K-r_j) (1-cp_i)^(r_j)`` under multi-probe.  Used
+    by tests and the variance diagnostics; never on the training path.
     """
     cp = _cp_fn(params)(x_aug, query)
-    cpk = cp ** params.k
-    return cpk * (1.0 - cpk) ** (jnp.asarray(l, jnp.float32) - 1.0)
+    if multiprobe <= 0:
+        q_tab = cp ** params.k
+    else:
+        masks = probe_masks(params.k, 1 + multiprobe)
+        rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
+        q_tab = jnp.sum(
+            cp[..., None] ** (params.k - rs) * (1.0 - cp[..., None]) ** rs,
+            axis=-1)
+    return q_tab * (1.0 - q_tab) ** (jnp.asarray(l, jnp.float32) - 1.0)

@@ -110,6 +110,38 @@ def compute_codes(
     return codes[0] if squeeze else codes
 
 
+def probe_masks(k: int, n_codes: int) -> tuple:
+    """Deterministic Hamming-ball probe sequence for multi-probe querying.
+
+    Returns a tuple of ``n_codes`` XOR masks over the packed K-bit code,
+    walked in order when a probed bucket is empty: the exact bucket
+    (mask 0) first, then all flip-1 masks (ascending bit index), then
+    all flip-2 masks (lexicographic bit pairs).  ``n_codes`` is clamped
+    to the Hamming-ball-of-radius-2 size ``1 + K + K(K-1)/2``.
+
+    Args:
+      k: bits per table code (``LSHParams.k``).
+      n_codes: total probe codes per table INCLUDING the exact bucket
+        (``1 + multiprobe`` in sampler terms).
+
+    Returns:
+      Tuple of Python ints (static — safe as a jit-static argument).
+
+    Determinism: the sequence is a pure function of ``k`` and
+    ``n_codes``; the corrected sampling probability depends on the
+    probed masks only through their popcounts, so any truncation of
+    this sequence still yields exact probabilities (see
+    ``core.sampler``).
+    """
+    if n_codes < 1:
+        raise ValueError(f"n_codes must be >= 1, got {n_codes}")
+    masks = [0]
+    masks.extend(1 << i for i in range(k))
+    masks.extend(
+        (1 << i) | (1 << j) for i in range(k) for j in range(i + 1, k))
+    return tuple(masks[:n_codes])
+
+
 def collision_probability(x: jax.Array, q: jax.Array) -> jax.Array:
     """SimHash collision probability cp(x,q) = 1 - arccos(cos)/pi.
 

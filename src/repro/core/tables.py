@@ -48,7 +48,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import default_use_pallas
-from repro.kernels.bucket_probe import bucket_probe, bucket_probe_codes
+from repro.kernels.bucket_probe import (
+    bucket_probe,
+    bucket_probe_codes,
+    bucket_probe_multi,
+)
 from repro.kernels.simhash import simhash_codes
 
 from .simhash import LSHParams, compute_codes, make_projections
@@ -89,8 +93,23 @@ def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams,
                 interpret: bool = False) -> LSHIndex:
     """One-time (or periodic-refresh) preprocessing: hash + sort per table.
 
-    ``use_pallas=None`` routes hashing through the fused SimHash kernel
-    on TPU and the identical XLA reference elsewhere.
+    Args:
+      key: PRNG key for the projection draw (the ONLY randomness here).
+      x_aug: (N, d) augmented vectors to index (unit-norm rows for
+        SimHash monotonicity).
+      params: hash-family hyper-parameters (static).
+      use_pallas: ``None`` routes hashing through the fused SimHash
+        kernel on TPU and the bit-identical XLA reference elsewhere;
+        pass True/False to force a path.
+      interpret: run the kernel under the Pallas interpreter (tests).
+
+    Returns:
+      An immutable ``LSHIndex`` pytree (projections, per-table sorted
+      codes, sort order).
+
+    Determinism: a pure function of (key, x_aug, params) — two builds
+    with the same inputs are bitwise identical on every backend, which
+    is what ``restore_at``-style canonical rebuilds rely on.
     """
     if params.dim != x_aug.shape[-1]:
         raise ValueError(f"params.dim={params.dim} != data dim {x_aug.shape[-1]}")
@@ -109,7 +128,17 @@ def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
 
     Used for deep models where stored features drift slowly (Sec. 3.2 /
     Appendix E): hash tables are periodically rebuilt from fresh features.
-    `key` is unused when projections are reused but kept for API symmetry.
+
+    Args:
+      key: unused when projections are reused; kept for API symmetry.
+      index: the previous index (its projections are reused; with
+        ``warm_start`` its ``order`` seeds the re-sort).
+      x_aug: (N, d) fresh feature vectors (same N as the index).
+      params: hash-family hyper-parameters (static).
+      warm_start: keep tie layouts stable across refreshes (below).
+
+    Returns:
+      A new ``LSHIndex`` over the fresh features.
 
     With ``warm_start`` the previous ``order`` seeds the re-sort: codes
     are permuted by the old order first and a *stable* argsort of that
@@ -250,3 +279,56 @@ def bucket_bounds_batched(index: LSHIndex, queries: jax.Array,
     return bucket_probe(queries, index.projections, index.sorted_codes,
                         k=params.k, l=params.l, use_pallas=use_pallas,
                         interpret=interpret)
+
+
+def bucket_bounds_multi(index: LSHIndex, queries: jax.Array,
+                        params: LSHParams, masks: tuple, *,
+                        use_pallas: Optional[bool] = None,
+                        interpret: bool = False):
+    """Bucket bounds for the full multi-probe code sequence.
+
+    For every query, table t and probe mask ``masks[j]``, the [lo, hi)
+    slice of the bucket whose packed code is ``code(q)[t] ^ masks[j]``
+    (``core.simhash.probe_masks`` generates the deterministic
+    Hamming-ball sequence).
+
+    Args:
+      index: the sorted-code index to probe.
+      queries: (B, d) query batch or a single (d,) query.
+      params: hash-family hyper-parameters (static).
+      masks: static tuple of XOR masks (J = len(masks)).
+      use_pallas / interpret: kernel dispatch, same contract as
+        ``bucket_bounds_batched``.
+
+    Returns:
+      (lo, hi) int32 of shape (B, J, L) — or (J, L) for a 1-D query.
+
+    Dispatch: the fused multi-probe kernel hashes each query once and
+    counts all J probe codes against the SAME streamed sorted-code
+    tile, so its HBM traffic equals the single-probe kernel's — the
+    N/B auto-dispatch cutover is therefore unchanged (per QUERY, not
+    per probe code).  Quadratic SRP hashes on the XLA path and probes
+    the J·L perturbed codes through the probe-only kernel.
+    """
+    if use_pallas is None:
+        b = queries.shape[0] if queries.ndim == 2 else 1
+        use_pallas = (default_use_pallas() and
+                      index.n_points <= b * COUNTING_PROBE_MAX_POINTS_PER_QUERY)
+    if params.family == "quadratic":
+        qcodes = query_codes(index, queries, params)        # (..., L)
+        squeeze = qcodes.ndim == 1
+        if squeeze:
+            qcodes = qcodes[None]
+        marr = jnp.asarray(list(masks), jnp.uint32)
+        pcodes = qcodes[:, None, :] ^ marr[None, :, None]   # (B, J, L)
+        b, j, l = pcodes.shape
+        lo, hi = bucket_probe_codes(pcodes.reshape(b * j, l),
+                                    index.sorted_codes,
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
+        lo, hi = lo.reshape(b, j, l), hi.reshape(b, j, l)
+        return (lo[0], hi[0]) if squeeze else (lo, hi)
+    return bucket_probe_multi(queries, index.projections,
+                              index.sorted_codes, tuple(masks),
+                              k=params.k, l=params.l,
+                              use_pallas=use_pallas, interpret=interpret)

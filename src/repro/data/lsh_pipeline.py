@@ -149,12 +149,23 @@ class LSHPipelineConfig:
     # (keeps the LR scale of uniform sampling).  Sharded sub-pipelines
     # run with raw weights and normalise once globally.
     normalize_weights: bool = True
+    # multi-probe querying: number of ADDITIONAL Hamming-ball probe
+    # codes (flip-1 then flip-2 of the packed code) walked per table
+    # before the next table draw.  Empty/under-filled buckets then
+    # resolve to probability-corrected near-bucket samples instead of
+    # uniform fallbacks — weights stay unbiased (core.sampler), the
+    # fallback rate drops (tab_optimizers gates this on a skewed
+    # corpus).  0 = the paper's single-probe Algorithm 1.
+    multiprobe: int = 0
 
     def __post_init__(self):
         if self.refresh_mode not in ("full", "delta"):
             raise ValueError(
                 f"refresh_mode must be 'full' or 'delta', "
                 f"got {self.refresh_mode!r}")
+        if self.multiprobe < 0:
+            raise ValueError(
+                f"multiprobe must be >= 0, got {self.multiprobe}")
 
 
 class LSHSampledPipeline:
@@ -172,6 +183,27 @@ class LSHSampledPipeline:
     ``store_device`` pins the device-resident token store (and hence all
     per-step sampling compute) to a specific device — the sharded owner
     passes each shard's DP-group device (``shard_store_device``).
+
+    Args:
+      key: constructor PRNG key; ALL pipeline randomness derives from
+        it via salted fold_in streams (module docstring).
+      tokens: (N, S+1) int32 local token shard, uploaded to device once.
+      feature_fn / query_fn: per-example embedding and query hooks
+        (legacy closures or params-aware — see above).
+      config: ``LSHPipelineConfig`` (refresh policy, minibatch,
+        ``multiprobe``, kernel dispatch).
+      feature_batch: embed chunk size for the corpus re-embeds.
+      params: initial model params; passing them selects the
+        params-aware hook flavour.
+      example_offset: lifts store-local row ids to global example ids
+        (sharded owner passes the shard's lower bound).
+      store_device: optional device for the token store.
+
+    Determinism: two pipelines built with the same (key, tokens,
+    config) draw bit-identical batch sequences, and ``restore_at(t)``
+    rewinds to step t's stream positions (elastic restarts rely on
+    both).  ``sampler_stats()`` exposes cumulative fallback /
+    primary-miss rates without touching the step path.
     """
 
     def __init__(
@@ -218,6 +250,13 @@ class LSHSampledPipeline:
         self._track_dirty = (config.refresh_mode == "delta"
                              and config.refresh_every > 0)
         self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        # sampling diagnostics: device-side lazy accumulators (no sync
+        # on the step path; syncs happen only when sampler_stats() is
+        # read, e.g. at the trainer's log cadence).
+        self._stat_draws = 0
+        self._fallback_sum = jnp.zeros((), jnp.int32)
+        self._primary_miss_sum = jnp.zeros((), jnp.int32)
+        self._last_fallback = jnp.zeros((), jnp.float32)
         self.features = self._compute_features()
         dim = self.features.shape[-1]
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
@@ -450,6 +489,36 @@ class LSHSampledPipeline:
         if self._track_dirty:
             self._dirty = self._dirty.at[indices.reshape(-1)].set(True)
 
+    def _accum_stats(self, gb):
+        """Accumulate per-step sampling diagnostics (device-lazy)."""
+        fb = gb.fallback.reshape(-1)
+        pm = (gb.probe_code.reshape(-1) != 0)
+        self._stat_draws += fb.shape[0]
+        self._fallback_sum = self._fallback_sum + jnp.sum(
+            fb.astype(jnp.int32))
+        self._primary_miss_sum = self._primary_miss_sum + jnp.sum(
+            pm.astype(jnp.int32))
+        self._last_fallback = jnp.mean(fb.astype(jnp.float32))
+
+    def sampler_stats(self) -> Dict[str, float]:
+        """Cumulative sampling diagnostics (syncs; read at log cadence).
+
+        Returns:
+          ``draws``: samples drawn since construction;
+          ``fallback_rate``: fraction that fell back to uniform 1/N;
+          ``primary_miss_rate``: fraction whose exact bucket was empty
+          (resolved by a multi-probe neighbour OR by fallback);
+          ``last_fallback_rate``: the most recent batch's fallback
+          fraction.
+        """
+        d = max(self._stat_draws, 1)
+        return {
+            "draws": self._stat_draws,
+            "fallback_rate": float(self._fallback_sum) / d,
+            "primary_miss_rate": float(self._primary_miss_sum) / d,
+            "last_fallback_rate": float(self._last_fallback),
+        }
+
     def next_batch(self, query: Optional[jax.Array] = None
                    ) -> Dict[str, jax.Array]:
         """Draw one batch — a single jitted on-device program; ``query``
@@ -460,11 +529,13 @@ class LSHSampledPipeline:
         gb = sample_gather(
             sub, self.index, self.features, q, self.store, self.lsh,
             m=self.cfg.minibatch, example_offset=self.example_offset,
+            multiprobe=self.cfg.multiprobe,
             p_floor=self.cfg.p_floor,
             normalize=self.cfg.normalize_weights,
             use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
             row_width=self.row_width)
         self._mark_dirty(gb.indices)
+        self._accum_stats(gb)
         return {
             "tokens": gb.tokens,
             "targets": gb.targets,
@@ -487,12 +558,14 @@ class LSHSampledPipeline:
         gb = sample_gather_batched(
             sub, self.index, self.features, qn, self.store, self.lsh,
             m=self.cfg.minibatch, example_offset=self.example_offset,
+            multiprobe=self.cfg.multiprobe,
             p_floor=self.cfg.p_floor,
             normalize=self.cfg.normalize_weights,
             use_pallas=self.cfg.use_pallas,
             interpret=self.cfg.interpret,
             row_width=self.row_width)                # fields (C, m, ...)
         self._mark_dirty(gb.indices)
+        self._accum_stats(gb)
         return [{
             "tokens": gb.tokens[c],
             "targets": gb.targets[c],
@@ -536,6 +609,21 @@ class ShardedLSHPipeline:
     ``refresh_async`` all S refreshes overlap device compute, and with
     ``refresh_mode="delta"`` each shard re-embeds only its own visited
     rows.
+
+    Args:
+      key: master PRNG key; shard s is keyed by ``fold_in(key, s)``.
+      tokens: (N, S+1) int32 GLOBAL corpus (sharded internally).
+      feature_fn / query_fn / config / feature_batch / params: as in
+        ``LSHSampledPipeline`` (``config.minibatch`` is the GLOBAL
+        batch and must divide by ``n_shards``).
+      n_shards: number of per-shard indexes (one per DP group at scale).
+      mesh: optional ``jax.sharding.Mesh`` enabling the zero-copy
+        sharded batch composition.
+
+    Determinism: as ``LSHSampledPipeline``, per shard; ``restore_at``
+    rewinds every shard, and a restore onto a DIFFERENT ``n_shards``
+    (elastic reshape) goes through
+    ``repro.train.elastic.rebuild_sharded_pipeline``.
     """
 
     def __init__(
@@ -590,6 +678,21 @@ class ShardedLSHPipeline:
     def refresh(self, full: Optional[bool] = None):
         for p in self.shards:
             p.refresh(full=full)
+
+    def sampler_stats(self) -> Dict[str, float]:
+        """Draw-weighted aggregate of per-shard sampling diagnostics."""
+        per = [p.sampler_stats() for p in self.shards]
+        draws = sum(s["draws"] for s in per)
+        d = max(draws, 1)
+        return {
+            "draws": draws,
+            "fallback_rate": sum(
+                s["fallback_rate"] * s["draws"] for s in per) / d,
+            "primary_miss_rate": sum(
+                s["primary_miss_rate"] * s["draws"] for s in per) / d,
+            "last_fallback_rate": float(
+                np.mean([s["last_fallback_rate"] for s in per])),
+        }
 
     def _compose(self, parts: list) -> jax.Array:
         if self.mesh is not None and isinstance(self.mesh,

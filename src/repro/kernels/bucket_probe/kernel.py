@@ -122,6 +122,40 @@ def _codes_kernel(qc_in_ref, sc_ref, lo_ref, hi_ref,
     hi_ref[...] += leq
 
 
+def _multi_kernel(q_ref, w_ref, sc_ref, lo_ref, hi_ref, qc_ref,
+                  *, k: int, bl: int, bn: int, n_actual: int, masks: tuple):
+    """Multi-probe variant: count ranks for every Hamming-ball probe code.
+
+    The query codes are hashed ONCE per (B, L) tile; each probe mask is
+    a compile-time XOR constant applied to the base code, so the J-way
+    probe walk reuses the same streamed sorted-code tile — multi-probe
+    costs no extra HBM traffic over the single-probe kernel, only VPU
+    compares.  Output tile layout is j-major: columns
+    [j*BL, (j+1)*BL) hold probe j's counts for this table tile (the
+    wrapper untangles the block layout).
+    """
+    n_idx = pl.program_id(2)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        proj = jnp.dot(q_ref[...], w_ref[...],
+                       preferred_element_type=jnp.float32)
+        qc_ref[...] = _pack_codes_biased(proj, k, bl)
+        lo_ref[...] = jnp.zeros_like(lo_ref)
+        hi_ref[...] = jnp.zeros_like(hi_ref)
+
+    base = qc_ref[...]
+    for j, mask in enumerate(masks):
+        # XOR with the biased mask constant preserves unsigned order:
+        # (raw ^ bias) ^ mask == (raw ^ mask) ^ bias since XOR commutes.
+        m_i32 = mask - (1 << 32) if mask >= (1 << 31) else mask
+        qc_j = base ^ jnp.int32(m_i32)
+        less, leq = _count_tile(qc_j, sc_ref[...], n_idx * bn, n_actual,
+                                bl, bn)
+        lo_ref[:, j * bl:(j + 1) * bl] += less
+        hi_ref[:, j * bl:(j + 1) * bl] += leq
+
+
 def _out_specs(block_b: int, block_l: int):
     spec = pl.BlockSpec((block_b, block_l), lambda i, j, n: (i, j))
     return [spec, spec]
@@ -157,6 +191,52 @@ def bucket_probe_pallas(
             pl.BlockSpec((block_l, block_n), lambda i, j, n: (j, n)),
         ],
         out_specs=_out_specs(block_b, block_l),
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((block_b, block_l), jnp.int32)],
+        interpret=interpret,
+    )(q.astype(jnp.float32), w.astype(jnp.float32), sc_biased)
+
+
+def bucket_probe_multi_pallas(
+    q: jax.Array,             # (B, d) float32 queries, B % block_b == 0
+    w: jax.Array,             # (d, L*K) float32 projections
+    sc_biased: jax.Array,     # (L, N) int32 biased sorted codes, N padded
+    *,
+    masks: tuple,
+    k: int,
+    l: int,
+    n_actual: int,
+    block_b: int = DEFAULT_BB,
+    block_l: int = DEFAULT_BL,
+    block_n: int = DEFAULT_BN,
+    interpret: bool = False,
+):
+    """Fused hash + J-way Hamming-ball probe.
+
+    Returns (lo, hi), each (B, L*J) int32 in BLOCK j-major layout:
+    global column (t // BL)*J*BL + j*BL + (t % BL) holds probe j's
+    count for table t — ``ops.bucket_probe_multi`` untangles this to
+    (B, J, L).  One streamed pass over the sorted codes serves all J
+    probe codes.
+    """
+    b, d = q.shape
+    ll, n = sc_biased.shape
+    j = len(masks)
+    assert ll == l and w.shape == (d, l * k), (q.shape, w.shape, sc_biased.shape)
+    assert b % block_b == 0 and l % block_l == 0 and n % block_n == 0
+    grid = (b // block_b, l // block_l, n // block_n)
+    out_shape = [jax.ShapeDtypeStruct((b, l * j), jnp.int32)] * 2
+    out_spec = pl.BlockSpec((block_b, block_l * j), lambda i, jl, nn: (i, jl))
+    return pl.pallas_call(
+        functools.partial(_multi_kernel, k=k, bl=block_l, bn=block_n,
+                          n_actual=n_actual, masks=tuple(masks)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, jl, nn: (i, 0)),
+            pl.BlockSpec((d, block_l * k), lambda i, jl, nn: (0, jl)),
+            pl.BlockSpec((block_l, block_n), lambda i, jl, nn: (jl, nn)),
+        ],
+        out_specs=[out_spec, out_spec],
         out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((block_b, block_l), jnp.int32)],
         interpret=interpret,

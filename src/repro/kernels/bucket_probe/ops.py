@@ -22,9 +22,14 @@ from .kernel import (
     DEFAULT_BL,
     DEFAULT_BN,
     bucket_probe_codes_pallas,
+    bucket_probe_multi_pallas,
     bucket_probe_pallas,
 )
-from .ref import bucket_probe_codes_ref, bucket_probe_ref
+from .ref import (
+    bucket_probe_codes_ref,
+    bucket_probe_multi_ref,
+    bucket_probe_ref,
+)
 
 
 def _bias(codes_u32: jax.Array) -> jax.Array:
@@ -81,6 +86,63 @@ def bucket_probe(
             interpret=interpret,
         )
         lo, hi = lo[:b, :l], hi[:b, :l]
+    return (lo[0], hi[0]) if squeeze else (lo, hi)
+
+
+@partial(jax.jit, static_argnames=("masks", "k", "l", "use_pallas",
+                                   "interpret"))
+def bucket_probe_multi(
+    q: jax.Array,             # (B, d) or (d,) query vectors
+    w: jax.Array,             # (d, L*K) projections
+    sorted_codes: jax.Array,  # (L, N) uint32, ascending per row
+    masks: tuple,             # J static XOR masks (probe_masks(k, J))
+    *,
+    k: int,
+    l: int,
+    use_pallas: bool = True,
+    interpret: bool = False,
+):
+    """Fused hash + multi-probe: (lo, hi) int32, (B, J, L) (or (J, L)).
+
+    For each query, table, and Hamming-ball probe mask, the [lo, hi)
+    slice of the bucket whose code is ``code(q)[t] ^ masks[j]``.  The
+    kernel hashes once and reuses the streamed sorted-code tile for all
+    J probe codes; the XLA reference path (``use_pallas=False``) lowers
+    to hash + J*L binary searches.  Parity between the two is pinned by
+    tests/test_multiprobe.py.
+    """
+    squeeze = q.ndim == 1
+    if squeeze:
+        q = q[None]
+    if w.shape != (q.shape[1], l * k):
+        raise ValueError(
+            f"projections {w.shape} != (d={q.shape[1]}, L*K={l * k})")
+    if sorted_codes.shape[0] != l:
+        raise ValueError(
+            f"sorted_codes {sorted_codes.shape} has {sorted_codes.shape[0]} "
+            f"tables, expected L={l}")
+    j = len(masks)
+    if not use_pallas:
+        lo, hi = bucket_probe_multi_ref(q, w, sorted_codes, masks, k=k, l=l)
+    else:
+        b, d = q.shape
+        _, n = sorted_codes.shape
+        bb, bl, bn = _blocks(b, l, n)
+        b_pad, l_pad, n_pad = (_round_up(b, bb), _round_up(l, bl),
+                               _round_up(n, bn))
+        lo, hi = bucket_probe_multi_pallas(
+            jnp.pad(q, ((0, b_pad - b), (0, 0))),
+            jnp.pad(w, ((0, 0), (0, (l_pad - l) * k))),
+            _pad_sc(sorted_codes, l_pad, n_pad),
+            masks=tuple(masks), k=k, l=l_pad, n_actual=n,
+            block_b=bb, block_l=bl, block_n=bn, interpret=interpret,
+        )
+        # kernel layout: column (t//BL)*J*BL + j*BL + (t%BL); untangle
+        # to (B, J, L) and slice the padding off.
+        def unblock(a):
+            a = a.reshape(b_pad, l_pad // bl, j, bl)
+            return a.transpose(0, 2, 1, 3).reshape(b_pad, j, l_pad)[:b, :, :l]
+        lo, hi = unblock(lo), unblock(hi)
     return (lo[0], hi[0]) if squeeze else (lo, hi)
 
 

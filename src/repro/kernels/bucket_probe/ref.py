@@ -29,3 +29,23 @@ def bucket_probe_ref(q: jax.Array, w: jax.Array, sorted_codes: jax.Array,
 
     qcodes = simhash_codes_ref(q, w, k=k, l=l)       # (B, L)
     return bucket_probe_codes_ref(qcodes, sorted_codes)
+
+
+def bucket_probe_multi_ref(q: jax.Array, w: jax.Array,
+                           sorted_codes: jax.Array, masks,
+                           *, k: int, l: int):
+    """Oracle for the fused multi-probe kernel.
+
+    Hash B queries, XOR each packed code with every Hamming-ball probe
+    mask, and binary-search every perturbed code.  Returns (lo, hi)
+    int32 of shape (B, J, L) where J = len(masks); [b, j, t] is the
+    bucket slice of probe code ``code(q_b)[t] ^ masks[j]`` in table t.
+    """
+    from ..simhash.ref import simhash_codes_ref
+
+    qcodes = simhash_codes_ref(q, w, k=k, l=l)               # (B, L)
+    marr = jnp.asarray(list(masks), jnp.uint32)
+    pcodes = qcodes[:, None, :] ^ marr[None, :, None]        # (B, J, L)
+    b, j, ll = pcodes.shape
+    lo, hi = bucket_probe_codes_ref(pcodes.reshape(b * j, ll), sorted_codes)
+    return lo.reshape(b, j, ll), hi.reshape(b, j, ll)

@@ -11,5 +11,6 @@ from .optimizers import (  # noqa: F401
     SGD,
     SGDState,
     apply_updates,
+    make_optimizer,
 )
 from . import compression, schedules  # noqa: F401

@@ -28,6 +28,47 @@ import jax.numpy as jnp
 Schedule = Union[float, Callable[[jax.Array], jax.Array]]
 
 
+def make_optimizer(name: str, lr: Optional[Schedule] = None, **kwargs):
+    """Build an optimiser by CLI-friendly name.
+
+    Args:
+      name: one of ``sgd`` (plain), ``momentum`` (SGD with heavy-ball
+        momentum 0.9), ``adagrad``, ``adam``, ``adamw``, ``adam8bit``,
+        ``adafactor``.
+      lr: learning rate or schedule; per-name defaults when omitted
+        (3e-2 for sgd/momentum/adagrad, 3e-3 for the Adam family and
+        Adafactor).
+      **kwargs: forwarded to the optimiser dataclass (e.g. ``b1``,
+        ``eps``, ``weight_decay``).
+
+    Returns:
+      A frozen optimiser dataclass (hashable, jit-static).  All of
+      them compose with the LGD sampler path unchanged: the trainer
+      applies the 1/(p·N) importance weights inside the loss, so every
+      optimiser's moments accumulate the unbiased gradient ESTIMATE
+      (see ``repro.train.trainer``).
+    """
+    key = name.lower()
+    makers = {
+        "sgd": lambda lr, **kw: SGD(lr=3e-2 if lr is None else lr, **kw),
+        "momentum": lambda lr, **kw: SGD(
+            lr=3e-2 if lr is None else lr, **{"momentum": 0.9, **kw}),
+        "adagrad": lambda lr, **kw: AdaGrad(
+            lr=3e-2 if lr is None else lr, **kw),
+        "adam": lambda lr, **kw: Adam(lr=3e-3 if lr is None else lr, **kw),
+        "adamw": lambda lr, **kw: Adam(
+            lr=3e-3 if lr is None else lr, **{"weight_decay": 0.01, **kw}),
+        "adam8bit": lambda lr, **kw: Adam8bit(
+            lr=3e-3 if lr is None else lr, **kw),
+        "adafactor": lambda lr, **kw: Adafactor(
+            lr=3e-3 if lr is None else lr, **kw),
+    }
+    if key not in makers:
+        raise ValueError(
+            f"unknown optimizer {name!r}; choose from {sorted(makers)}")
+    return makers[key](lr, **kwargs)
+
+
 def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
     return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
 

@@ -17,6 +17,20 @@ controller that evicts/replaces slow hosts.  Data loading is
 double-buffered (next batch prepared while the step runs) so host-side
 sampling (the LGD hash lookups) overlaps device compute.
 
+ADAPTIVE OPTIMIZERS under LGD: the sampler composes with ANY
+``repro.optim`` optimiser (Adam, AdaGrad, momentum-SGD, ...) because
+the importance weights enter the LOSS, not the update rule: the jitted
+loss multiplies per-example losses by 1/(p_i N), so the gradient the
+optimiser receives IS the unbiased estimate of the full-batch gradient
+— Adam's first/second moments and AdaGrad's accumulator are then
+running statistics OF that estimate (weights applied strictly before
+moment accumulation).  First moments therefore track the true mean
+gradient: E[m_1] = (1-b1) * full-batch grad (pinned by
+tests/test_optim_lgd.py against full-batch moments).  Second moments
+accumulate E[g_est^2] >= E[g_est]^2 — the correct Adam/AdaGrad
+semantics for any stochastic estimator; nothing in the update rule
+needs to know the batch was adaptively sampled.
+
 LGD sampler hook: pass ``sampler=`` (an ``LSHSampledPipeline`` /
 ``ShardedLSHPipeline``) instead of ``batches``.  The trainer then
   * draws batches from ``sampler.next_batch`` — importance weights
@@ -81,6 +95,31 @@ class TrainerConfig:
 
 
 class Trainer:
+    """Training loop with LGD-sampler, checkpoint and metrics hooks.
+
+    Args:
+      cfg: model config (defines the default LM loss).
+      params: initial parameter pytree.
+      optimizer: any ``repro.optim`` optimiser (``init``/``update``
+        interface) — Adam, AdaGrad, momentum-SGD, Adafactor, ...;
+        with ``sampler=`` the importance-weighted gradient estimate
+        feeds its moment accumulators unchanged (module docstring).
+      batches: iterator of batch dicts (uniform-sampling mode);
+        mutually exclusive with ``sampler``.
+      tcfg: loop policy knobs (checkpointing, clipping, accumulation).
+      resume: auto-restore the latest checkpoint in ``tcfg.ckpt_dir``.
+      loss_fn: optional ``loss_fn(params, batch)`` override.
+      sampler: an ``LSHSampledPipeline``/``ShardedLSHPipeline`` — the
+        LGD adaptive-sampling mode (forces ``donate=False``; pushes
+        live params via ``set_params`` each step; ``restore_at`` on
+        checkpoint restore).
+
+    Determinism: with a sampler, restoring at step t replays the exact
+    batch sequence of a run that reached step t (fold_in key streams —
+    see ``repro.data.lsh_pipeline``); with ``batches``, restore skips
+    already-consumed batches, so the iterator must be re-creatable.
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -282,12 +321,19 @@ class Trainer:
             self.step += 1
             losses.append(l)
             if self.step % self.tcfg.log_every == 0:
-                self.metrics_history.append({
+                entry = {
                     "step": self.step, "loss": l,
                     "grad_norm": float(gnorm), "dt": dt,
                     "data_dt": self._last_draw_dt,
                     "stragglers": self.straggler_steps,
-                })
+                }
+                if self._sampler is not None and \
+                        hasattr(self._sampler, "sampler_stats"):
+                    # device-sync'd read, so only at log cadence
+                    st = self._sampler.sampler_stats()
+                    entry["fallback_rate"] = st["fallback_rate"]
+                    entry["primary_miss_rate"] = st["primary_miss_rate"]
+                self.metrics_history.append(entry)
             if self.tcfg.ckpt_dir and \
                     self.step % self.tcfg.ckpt_every == 0:
                 self.save()

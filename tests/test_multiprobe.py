@@ -1,0 +1,353 @@
+"""Multi-probe querying: probe sequence, kernel parity, statistics.
+
+Pins the tentpole contracts of the Hamming-ball multi-probe sampler:
+  * ``probe_masks`` is the deterministic flip-1-then-flip-2 sequence;
+  * the fused multi-probe kernel (interpret mode) matches the XLA
+    oracle exactly, across padding shapes and families;
+  * ``multiprobe=0`` is bit-identical to the original single-probe
+    sampler (the compiled program may differ, the numbers may not);
+  * the probe-class collision frequencies match the corrected-p factors
+    q_r = cp^(K-r) (1-cp)^r (chi-square over random hash draws);
+  * the multi-probe estimator stays unbiased (E[1/(pN)] = 1 over
+    index builds, and the gradient estimator matches the full-batch
+    gradient);
+  * the uniform-fallback rate strictly drops vs single-probe on a
+    skewed corpus — at the sampler level and through the pipeline's
+    ``sampler_stats`` metrics.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.estimator as E
+import repro.core.sampler as S
+from repro.core import (
+    LSHParams,
+    bucket_bounds_batched,
+    bucket_bounds_multi,
+    build_index,
+    probe_masks,
+)
+from repro.core.lgd import preprocess_regression, squared_loss_grad
+from repro.data import make_regression
+from repro.data.lsh_pipeline import LSHPipelineConfig, LSHSampledPipeline
+from repro.kernels.bucket_probe import (
+    bucket_probe_multi,
+    bucket_probe_multi_ref,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _unit(x):
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+def _skewed(n=256, d=24, spread=0.55, qnoise=0.9, nq=64, xseed=30):
+    """Tight cluster + partially-aligned query batch (empty buckets)."""
+    c = jax.random.normal(jax.random.PRNGKey(9), (d,))
+    x = _unit(c[None] + spread * jax.random.normal(
+        jax.random.PRNGKey(xseed), (n, d)))
+    qs = _unit(c[None] + qnoise * jax.random.normal(
+        jax.random.PRNGKey(11), (nq, d)))
+    return x, qs
+
+
+class TestProbeMasks:
+    def test_sequence_shape_and_order(self):
+        masks = probe_masks(4, 11)
+        # exact bucket, flip-1 ascending, then flip-2 lexicographic
+        assert masks == (0, 1, 2, 4, 8, 3, 5, 9, 6, 10, 12)
+
+    def test_clamped_to_radius_2_ball(self):
+        assert len(probe_masks(3, 50)) == 1 + 3 + 3
+        assert len(probe_masks(1, 50)) == 2
+
+    def test_invalid(self):
+        with pytest.raises(ValueError):
+            probe_masks(5, 0)
+
+    def test_popcounts(self):
+        masks = probe_masks(6, 1 + 6 + 15)
+        rs = [bin(m).count("1") for m in masks]
+        assert rs == [0] + [1] * 6 + [2] * 15
+
+
+class TestMultiProbeKernel:
+    @pytest.mark.parametrize("b,d,k,l,n,j", [
+        (8, 64, 5, 8, 512, 3),     # exact block fit
+        (3, 33, 7, 10, 300, 6),    # padding on every axis
+        (1, 16, 4, 3, 129, 2),     # single query, ragged N
+        (16, 24, 32, 4, 256, 5),   # max K (uint32 top bit exercised)
+        (5, 24, 1, 1, 8, 2),       # degenerate K=1 (flip-1 only)
+    ])
+    def test_fused_matches_ref(self, b, d, k, l, n, j):
+        from repro.kernels.simhash import simhash_codes_ref
+        kq, kw, kx = jax.random.split(jax.random.fold_in(KEY, b + n), 3)
+        q = jax.random.normal(kq, (b, d))
+        w = jax.random.normal(kw, (d, l * k))
+        codes = simhash_codes_ref(jax.random.normal(kx, (n, d)), w,
+                                  k=k, l=l).T
+        sc = jnp.sort(codes, axis=1)
+        masks = probe_masks(k, j)
+        lo_r, hi_r = bucket_probe_multi(q, w, sc, masks, k=k, l=l,
+                                        use_pallas=False)
+        lo_k, hi_k = bucket_probe_multi(q, w, sc, masks, k=k, l=l,
+                                        use_pallas=True, interpret=True)
+        assert lo_r.shape == (b, j, l)
+        np.testing.assert_array_equal(np.asarray(lo_r), np.asarray(lo_k))
+        np.testing.assert_array_equal(np.asarray(hi_r), np.asarray(hi_k))
+
+    def test_mask_zero_matches_single_probe(self):
+        """Probe 0 of the multi path == the single-probe bounds."""
+        x, qs = _skewed()
+        p = LSHParams(k=9, l=5, dim=x.shape[1], family="dense")
+        idx = build_index(jax.random.PRNGKey(1), x, p)
+        lo1, hi1 = bucket_bounds_batched(idx, qs, p, use_pallas=False)
+        lom, him = bucket_bounds_multi(idx, qs, p, probe_masks(9, 4),
+                                       use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(lo1), np.asarray(lom[:, 0]))
+        np.testing.assert_array_equal(np.asarray(hi1), np.asarray(him[:, 0]))
+
+    def test_masked_bounds_are_xored_code_bounds(self):
+        """Probe j's slice == searching the XORed code directly."""
+        from repro.core.tables import bucket_bounds, query_codes
+        x, qs = _skewed(nq=4)
+        p = LSHParams(k=8, l=4, dim=x.shape[1], family="dense")
+        idx = build_index(jax.random.PRNGKey(1), x, p)
+        masks = probe_masks(8, 5)
+        lom, him = bucket_bounds_multi(idx, qs, p, masks, use_pallas=False)
+        qc = query_codes(idx, qs, p)                      # (B, L)
+        for b in range(qs.shape[0]):
+            for j, m in enumerate(masks):
+                lo_d, hi_d = bucket_bounds(idx, qc[b] ^ jnp.uint32(m))
+                np.testing.assert_array_equal(np.asarray(lom[b, j]),
+                                              np.asarray(lo_d))
+                np.testing.assert_array_equal(np.asarray(him[b, j]),
+                                              np.asarray(hi_d))
+
+    def test_quadratic_family_multi_bounds(self):
+        """Quadratic SRP hashes on the XLA path but probes multi codes."""
+        ds = make_regression(jax.random.PRNGKey(3), "yearmsd-like",
+                             n_train=200, n_test=10, d=12, noise="pareto")
+        _, _, x_aug = preprocess_regression(ds.x_train, ds.y_train)
+        p = LSHParams(k=6, l=4, dim=x_aug.shape[1], family="quadratic")
+        idx = build_index(jax.random.PRNGKey(1), x_aug, p)
+        masks = probe_masks(6, 4)
+        lom, him = bucket_bounds_multi(idx, x_aug[:3], p, masks,
+                                       use_pallas=False)
+        assert lom.shape == (3, 4, 4)
+        lo1, hi1 = bucket_bounds_batched(idx, x_aug[:3], p,
+                                         use_pallas=False)
+        np.testing.assert_array_equal(np.asarray(lo1), np.asarray(lom[:, 0]))
+
+
+class TestMultiProbeSampling:
+    def test_multiprobe_zero_bit_identical(self):
+        x, qs = _skewed()
+        p = LSHParams(k=9, l=5, dim=x.shape[1], family="dense")
+        idx = build_index(jax.random.PRNGKey(1), x, p)
+        r0 = S.sample(jax.random.PRNGKey(3), idx, x, qs[0], p, m=128)
+        r1 = S.sample(jax.random.PRNGKey(3), idx, x, qs[0], p, m=128,
+                      multiprobe=0)
+        for a, b in zip(r0[:5], r1[:5]):    # all pre-existing fields
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_probe_code_semantics(self):
+        x, qs = _skewed()
+        p = LSHParams(k=16, l=3, dim=x.shape[1], family="dense")
+        idx = build_index(jax.random.PRNGKey(1), x, p)
+        r = S.sample_batched(jax.random.PRNGKey(4), idx, x, qs, p, m=64,
+                             multiprobe=8)
+        pc = np.asarray(r.probe_code)
+        fb = np.asarray(r.fallback)
+        assert pc.min() >= -1 and pc.max() <= 8
+        # fallback <=> probe_code == -1
+        np.testing.assert_array_equal(fb, pc == -1)
+        # multi-probe must actually fire in this regime
+        assert ((pc > 0) & ~fb).any()
+
+    def test_fallback_strictly_drops_on_skewed_corpus(self):
+        """The satellite regression test: multi < single, with margin."""
+        x, qs = _skewed()
+        p = LSHParams(k=16, l=3, dim=x.shape[1], family="dense")
+        idx = build_index(jax.random.PRNGKey(1), x, p)
+        rates = {}
+        for mp in (0, 8):
+            r = S.sample_batched(jax.random.PRNGKey(4), idx, x, qs, p,
+                                 m=64, multiprobe=mp)
+            rates[mp] = float(jnp.mean(r.fallback))
+        assert rates[0] > 0.2, f"regime not skewed enough: {rates}"
+        assert rates[8] < 0.75 * rates[0], \
+            f"multi-probe fallback did not drop: {rates}"
+
+    def test_chi_square_probe_class_frequencies(self):
+        """Corrected-p factors match empirical collision frequencies.
+
+        Over random hash draws, P(code(x) ^ code(q) == mask) must equal
+        cp^(K-r) (1-cp)^r for a weight-r mask (SimHash bits are iid
+        across hash functions).  Chi-square over the probed masks plus
+        an 'elsewhere' cell, many independent single-table draws.
+        """
+        from repro.core.simhash import (
+            collision_probability, compute_codes, make_projections)
+        d, k = 16, 6
+        kx, kq = jax.random.split(jax.random.PRNGKey(7))
+        x = _unit(jax.random.normal(kx, (d,)))
+        q = _unit(x + 0.45 * jax.random.normal(kq, (d,)))
+        cp = float(collision_probability(x, q))
+        p = LSHParams(k=k, l=1, dim=d, family="dense")
+        masks = probe_masks(k, 1 + k + 3)       # all flip-1, some flip-2
+        trials = 4000
+
+        def diff_one(key):
+            proj = make_projections(key, p)
+            cx = compute_codes(x, proj, k=k, l=1)
+            cq = compute_codes(q, proj, k=k, l=1)
+            return (cx ^ cq)[0]
+
+        diffs = np.asarray(jax.lax.map(
+            diff_one, jax.random.split(jax.random.PRNGKey(8), trials)))
+        probs = []
+        counts = []
+        for m in masks:
+            r = bin(m).count("1")
+            probs.append(cp ** (k - r) * (1 - cp) ** r)
+            counts.append(int((diffs == m).sum()))
+        probs.append(1.0 - sum(probs))          # everything else
+        counts.append(trials - sum(counts))
+        exp = np.array(probs) * trials
+        assert (exp > 5).all(), "cells too small for chi-square"
+        chi2 = float((((np.array(counts) - exp) ** 2) / exp).sum())
+        # dof = cells - 1 = len(masks); 99.9% critical value for
+        # dof=10 is 29.6 — generous but catches a wrong exponent
+        # (swapping r and K-r sends chi2 into the thousands).
+        assert chi2 < 35.0, (
+            f"probe-class frequencies deviate from corrected-p factors: "
+            f"chi2={chi2:.1f}, counts={counts}, expected={exp.tolist()}")
+
+    def test_weights_unbiased_over_builds(self):
+        """E[1/(pN)] = 1 with multi-probe firing (over index builds)."""
+        ds = make_regression(jax.random.PRNGKey(42), "yearmsd-like",
+                             n_train=2000, n_test=10, d=24, noise="pareto")
+        _, _, x_aug = preprocess_regression(ds.x_train, ds.y_train)
+        n = x_aug.shape[0]
+        p = LSHParams(k=10, l=8, dim=x_aug.shape[1], family="dense")
+        theta = 0.05 * jax.random.normal(jax.random.PRNGKey(6), (24,))
+        q = _unit(jnp.concatenate([theta, -jnp.ones(1)]))
+
+        def mean_w(mp):
+            def per_build(key):
+                kb, ks = jax.random.split(key)
+                idx = build_index(kb, x_aug, p)
+                r = S.sample(ks, idx, x_aug, q, p, m=128, multiprobe=mp)
+                return jnp.mean(1.0 / (r.probs * n))
+            keys = jax.random.split(jax.random.PRNGKey(4), 200)
+            return float(jnp.mean(jax.lax.map(per_build, keys)))
+
+        w_multi = mean_w(3)
+        assert abs(w_multi - 1.0) < 0.15, (
+            f"multi-probe weights biased: E[w]={w_multi:.3f}")
+
+    def test_gradient_estimator_unbiased_with_multiprobe(self):
+        """E[weighted grad] ~= full-batch grad with multi-probe firing.
+
+        In this sparse-table regime (K=10, L=8 over pareto targets) the
+        importance weights are heavy-tailed, so the empirical mean of
+        ~16k draws still carries sampling noise — the single-probe
+        estimator measured identically is the honest yardstick (its
+        rare uniform fallbacks carry the worst 1/(pN) tails; resolving
+        them via corrected near-bucket probes is exactly what shrinks
+        the error here).  The multi-probe correction must (a) track the
+        full-batch gradient to a bounded error and (b) be no noisier
+        than single-probe at matched sample count.
+        """
+        ds = make_regression(jax.random.PRNGKey(42), "yearmsd-like",
+                             n_train=1500, n_test=10, d=16, noise="pareto")
+        xt, yt, x_aug = preprocess_regression(ds.x_train, ds.y_train)
+        n = xt.shape[0]
+        p = LSHParams(k=10, l=8, dim=x_aug.shape[1], family="dense")
+        theta = 0.05 * jax.random.normal(jax.random.PRNGKey(2), (16,))
+        q = _unit(jnp.concatenate([theta, -jnp.ones(1)]))
+        full_grad = jnp.mean(jax.vmap(
+            lambda a, b: squared_loss_grad(theta, a, b))(xt, yt), 0)
+
+        def rel_err(mp):
+            def per_build(key):
+                kb, ks = jax.random.split(key)
+                idx = build_index(kb, x_aug, p)
+                r = S.sample(ks, idx, x_aug, q, p, m=64, multiprobe=mp)
+                return E.lgd_gradient(squared_loss_grad, theta,
+                                      xt[r.indices], yt[r.indices], r, n)
+            keys = jax.random.split(jax.random.PRNGKey(3), 250)
+            grand = jnp.mean(jax.lax.map(per_build, keys), axis=0)
+            return float(jnp.linalg.norm(grand - full_grad) /
+                         jnp.linalg.norm(full_grad))
+
+        rel_multi, rel_single = rel_err(3), rel_err(0)
+        assert rel_multi < 0.6, (
+            f"multi-probe estimator biased: rel err {rel_multi}")
+        assert rel_multi <= rel_single + 0.05, (
+            f"multi-probe noisier than single-probe: {rel_multi:.3f} vs "
+            f"{rel_single:.3f}")
+
+
+class TestPipelineMultiprobe:
+    def _pipe(self, multiprobe):
+        # legacy-closure pipeline over a skewed feature geometry: the
+        # feature hook embeds rows by their first token into a tight
+        # cluster; the query sits partially off it -> empty buckets.
+        n, d, seq, vocab = 192, 24, 12, 64
+        c = jax.random.normal(jax.random.PRNGKey(9), (d,))
+        table = jnp.asarray(c[None] + 0.55 * jax.random.normal(
+            jax.random.PRNGKey(30), (vocab, d)))
+        tokens = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(5), (n, seq + 1), 0,
+                               vocab), np.int32)
+        qv = c + 0.9 * jax.random.normal(jax.random.PRNGKey(11), (d,))
+        cfg = LSHPipelineConfig(k=16, l=3, minibatch=32, refresh_every=0,
+                                multiprobe=multiprobe)
+        return LSHSampledPipeline(
+            jax.random.PRNGKey(2), tokens,
+            lambda t: table[t[:, 0]],
+            lambda: qv,
+            cfg)
+
+    def test_config_validation(self):
+        with pytest.raises(ValueError):
+            LSHPipelineConfig(multiprobe=-1)
+
+    def test_drain_mode_rejects_multiprobe(self):
+        from repro.core import LGDProblem
+        with pytest.raises(ValueError):
+            LGDProblem(kind="regression",
+                       lsh=LSHParams(k=5, l=10, dim=8, family="dense"),
+                       drain=True, multiprobe=2)
+
+    def test_stats_and_fallback_drop_through_pipeline(self):
+        rates = {}
+        for mp in (0, 8):
+            pipe = self._pipe(mp)
+            for _ in range(30):
+                b = pipe.next_batch()
+            st = pipe.sampler_stats()
+            assert st["draws"] == 30 * 32
+            assert 0.0 <= st["fallback_rate"] <= 1.0
+            assert st["primary_miss_rate"] >= st["fallback_rate"]
+            rates[mp] = st["fallback_rate"]
+            assert set(b) == {"tokens", "targets", "loss_weights",
+                              "example_ids"}
+        assert rates[0] > 0.05, f"pipeline regime not skewed: {rates}"
+        assert rates[8] < rates[0], (
+            f"pipeline multi-probe fallback did not drop: {rates}")
+
+    def test_multiprobe_pipeline_deterministic(self):
+        a, b = self._pipe(4), self._pipe(4)
+        for _ in range(3):
+            ba, bb = a.next_batch(), b.next_batch()
+            np.testing.assert_array_equal(np.asarray(ba["tokens"]),
+                                          np.asarray(bb["tokens"]))
+            np.testing.assert_array_equal(np.asarray(ba["loss_weights"]),
+                                          np.asarray(bb["loss_weights"]))

@@ -1,0 +1,228 @@
+"""Adaptive optimisers under LGD: weight/moment composition contracts.
+
+The sampler path applies 1/(p·N) importance weights INSIDE the loss, so
+the gradient any optimiser receives is already the unbiased estimate —
+moments must be running statistics OF that estimate.  Pinned here:
+
+  * ORDER: after one Trainer step under Adam, the first/second moments
+    equal (1-b1)·g and (1-b2)·g² for g = grad of the importance-
+    weighted loss at the initial params — i.e. weights are applied
+    strictly BEFORE moment accumulation (a sampler-unaware optimiser).
+  * UNBIASEDNESS against full-batch moments: E over independent LGD
+    draws of Adam's first moment equals (1-b1)·(full-batch gradient)
+    — the moment tracks the true mean gradient, not a reweighted one.
+  * AdaGrad's accumulator is the square of the weighted estimate.
+  * End-to-end: Trainer + ShardedLSHPipeline trains under Adam,
+    AdaGrad and momentum-SGD (losses finite and decreasing-ish), and
+    ``make_optimizer`` builds every family by name.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.estimator as E
+import repro.core.sampler as S
+from repro.core import (
+    LGDProblem,
+    LSHParams,
+    build_index,
+    full_loss,
+    init as lgd_init,
+    lgd_step,
+)
+from repro.core.lgd import preprocess_regression, squared_loss_grad
+from repro.data import make_regression, make_token_corpus
+from repro.data.lsh_pipeline import (
+    LSHPipelineConfig,
+    LSHSampledPipeline,
+    lm_head_query_fn,
+    mean_pool_feature_fn,
+)
+from repro.models import ModelConfig, init_params, loss as lm_loss
+from repro.optim import SGD, AdaGrad, Adam, make_optimizer
+from repro.train import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+CFG = ModelConfig(
+    name="lm-optim-test", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
+    d_ff=64, vocab=128, chunk=8, loss_chunk=32, dtype="float32",
+    rope_theta=10000.0)
+
+
+def _pipeline(params, minibatch=16, multiprobe=0):
+    corpus = make_token_corpus(13, 192, 12, CFG.vocab, hard_frac=0.15)
+    return LSHSampledPipeline(
+        jax.random.PRNGKey(21), corpus.tokens, mean_pool_feature_fn(CFG),
+        lm_head_query_fn(),
+        LSHPipelineConfig(k=5, l=6, minibatch=minibatch, refresh_every=0,
+                          multiprobe=multiprobe),
+        params=params)
+
+
+class TestMakeOptimizer:
+    def test_families(self):
+        assert isinstance(make_optimizer("sgd"), SGD)
+        mom = make_optimizer("momentum")
+        assert isinstance(mom, SGD) and mom.momentum == 0.9
+        assert isinstance(make_optimizer("adagrad"), AdaGrad)
+        assert isinstance(make_optimizer("adam"), Adam)
+        assert make_optimizer("adamw").weight_decay > 0
+        assert make_optimizer("adam", lr=1e-4).lr == 1e-4
+
+    def test_unknown(self):
+        with pytest.raises(ValueError):
+            make_optimizer("sophia")
+
+
+class TestWeightsBeforeMoments:
+    def test_adam_moments_of_weighted_estimate_trainer_path(self):
+        """m_1 == (1-b1)·grad(weighted loss), v_1 == (1-b2)·grad²."""
+        params = init_params(KEY, CFG)
+        b1, b2 = 0.9, 0.999
+        tr = Trainer(CFG, params, Adam(lr=1e-3, b1=b1, b2=b2),
+                     tcfg=TrainerConfig(log_every=10_000, grad_clip=None),
+                     sampler=_pipeline(params))
+        # twin pipeline with the same constructor key draws the exact
+        # batch the trainer consumes (determinism contract)
+        twin = _pipeline(init_params(KEY, CFG))
+        batch = twin.next_batch()
+        g = jax.grad(lambda p: lm_loss(p, CFG, batch))(params)
+        tr.run(1)
+        m_leaves = jax.tree.leaves(tr.opt_state.m)
+        v_leaves = jax.tree.leaves(tr.opt_state.v)
+        g_leaves = jax.tree.leaves(g)
+        assert len(m_leaves) == len(g_leaves)
+        for gm, gl in zip(m_leaves, g_leaves):
+            np.testing.assert_allclose(
+                np.asarray(gm), (1 - b1) * np.asarray(gl, np.float32),
+                rtol=2e-4, atol=1e-7)
+        for gv, gl in zip(v_leaves, g_leaves):
+            np.testing.assert_allclose(
+                np.asarray(gv),
+                (1 - b2) * np.square(np.asarray(gl, np.float32)),
+                rtol=2e-4, atol=1e-10)
+
+    def test_adagrad_accumulates_squared_weighted_estimate(self):
+        """Linear path: accum_1 == g_est² for the weighted estimate."""
+        ds = make_regression(jax.random.PRNGKey(1), "yearmsd-like",
+                             n_train=800, n_test=10, d=12, noise="pareto")
+        prob = LGDProblem(
+            kind="regression",
+            lsh=LSHParams(k=5, l=20, dim=13, family="quadratic"),
+            minibatch=8)
+        opt = AdaGrad(lr=1e-2)
+        state, xt, yt, x_aug = lgd_init(jax.random.PRNGKey(2), prob,
+                                        ds.x_train, ds.y_train, opt)
+        k = jax.random.PRNGKey(3)
+        new_state, _ = lgd_step(k, state, xt, yt, x_aug, prob, opt)
+        # replay the draw: same key, same index -> same estimate
+        res = S.sample(k, state.index, x_aug,
+                       jnp.concatenate([state.theta, -jnp.ones(1)]),
+                       prob.lsh, m=prob.minibatch)
+        g_est = E.lgd_gradient(squared_loss_grad, state.theta,
+                               xt[res.indices], yt[res.indices], res,
+                               xt.shape[0])
+        np.testing.assert_allclose(
+            np.asarray(new_state.opt_state.accum),
+            np.square(np.asarray(g_est)), rtol=1e-5, atol=1e-10)
+
+    def test_momentum_buffer_is_weighted_estimate(self):
+        ds = make_regression(jax.random.PRNGKey(1), "yearmsd-like",
+                             n_train=800, n_test=10, d=12, noise="pareto")
+        prob = LGDProblem(
+            kind="regression",
+            lsh=LSHParams(k=5, l=20, dim=13, family="quadratic"),
+            minibatch=8)
+        opt = SGD(lr=1e-2, momentum=0.9)
+        state, xt, yt, x_aug = lgd_init(jax.random.PRNGKey(2), prob,
+                                        ds.x_train, ds.y_train, opt)
+        k = jax.random.PRNGKey(3)
+        new_state, _ = lgd_step(k, state, xt, yt, x_aug, prob, opt)
+        res = S.sample(k, state.index, x_aug,
+                       jnp.concatenate([state.theta, -jnp.ones(1)]),
+                       prob.lsh, m=prob.minibatch)
+        g_est = E.lgd_gradient(squared_loss_grad, state.theta,
+                               xt[res.indices], yt[res.indices], res,
+                               xt.shape[0])
+        np.testing.assert_allclose(np.asarray(new_state.opt_state.momentum),
+                                   np.asarray(g_est), rtol=1e-6)
+
+
+class TestMomentUnbiasedness:
+    def test_adam_first_moment_tracks_full_batch_gradient(self):
+        """E[m_1] == (1-b1)·full-batch grad, over independent draws.
+
+        This is the 'unbiasedness against full-batch moments' pin: the
+        first moment of a sampler-fed Adam is an unbiased estimate of
+        the full-batch first moment because the weights act on the
+        estimate BEFORE accumulation.  (Second moments accumulate
+        E[g²] ≥ E[g]² by design — only the first moment admits a
+        full-batch comparison.)
+        """
+        ds = make_regression(jax.random.PRNGKey(42), "yearmsd-like",
+                             n_train=1500, n_test=10, d=16, noise="pareto")
+        xt, yt, x_aug = preprocess_regression(ds.x_train, ds.y_train)
+        n = xt.shape[0]
+        p = LSHParams(k=5, l=100, dim=17, family="quadratic")
+        theta = 0.05 * jax.random.normal(jax.random.PRNGKey(2), (16,))
+        q = jnp.concatenate([theta, -jnp.ones(1)])
+        q = q / jnp.linalg.norm(q)
+        full_grad = jnp.mean(jax.vmap(
+            lambda a, b: squared_loss_grad(theta, a, b))(xt, yt), 0)
+        b1 = 0.9
+        opt = Adam(lr=1e-3, b1=b1)
+
+        def m1_of_draw(key):
+            kb, ks = jax.random.split(key)
+            index = build_index(kb, x_aug, p)
+            r = S.sample(ks, index, x_aug, q, p, m=64, multiprobe=2)
+            g = E.lgd_gradient(squared_loss_grad, theta, xt[r.indices],
+                               yt[r.indices], r, n)
+            _, st = opt.update(g, opt.init(theta), theta)
+            return st.m
+
+        keys = jax.random.split(jax.random.PRNGKey(3), 150)
+        mean_m1 = jnp.mean(jax.lax.map(m1_of_draw, keys), axis=0)
+        rel = float(jnp.linalg.norm(mean_m1 - (1 - b1) * full_grad) /
+                    jnp.linalg.norm((1 - b1) * full_grad))
+        assert rel < 0.25, (
+            f"Adam first moment biased vs full-batch moment: rel {rel}")
+
+
+class TestEndToEnd:
+    @pytest.mark.parametrize("name", ["momentum", "adagrad", "adam"])
+    def test_trainer_trains_under_each_optimizer(self, name):
+        params = init_params(KEY, CFG)
+        pipe = _pipeline(params, multiprobe=2)
+        tr = Trainer(CFG, params, make_optimizer(name),
+                     tcfg=TrainerConfig(log_every=5), sampler=pipe)
+        out = tr.run(10)
+        losses = out["losses"]
+        assert len(losses) == 10
+        assert all(np.isfinite(losses))
+        assert losses[-1] < losses[0] * 1.05   # no blow-up
+        assert tr.metrics_history and \
+            "fallback_rate" in tr.metrics_history[-1]
+        tr.finalize()
+
+    @pytest.mark.parametrize("name", ["momentum", "adagrad", "adam"])
+    def test_linear_lgd_converges_under_each_optimizer(self, name):
+        ds = make_regression(jax.random.PRNGKey(5), "yearmsd-like",
+                             n_train=1000, n_test=10, d=16, noise="pareto")
+        prob = LGDProblem(
+            kind="regression",
+            lsh=LSHParams(k=5, l=50, dim=17, family="quadratic"),
+            minibatch=16, multiprobe=1)
+        opt = make_optimizer(name, 2e-2)
+        state, xt, yt, x_aug = lgd_init(jax.random.PRNGKey(6), prob,
+                                        ds.x_train, ds.y_train, opt)
+        loss0 = float(full_loss(state.theta, xt, yt, prob))
+        for i in range(120):
+            state, _ = lgd_step(jax.random.fold_in(KEY, i), state, xt, yt,
+                                x_aug, prob, opt)
+        loss1 = float(full_loss(state.theta, xt, yt, prob))
+        assert np.isfinite(loss1) and loss1 < loss0, (
+            f"{name}: {loss0} -> {loss1}")

@@ -1,0 +1,128 @@
+"""Documentation gate: link checker + documented-command execution.
+
+Two checks over ``README.md`` and every markdown file under ``docs/``:
+
+1. LINK CHECK — every relative markdown link ``[text](target)`` must
+   resolve to an existing file (anchors are stripped; ``http(s)://``
+   and ``mailto:`` links are skipped — CI must not flake on the
+   network).  Targets resolve relative to the file that contains them,
+   with a repo-root fallback for absolute-style paths.
+
+2. SNIPPET EXECUTION — fenced shell blocks tagged with an HTML comment
+   ``<!-- ci:run -->`` on the line directly above the fence are
+   executed line by line (comments and blank lines skipped) from the
+   repo root with ``PYTHONPATH=src``.  A non-zero exit fails the gate,
+   so the documented quickstart invocations cannot rot.  Keep tagged
+   snippets CPU-quick (< ~2 min): they run in the CI ``docs`` job.
+
+Usage:  python tools/check_docs.py  (exit 0 = docs are healthy)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+RUN_TAG = "<!-- ci:run -->"
+
+
+def md_files():
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        for base, _, names in os.walk(docs):
+            files.extend(os.path.join(base, n) for n in sorted(names)
+                         if n.endswith(".md"))
+    return [f for f in files if os.path.exists(f)]
+
+
+def strip_code_blocks(text: str) -> str:
+    """Drop fenced code blocks so links are only checked in prose."""
+    return re.sub(r"```.*?```", "", text, flags=re.S)
+
+
+def check_links(path: str) -> list:
+    failures = []
+    with open(path) as f:
+        text = f.read()
+    for target in LINK_RE.findall(strip_code_blocks(text)):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        cand = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        cand_root = os.path.normpath(os.path.join(ROOT, rel.lstrip("/")))
+        if not (os.path.exists(cand) or os.path.exists(cand_root)):
+            failures.append(
+                f"{os.path.relpath(path, ROOT)}: broken link -> {target}")
+    return failures
+
+
+def tagged_snippets(path: str) -> list:
+    """Fenced sh blocks directly preceded by the ci:run tag."""
+    snippets = []
+    with open(path) as f:
+        lines = f.read().splitlines()
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == RUN_TAG:
+            j = i + 1
+            if j < len(lines) and lines[j].startswith("```"):
+                k = j + 1
+                block = []
+                while k < len(lines) and not lines[k].startswith("```"):
+                    block.append(lines[k])
+                    k += 1
+                snippets.append((i + 1, block))
+                i = k
+        i += 1
+    return snippets
+
+
+def run_snippets(path: str) -> list:
+    failures = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    for lineno, block in tagged_snippets(path):
+        for cmd in block:
+            cmd = cmd.strip()
+            if not cmd or cmd.startswith("#"):
+                continue
+            print(f"[ci:run] {os.path.relpath(path, ROOT)}:{lineno}: {cmd}",
+                  flush=True)
+            proc = subprocess.run(cmd, shell=True, cwd=ROOT, env=env,
+                                  timeout=600)
+            if proc.returncode != 0:
+                failures.append(
+                    f"{os.path.relpath(path, ROOT)}:{lineno}: documented "
+                    f"command failed (exit {proc.returncode}): {cmd}")
+    return failures
+
+
+def main() -> int:
+    failures = []
+    files = md_files()
+    print(f"checking {len(files)} markdown file(s)")
+    for path in files:
+        failures.extend(check_links(path))
+    n_snip = sum(len(tagged_snippets(p)) for p in files)
+    print(f"link check done; executing {n_snip} tagged snippet(s)")
+    for path in files:
+        failures.extend(run_snippets(path))
+    for msg in failures:
+        print(f"::error::{msg}")
+    if failures:
+        return 1
+    print("docs gate: all links resolve, all documented commands run")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
