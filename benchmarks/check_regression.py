@@ -55,6 +55,18 @@ Optimizers (``optimizers.json``):
                     ``--fallback-cap`` (default 0.75: the Hamming-ball
                     walk must strictly beat single-probe, with margin).
 
+Families (``families.json``):
+  mips step         us(mips draw) / us(srp draw), interleaved same-run —
+                    the asymmetric family is linear SRP in one extra
+                    dimension, so its sampling step is capped at
+                    ``--families-step-cap`` (default 1.15) over SRP.
+  mips variance     Tr Cov(MIPS single-sample estimator, averaged over
+                    index builds) / Tr Cov(uniform) on the calibrated
+                    un-normalised skewed corpus — must stay BELOW
+                    ``--families-var-cap`` (default 1.0: hashing
+                    un-normalised data, the asymmetric family must
+                    still deliver the adaptive-sampling variance win).
+
 ``--selftest`` proves the gate can actually fail before it is trusted:
 it injects a slowdown into every gated quantity and asserts each
 comparison trips.
@@ -80,6 +92,7 @@ DEFAULT = os.path.join(HERE, "results", "sampling_cost.json")
 DEFAULT_REFRESH = os.path.join(HERE, "results", "refresh_cost.json")
 DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
 DEFAULT_OPTIM = os.path.join(HERE, "results", "optimizers.json")
+DEFAULT_FAMILIES = os.path.join(HERE, "results", "families.json")
 
 
 def ratios(d: dict) -> dict:
@@ -256,8 +269,44 @@ def compare_optimizers(baseline: dict, fresh: dict, step_cap: float,
     return failures
 
 
+def compare_families(baseline: dict, fresh: dict, step_cap: float,
+                     var_cap: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "n_points", "d", "k", "l", "draws",
+                            "builds"),
+                           "families")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+
+    got = fresh["step_us"]["mips_vs_srp"]
+    ok = got <= step_cap
+    print(f"families mips step: baseline "
+          f"{baseline['step_us']['mips_vs_srp']:.3f}  fresh {got:.3f}  "
+          f"cap {step_cap:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"MIPS sampling step regressed: mips/srp {got:.3f} > cap "
+            f"{step_cap:.3f} (the asymmetric family is one extra column "
+            "of linear SRP — it must not cost more than that)")
+
+    got = fresh["estimator_variance"]["mips"]["ratio"]
+    ok = got < var_cap
+    print(f"families mips var_ratio: baseline "
+          f"{baseline['estimator_variance']['mips']['ratio']:.3f}  fresh "
+          f"{got:.3f}  cap {var_cap:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"MIPS estimator variance not below uniform on the "
+            f"un-normalised skewed corpus: ratio {got:.3f} >= "
+            f"{var_cap:.3f} (the no-normalisation variance win is the "
+            "point of the asymmetric family)")
+    return failures
+
+
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
-             optim_base: dict, args) -> int:
+             optim_base: dict, families_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -312,6 +361,20 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_optimizers(optim_base, fb_bad,
                                            *optim_args)))
 
+    fam_args = (args.families_step_cap, args.families_var_cap)
+    fam_slow = json.loads(json.dumps(families_base))
+    fam_slow["step_us"]["mips_vs_srp"] *= 2.0
+    print("-- selftest 9: injected 2x MIPS sampling-step slowdown --")
+    results.append(bool(compare_families(families_base, fam_slow,
+                                         *fam_args)))
+
+    fam_var = json.loads(json.dumps(families_base))
+    fam_var["estimator_variance"]["mips"]["ratio"] = \
+        args.families_var_cap * 1.5
+    print("-- selftest 10: injected MIPS variance-win loss --")
+    results.append(bool(compare_families(families_base, fam_var,
+                                         *fam_args)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -338,6 +401,10 @@ def main() -> int:
                     help="committed optimizers baseline JSON")
     ap.add_argument("--fresh-optim", default=DEFAULT_OPTIM,
                     help="freshly measured optimizers JSON")
+    ap.add_argument("--baseline-families", default=DEFAULT_FAMILIES,
+                    help="committed families baseline JSON")
+    ap.add_argument("--fresh-families", default=DEFAULT_FAMILIES,
+                    help="freshly measured families JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
@@ -357,6 +424,12 @@ def main() -> int:
     ap.add_argument("--fallback-cap", type=float, default=0.75,
                     help="cap on multi-probe / single-probe fallback-rate "
                          "ratio on the skewed corpus")
+    ap.add_argument("--families-step-cap", type=float, default=1.15,
+                    help="absolute cap on MIPS/SRP per-draw sampling "
+                         "cost ratio")
+    ap.add_argument("--families-var-cap", type=float, default=1.0,
+                    help="MIPS estimator variance ratio vs uniform must "
+                         "stay below this on the un-normalised corpus")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
@@ -369,9 +442,11 @@ def main() -> int:
         train_base = json.load(f)
     with open(args.baseline_optim) as f:
         optim_base = json.load(f)
+    with open(args.baseline_families) as f:
+        families_base = json.load(f)
     if args.selftest:
         return selftest(baseline, refresh_base, train_base, optim_base,
-                        args)
+                        families_base, args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -381,6 +456,8 @@ def main() -> int:
         train_fresh = json.load(f)
     with open(args.fresh_optim) as f:
         optim_fresh = json.load(f)
+    with open(args.fresh_families) as f:
+        families_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
@@ -390,6 +467,9 @@ def main() -> int:
     failures += compare_optimizers(optim_base, optim_fresh,
                                    args.optim_step_cap, args.optim_var_cap,
                                    args.fallback_cap)
+    failures += compare_families(families_base, families_fresh,
+                                 args.families_step_cap,
+                                 args.families_var_cap)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

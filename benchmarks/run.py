@@ -18,6 +18,9 @@
                            under LGD: per-optimizer step time + estimator
                            variance, and multi-probe vs single-probe
                            fallback rate on a skewed corpus
+  tab_families             SRP vs asymmetric-MIPS hash families on an
+                           un-normalised corpus: per-draw sampling cost
+                           + estimator variance vs uniform
   thm2_variance            empirical Tr(Cov) of LGD vs SGD estimators
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's
@@ -748,6 +751,144 @@ def tab_optimizers(quick: bool = False):
     return out
 
 
+def tab_families(quick: bool = False):
+    """SRP vs MIPS (asymmetric Simple-LSH) on an UN-normalised corpus.
+
+    Two gated quantities (see docs/BENCHMARKS.md):
+
+    * per-draw SAMPLING cost, SRP index vs MIPS index over the same
+      un-normalised corpus, interleaved in one loop with 10th-percentile
+      stats (the drift discipline of ``tab_sampling_cost``).  The MIPS
+      family is linear SRP in aug_dim = d+1 dimensions — same fused
+      kernels, one extra column — so its step must stay within
+      ``--families-step-cap`` (default 1.15x) of SRP, same run.
+
+    * ESTIMATOR variance in the calibrated skewed regime: un-normalised
+      rows (x norms 2.7–3.3, never row-scaled), a 10% outlier cluster
+      with capped heavy residuals, theta = 0 (early training — Lemma 1),
+      K=3 / L=100.  The calibration keeps the augmented geometry inside
+      Simple-LSH's exact zone: residual outliers bounded by ~the x
+      norms, so no point collapses to the augmentation pole, buckets
+      stay populated (l = 1, where Algorithm 1's probability formula is
+      exact) and K stays small so Theorem 2's bucket-size noise does
+      not swallow the collision tilt (docs/ARCHITECTURE.md documents
+      this boundary).  Measured as Tr Cov of the single-sample
+      importance-weighted estimator over ``draws`` draws, averaged over
+      8 index builds, vs uniform sampling on the same corpus.  Gate:
+      MIPS/uniform < ``--families-var-cap`` (default 1.0).  Symmetric
+      dense SRP on the row-normalised version of the same corpus is
+      recorded for the table (informational).
+    """
+    from repro.core import get_family
+    from repro.core.lgd import preprocess_regression_mips
+
+    n, d = (2000, 32) if quick else (4000, 32)
+    iters = 150 if quick else 300
+    draws = 10_000 if quick else 30_000
+    builds = 8
+    k_lsh, l_lsh = 3, 100
+
+    # un-normalised corpus: spread directions, 2.7-3.3 norms, 10%
+    # outlier cluster with a tight capped heavy tail (see docstring)
+    kx, kn, knn, kb = jax.random.split(jax.random.PRNGKey(33), 4)
+    dirs = jax.random.normal(kx, (n, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    x = dirs * jax.random.uniform(kn, (n, 1), minval=2.7, maxval=3.3)
+    mask = jax.random.bernoulli(kb, 0.1, (n,)).astype(jnp.float32)
+    y = -mask * jnp.minimum(
+        1.2 + 0.2 * jax.random.pareto(knn, 2.0, (n,)), 1.8)
+
+    fam_mips = get_family("mips")
+    xt_m, yt_m, xa_mips = preprocess_regression_mips(x, y, fam_mips)
+    # symmetric SRP on the SAME corpus: the paper's preprocessing
+    # (row-normalised x, hash [x, y])
+    xt_s, yt_s, xa_srp = preprocess_regression(x, y)
+
+    p_srp = LSHParams(k=k_lsh, l=l_lsh, dim=d + 1, family="dense")
+    p_mips = LSHParams(k=k_lsh, l=l_lsh, dim=d + 2, family="mips")
+    idx_srp = build_index(jax.random.PRNGKey(34), xa_srp, p_srp)
+    idx_mips = build_index(jax.random.PRNGKey(34), xa_mips, p_mips)
+
+    theta = jnp.zeros(d)                     # early training (Lemma 1)
+    q_srp = regression_query(theta)
+    q_mips = fam_mips.augment_query(regression_query(theta))
+
+    # --- interleaved per-draw sampling cost -------------------------------
+    srp_fn = lambda k: S.sample(k, idx_srp, xa_srp, q_srp, p_srp,   # noqa: E731
+                                m=1).indices
+    mips_fn = lambda k: S.sample(k, idx_mips, xa_mips, q_mips,      # noqa: E731
+                                 p_mips, m=1).indices
+    jax.block_until_ready(srp_fn(KEY))
+    jax.block_until_ready(mips_fn(KEY))
+    dt_s, dt_m = [], []
+    for i in range(iters):
+        kk = jax.random.fold_in(KEY, i)
+        t0 = time.perf_counter()
+        jax.block_until_ready(srp_fn(kk))
+        dt_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(mips_fn(kk))
+        dt_m.append(time.perf_counter() - t0)
+    us_srp = float(np.percentile(dt_s, 10)) * 1e6
+    us_mips = float(np.percentile(dt_m, 10)) * 1e6
+
+    # --- estimator variance over draws, averaged over index builds --------
+    def var_over_builds(x_aug, qv, params, xt, yt):
+        def per_build(bk):
+            kb_, ks = jax.random.split(bk)
+            index = build_index(kb_, x_aug, params)
+            r = S.sample(ks, index, x_aug, qv, params, m=draws)
+            w = 1.0 / (r.probs * n)
+            g = jax.vmap(lambda i, wi: squared_loss_grad(
+                theta, xt[i], yt[i]) * wi)(r.indices, w)
+            return E.empirical_estimator_covariance_trace(g)
+        vs = jax.lax.map(per_build,
+                         jax.random.split(jax.random.PRNGKey(35), builds))
+        return float(jnp.mean(vs))
+
+    def one_uni(kk):
+        i = jax.random.randint(kk, (), 0, n)
+        return squared_loss_grad(theta, xt_m[i], yt_m[i])
+
+    v_uni = float(E.empirical_estimator_covariance_trace(jax.lax.map(
+        one_uni, jax.random.split(jax.random.PRNGKey(36), draws))))
+    v_mips = var_over_builds(xa_mips, q_mips, p_mips, xt_m, yt_m)
+    # SRP comparison on ITS preprocessing, vs uniform on the same
+    def one_uni_s(kk):
+        i = jax.random.randint(kk, (), 0, n)
+        return squared_loss_grad(theta, xt_s[i], yt_s[i])
+    v_uni_s = float(E.empirical_estimator_covariance_trace(jax.lax.map(
+        one_uni_s, jax.random.split(jax.random.PRNGKey(36), draws))))
+    v_srp = var_over_builds(xa_srp, q_srp, p_srp, xt_s, yt_s)
+
+    var_mips = {"lgd": v_mips, "uniform": v_uni,
+                "ratio": v_mips / max(v_uni, 1e-30)}
+    var_srp = {"lgd": v_srp, "uniform": v_uni_s,
+               "ratio": v_srp / max(v_uni_s, 1e-30)}
+
+    _row("tab_families_step[srp]", us_srp, "baseline")
+    _row("tab_families_step[mips]", us_mips,
+         f"{us_mips / max(us_srp, 1e-9):.3f}x srp")
+    _row("tab_families_var[mips]", 0.0, f"{var_mips['ratio']:.3f}")
+    _row("tab_families_var[srp]", 0.0, f"{var_srp['ratio']:.3f}")
+
+    out = {
+        "backend": jax.default_backend(),
+        "quick": quick, "n_points": n, "d": d, "k": k_lsh, "l": l_lsh,
+        "draws": draws, "builds": builds,
+        "step_us": {"srp": us_srp, "mips": us_mips,
+                    "mips_vs_srp": us_mips / max(us_srp, 1e-9)},
+        "estimator_variance": {"mips": var_mips, "srp": var_srp},
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    # families.json is the CI regression-gate baseline (quick mode);
+    # BENCH_families.json keeps the full-mode trajectory record.
+    fname = "families.json" if quick else "BENCH_families.json"
+    with open(os.path.join(RESULTS, fname), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def thm2_variance():
     # Lemma-1 regime (calibrated in tests/test_estimator.py): pareto
     # alpha=1.5 residuals, theta=0 (early training).
@@ -792,6 +933,7 @@ TABLES = {
     "fig5_lm_epochwise": lambda quick: fig5_lm_epochwise(),
     "tab_train_step": tab_train_step,
     "tab_optimizers": tab_optimizers,
+    "tab_families": tab_families,
     "thm2_variance": lambda quick: thm2_variance(),
 }
 
@@ -808,7 +950,7 @@ def main() -> None:
     os.makedirs(RESULTS, exist_ok=True)
     print("name,us_per_call,derived")
     quick_aware = {"tab_sampling_cost", "tab_refresh_cost",
-                   "tab_train_step", "tab_optimizers"}
+                   "tab_train_step", "tab_optimizers", "tab_families"}
     if args.quick:
         ignored = [n for n in names if n not in quick_aware]
         if ignored:

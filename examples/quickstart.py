@@ -11,8 +11,15 @@ adam}``), and ``--multiprobe`` turns on Hamming-ball multi-probe
 querying (empty buckets resolve to probability-corrected neighbour
 buckets instead of uniform fallbacks).
 
+The hash family is pluggable (``--family {quadratic,srp,mips}``):
+``quadratic`` (default) matches |<q,x>| exactly via the implicit
+squared expansion; ``srp`` is plain cosine SimHash on the normalised
+rows; ``mips`` demonstrates the asymmetric Simple-LSH family — the
+same data WITHOUT the unit-norm preprocessing restriction, hashed
+through the [x/M, sqrt(1-||x/M||^2)] augmentation.
+
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 600]
-          [--optimizer sgd] [--multiprobe 2]
+          [--optimizer sgd] [--multiprobe 2] [--family mips]
 """
 
 import argparse
@@ -20,7 +27,8 @@ import argparse
 import jax
 
 from repro.core import (
-    LGDProblem, LSHParams, full_loss, init, lgd_step, sgd_step,
+    LGDProblem, LSHParams, full_loss, get_family, init, lgd_step,
+    sgd_step,
 )
 from repro.data import make_regression
 from repro.optim import make_optimizer
@@ -37,23 +45,38 @@ def main():
                          "replaces the gradient estimate)")
     ap.add_argument("--multiprobe", type=int, default=0,
                     help="extra Hamming-ball probe codes per table")
+    ap.add_argument("--family", default="quadratic",
+                    choices=["quadratic", "srp", "mips"],
+                    help="LSH family (core.families registry): quadratic "
+                         "matches |<q,x>|; srp is cosine SimHash; mips is "
+                         "the asymmetric no-normalisation Simple-LSH")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
     ds = make_regression(key, "yearmsd-like", n_train=8000, d=90,
                          noise="pareto")
+    # augmented-vector dim: the family owns it ([x, y] is d+1 = 91;
+    # asymmetric families append their extra coordinates on top)
+    dim = get_family(args.family).aug_dim(91)
     problem = LGDProblem(
         kind="regression",
-        lsh=LSHParams(k=5, l=100, dim=91, family="quadratic"),
+        lsh=LSHParams(k=5, l=100, dim=dim, family=args.family),
         minibatch=16,
         multiprobe=args.multiprobe,
+        # mips trains on UN-normalised rows: bound the rare tiny-p draws
+        p_floor=1e-7 if args.family == "mips" else 0.0,
     )
-    opt = make_optimizer(args.optimizer, 5e-2 if args.optimizer != "adam"
-                         else 5e-3)
+    lr = 5e-2 if args.optimizer != "adam" else 5e-3
+    if args.family == "mips":
+        # un-normalised rows: ||x_i||^2 ~ d instead of 1, so the
+        # quadratic loss curvature (and the stable LR) scales by ~1/d
+        lr /= ds.x_train.shape[1]
+    opt = make_optimizer(args.optimizer, lr)
     state, xt, yt, x_aug = init(key, problem, ds.x_train, ds.y_train, opt)
     print(f"dataset: {ds.x_train.shape}, hash tables: "
           f"{state.index.sorted_codes.shape} (K={problem.lsh.k}, "
-          f"L={problem.lsh.l}), optimizer: {args.optimizer}")
+          f"L={problem.lsh.l}), family: {args.family}, "
+          f"optimizer: {args.optimizer}")
 
     s_lgd = s_sgd = state
     for step in range(args.steps + 1):

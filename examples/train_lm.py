@@ -50,9 +50,16 @@ codes per table before giving up on it — empty buckets resolve to
 probability-corrected near-bucket samples instead of uniform
 fallbacks (watch the ``fallback`` column drop on skewed corpora).
 
+LSH family (``--family {srp,mips}``): ``srp`` row-normalises the
+pooled feature embeddings so cosine proxies the inner product (the
+paper's BERT recipe); ``mips`` hashes them UN-normalised through the
+asymmetric Simple-LSH augmentation (``repro/core/families/mips.py``)
+— collision probability monotone in the raw inner product, so feature
+norms carry sampling signal.  Same fused kernels either way.
+
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
           [--steps 200] [--sampler lgd] [--shards 2] [--ckpt /tmp/lm_ckpt]
-          [--optimizer adam] [--multiprobe 2]
+          [--optimizer adam] [--multiprobe 2] [--family mips]
 """
 
 import argparse
@@ -103,6 +110,10 @@ def main():
                          "single-probe): empty buckets resolve to "
                          "probability-corrected near-bucket samples "
                          "instead of uniform fallbacks")
+    ap.add_argument("--family", default="srp", choices=["srp", "mips"],
+                    help="LSH family: srp = row-normalised features + "
+                         "cosine SimHash; mips = un-normalised features "
+                         "through the asymmetric Simple-LSH augmentation")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.uniform:
@@ -121,6 +132,7 @@ def main():
     print(f"model: {n_params/1e6:.1f}M params | sampler: {args.sampler}"
           f" | optimizer: {args.optimizer}"
           + (f" | shards: {args.shards} | multiprobe: {args.multiprobe}"
+             f" | family: {args.family}"
              if cfg.lgd_enabled else ""))
 
     corpus = make_token_corpus(1, p["corpus"], p["seq"], cfg.vocab,
@@ -136,7 +148,8 @@ def main():
                               refresh_every=cfg.lgd_refresh_every,
                               refresh_async=True,
                               refresh_mode=args.refresh_mode,
-                              multiprobe=args.multiprobe),
+                              multiprobe=args.multiprobe,
+                              family=args.family),
             n_shards=args.shards, params=params)
     else:
         batches = uniform_batches(corpus, p["batch"], seed=3)

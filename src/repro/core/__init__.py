@@ -5,6 +5,12 @@ Chicken-and-egg Loop in Adaptive Stochastic Gradient Estimation"
 (NeurIPS 2019).
 """
 
+from .families import (  # noqa: F401
+    FAMILIES,
+    LSHFamily,
+    family_names,
+    get_family,
+)
 from .simhash import (  # noqa: F401
     LSHParams,
     augment_logistic,
@@ -31,7 +37,6 @@ from .tables import (  # noqa: F401
 from .sampler import (  # noqa: F401
     GatherBatch,
     SampleResult,
-    exact_inclusion_probability,
     sample,
     sample_batched,
     sample_drain,
@@ -40,6 +45,7 @@ from .sampler import (  # noqa: F401
 )
 from .estimator import (  # noqa: F401
     VarianceReport,
+    exact_inclusion_probability,
     empirical_estimator_covariance_trace,
     importance_weights,
     lgd_gradient,
@@ -52,6 +58,8 @@ from .lgd import (  # noqa: F401
     init,
     lgd_step,
     preprocess_logistic,
+    preprocess_logistic_mips,
     preprocess_regression,
+    preprocess_regression_mips,
     sgd_step,
 )

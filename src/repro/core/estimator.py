@@ -17,7 +17,9 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .families import get_family
 from .sampler import SampleResult
+from .simhash import LSHParams, probe_masks
 
 
 def importance_weights(res: SampleResult, n_points: int,
@@ -53,6 +55,36 @@ def lgd_gradient(
         ),
         g,
     )
+
+
+def exact_inclusion_probability(
+    x_aug: jax.Array, query: jax.Array, params: LSHParams,
+    l: jax.Array | int = 1,
+    multiprobe: int = 0,
+) -> jax.Array:
+    """p_i = Q_i (1-Q_i)^(l-1) for *all* points (O(N d), analysis only).
+
+    Family-generic: ``Q_i`` is the probability that point i lands in
+    SOME probed bucket of one table — ``cp_i^K`` for single-probe, and
+    the probe-sequence sum of the family's probe-class probabilities
+    ``q_r = probe_class_probs(cp_i, K, r)`` under multi-probe — where
+    ``cp_i`` is the family's closed-form collision probability on the
+    (augmented data, augmented query) pair.  Asymmetric families (MIPS)
+    therefore get exact inclusion probabilities on un-normalised
+    corpora, pinned by the unbiasedness tests in
+    ``tests/test_families.py``.  Used by tests and the variance
+    diagnostics; never on the training path.
+    """
+    fam = get_family(params.family)
+    cp = fam.collision_prob(x_aug, query)
+    if multiprobe <= 0:
+        q_tab = cp ** params.k
+    else:
+        masks = probe_masks(params.k, 1 + multiprobe)
+        rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
+        q_tab = jnp.sum(
+            fam.probe_class_probs(cp[..., None], params.k, rs), axis=-1)
+    return q_tab * (1.0 - q_tab) ** (jnp.asarray(l, jnp.float32) - 1.0)
 
 
 class VarianceReport(NamedTuple):

@@ -1,0 +1,46 @@
+"""Pluggable LSH families: registry + the contract (see ``base``).
+
+Every layer above ``core`` names a family by its registry key and asks
+``get_family`` for the object; nothing outside this package hard-wires
+a collision law or an augmentation.
+
+Registered families:
+
+  ``dense``      symmetric SRP, dense Gaussian projections
+  ``sparse``     symmetric SRP, very-sparse Rademacher projections
+  ``srp``        alias of ``dense`` (the user-facing CLI name)
+  ``quadratic``  SRP over the implicit quadratic expansion T(v)
+  ``mips``       asymmetric Simple-LSH MIPS (un-normalised corpora)
+"""
+
+from __future__ import annotations
+
+from .base import LSHFamily, normalize_rows  # noqa: F401
+from .mips import SimpleLSHMIPSFamily
+from .quadratic import QuadraticSRPFamily, quadratic_collision_prob  # noqa: F401
+from .srp import SignedRPFamily, srp_collision_prob  # noqa: F401
+
+_DENSE = SignedRPFamily(name="dense", proj_kind="dense")
+_SPARSE = SignedRPFamily(name="sparse", proj_kind="sparse")
+
+FAMILIES = {
+    "dense": _DENSE,
+    "sparse": _SPARSE,
+    "srp": _DENSE,            # CLI-facing alias
+    "quadratic": QuadraticSRPFamily(),
+    "mips": SimpleLSHMIPSFamily(),
+}
+
+
+def get_family(name: str) -> LSHFamily:
+    """Resolve a registry key to its family singleton (KeyError-safe)."""
+    try:
+        return FAMILIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown LSH family {name!r}; registered: "
+            f"{sorted(FAMILIES)}") from None
+
+
+def family_names() -> tuple:
+    return tuple(sorted(FAMILIES))

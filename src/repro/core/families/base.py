@@ -1,0 +1,120 @@
+"""The LSH-family contract every layer of the stack is generic over.
+
+Algorithm 1 of the paper needs ONE thing from its hash family: an exact
+closed-form collision probability that is monotonic in the quantity the
+sampler should favour (the optimal sampling weight w*_i ∝ ||∇f_i||,
+Needell et al.).  Everything else — augmentation of stored vectors and
+queries, the per-probe-class probabilities of multi-probe querying, the
+packed code width — is family detail the rest of the stack must not
+hard-wire.  This module defines that contract; concrete families live
+next to it (``srp.py``, ``quadratic.py``, ``mips.py``) and register in
+``core.families.get_family``.
+
+The contract (all methods pure jnp, jit-safe; family objects are frozen
+dataclass singletons, hashable, and therefore legal inside jit-static
+``LSHParams``):
+
+* ``augment_data(x, scale=None)`` — map raw stored vectors (N, d) to
+  the vectors actually hashed/indexed (N, aug_dim(d)).  Symmetric
+  families return ``x`` unchanged; asymmetric (MIPS) families append
+  the Simple-LSH norm coordinate.  ``scale`` pins a data-dependent
+  normaliser (MIPS: the max row norm) so partial re-augmentations
+  (delta refresh) stay consistent with the full build; ``None`` lets
+  the family derive it from ``x``.
+* ``data_scale(x)`` — the scale ``augment_data`` would derive from
+  ``x`` (symmetric families: ``None``).  Callers that re-augment
+  subsets later (the pipeline's delta refresh) capture it once here.
+* ``augment_query(q)`` — map a raw query (…, d) to the hashed query
+  (…, aug_dim(d)).  Never needs the data scale: asymmetry means only
+  the data side carries it (Shrivastava & Li).
+* ``collision_prob(x_aug, q_aug)`` — the family's exact per-hash
+  collision probability, evaluated on AUGMENTED vectors.  This is the
+  closed form the sampler's probability correction, the estimator's
+  ``exact_inclusion_probability`` and the statistical property tests
+  all share.
+* ``probe_class_probs(cp, k, rs)`` — multi-probe class probabilities:
+  the probability q_r that a point with per-bit collision probability
+  ``cp`` lands in the bucket of a weight-``r`` XOR mask of the query's
+  K-bit code.  Default ``cp^(K-r) (1-cp)^r`` — exact whenever the K
+  bits are i.i.d. sign agreements, which holds for every SRP-derived
+  family here.
+* ``code_width(k)`` — packed bits per table code (== k for all current
+  families; kept in the contract so a multi-bit-per-function family
+  can widen it without touching ``tables.py``).
+* ``aug_dim(d)`` — dimensionality after ``augment_data``.
+* ``proj_kind`` — "dense" | "sparse" | "quadratic": which projection
+  tensor ``core.simhash.make_projections`` draws, and whether hashing
+  routes through the fused linear simhash kernel (dense/sparse) or the
+  per-function quadratic-form XLA path.
+* ``asymmetric`` — True when data and query augmentations differ (the
+  caller must NOT row-normalise stored vectors; the family owns the
+  norm information).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class LSHFamily:
+    """Base contract; concrete families override the augment/cp methods."""
+
+    name: str = "base"
+    proj_kind: str = "dense"     # "dense" | "sparse" | "quadratic"
+    asymmetric: bool = False
+
+    # -- augmentation -------------------------------------------------------
+
+    def augment_data(self, x: jax.Array, scale=None) -> jax.Array:
+        """Raw stored vectors -> hashed vectors (identity by default)."""
+        del scale
+        return x
+
+    def data_scale(self, x: jax.Array):
+        """The scale ``augment_data`` derives from ``x`` (None = stateless)."""
+        del x
+        return None
+
+    def augment_query(self, q: jax.Array) -> jax.Array:
+        """Raw query -> hashed query (identity by default)."""
+        return q
+
+    def aug_dim(self, d: int) -> int:
+        """Dimensionality of augmented vectors given raw dimension d."""
+        return d
+
+    # -- probabilities ------------------------------------------------------
+
+    def collision_prob(self, x_aug: jax.Array, q_aug: jax.Array) -> jax.Array:
+        """Exact per-hash collision probability on augmented vectors."""
+        raise NotImplementedError
+
+    def probe_class_probs(self, cp: jax.Array, k: int,
+                          rs: jax.Array) -> jax.Array:
+        """q_r = cp^(K-r) (1-cp)^r for mask popcounts ``rs`` (float array).
+
+        Exact for i.i.d. per-bit collisions — every SRP-derived family.
+        A family with correlated bits must override this alongside
+        ``collision_prob`` to keep multi-probe weights unbiased.
+        """
+        return cp ** (k - rs) * (1.0 - cp) ** rs
+
+    # -- code layout --------------------------------------------------------
+
+    def code_width(self, k: int) -> int:
+        """Packed bits per table code (k sign bits for SRP families)."""
+        return k
+
+
+def normalize_rows(v: jax.Array) -> jax.Array:
+    """Row-L2 normalisation with the stack-wide 1e-30 guard.
+
+    The exact expression the pre-family pipeline used — families that
+    normalise (SRP query side) must keep these bits so the SRP path
+    stays pinned bit-identical.
+    """
+    return v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-30)

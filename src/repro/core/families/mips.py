@@ -1,0 +1,85 @@
+"""Asymmetric MIPS family: Simple-LSH augmentation + SRP (Neyshabur & Srebro).
+
+The paper's Eq. 4 weight w*_i is monotonic in the inner product
+⟨q, x_i⟩ — NOT in the cosine — so the symmetric SRP family forces
+callers to pre-normalise stored rows to unit L2 norm to make cosine a
+proxy.  This family drops that restriction with the Simple-LSH
+asymmetric transform:
+
+    data:   S(x) = [x / M,  √(1 − ‖x/M‖²)]      M = max_i ‖x_i‖
+    query:  Q(q) = [q / ‖q‖,  0]
+
+Every augmented data vector has unit norm by construction, the query is
+unit-norm, and
+
+    ⟨S(x), Q(q)⟩ = ⟨x, q⟩ / (M ‖q‖)
+
+so the SRP collision probability on the augmented pair,
+
+    cp = 1 − arccos(⟨x, q⟩ / (M ‖q‖)) / π ,
+
+is exactly computable AND monotonically increasing in the raw inner
+product ⟨x, q⟩ — un-normalised corpora sample the paper's weight
+directly.  Downstream nothing changes: augmented vectors flow through
+the same fused simhash/bucket-probe/gather kernels (``proj_kind =
+"dense"`` — it is linear SRP in aug_dim = d+1 dimensions), and
+Algorithm 1's weights 1/(p·N) stay exactly unbiased because cp is
+exact for whatever vectors were hashed.
+
+SCALE PINNING: M is data-dependent, so partial re-augmentations (the
+pipeline's delta refresh re-embeds only dirty rows) must reuse the M of
+the original build — ``data_scale`` captures it, ``augment_data(x,
+scale=M)`` replays it.  If drifted features push a row norm above the
+pinned M, the norm coordinate clamps at 0 and the augmented row's norm
+exceeds 1: probabilities REMAIN exact (the cosine formula normalises
+internally) and only the monotonicity sharpens/flattens marginally
+until the next full refresh recomputes M.
+
+Derivation + statistical pins: docs/ARCHITECTURE.md "LSH-family
+contract"; tests/test_families.py (collision law chi-square,
+monotonicity in ⟨q, x⟩, E[1/(p·N)] = 1 over index builds, and the
+un-normalised heavy-tailed estimator unbiasedness test).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import LSHFamily, normalize_rows
+from .srp import srp_collision_prob
+
+
+@dataclasses.dataclass(frozen=True)
+class SimpleLSHMIPSFamily(LSHFamily):
+    """Asymmetric Simple-LSH MIPS: [x/M, √(1−‖x/M‖²)] vs [q/‖q‖, 0]."""
+
+    name: str = "mips"
+    proj_kind: str = "dense"
+    asymmetric: bool = True
+
+    def data_scale(self, x: jax.Array):
+        """M = max row norm (guarded): the augmentation's normaliser."""
+        return jnp.maximum(jnp.max(jnp.linalg.norm(x, axis=-1)), 1e-30)
+
+    def augment_data(self, x: jax.Array, scale=None) -> jax.Array:
+        scale = self.data_scale(x) if scale is None else scale
+        xs = x / scale
+        sq = jnp.sum(xs * xs, axis=-1, keepdims=True)
+        tail = jnp.sqrt(jnp.maximum(1.0 - sq, 0.0))
+        return jnp.concatenate([xs, tail], axis=-1)
+
+    def augment_query(self, q: jax.Array) -> jax.Array:
+        qn = normalize_rows(q)
+        return jnp.concatenate(
+            [qn, jnp.zeros(qn.shape[:-1] + (1,), qn.dtype)], axis=-1)
+
+    def aug_dim(self, d: int) -> int:
+        return d + 1
+
+    def collision_prob(self, x_aug: jax.Array, q_aug: jax.Array) -> jax.Array:
+        # SRP law on the augmented pair — exact for any norms, monotone
+        # in the RAW inner product by the Simple-LSH identity above.
+        return srp_collision_prob(x_aug, q_aug)

@@ -1,0 +1,47 @@
+"""Quadratic SRP family: SimHash over the implicit expansion T(v)=vec(v vᵀ).
+
+Handles the |⟨q, x⟩| absolute value of the paper's optimal weight
+exactly (Sec. 2.1): collision probability is monotonic in (v·q)², so
+sign-symmetric gradients hash to the same buckets.  A projection w on
+T(v) is the quadratic form vᵀ M v, evaluated without materialising T —
+which is why ``proj_kind = "quadratic"`` draws per-function (d, d)
+matrices and hashing stays on the XLA path (no single-matmul structure
+for the fused simhash kernel to exploit).
+
+    cos(T(x), T(q)) = (x·q)² / (‖x‖² ‖q‖²)     (⟨T(u),T(v)⟩ = (u·v)²)
+    cp = 1 - arccos(cos)/π
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import LSHFamily
+
+
+def quadratic_collision_prob(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Collision prob. of QuadraticSRP = SimHash cp between T(x), T(q).
+
+    The exact pre-family expression (``core.simhash.
+    collision_probability_quadratic`` re-exports it)."""
+    xn2 = jnp.sum(x * x, axis=-1)
+    qn2 = jnp.sum(q * q, axis=-1)
+    ip = jnp.sum(x * q, axis=-1)
+    cos = ip * ip / jnp.maximum(xn2 * qn2, 1e-30)
+    cos = jnp.clip(cos, -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class QuadraticSRPFamily(LSHFamily):
+    """Symmetric quadratic SRP: identity augmentation, (v·q)² law."""
+
+    name: str = "quadratic"
+    proj_kind: str = "quadratic"
+    asymmetric: bool = False
+
+    def collision_prob(self, x_aug: jax.Array, q_aug: jax.Array) -> jax.Array:
+        return quadratic_collision_prob(x_aug, q_aug)

@@ -1,0 +1,64 @@
+"""Signed-random-projection (SimHash) family — the paper's workhorse.
+
+Collision probability (Goemans–Williamson):
+
+    cp(x, q) = 1 - arccos(cos_sim(x, q)) / pi
+
+monotonically increasing in the inner product for normalised vectors —
+the monotonicity LGD's adaptive distribution relies on, which is why
+the symmetric SRP callers (``core.lgd`` preprocess, the pipeline's
+feature path) row-normalise stored vectors before hashing.  The family
+itself is augmentation-free: ``augment_data`` is the identity, and the
+probability formula is exact for vectors of ANY norm (the cosine
+normalises internally), so un-normalised inputs merely weaken the
+monotonicity link, never the unbiasedness.
+
+Two registry entries share this class: ``"dense"`` (dense Gaussian
+projections) and ``"sparse"`` (Li et al. very-sparse Rademacher
+projections, density ~1/30 as in the paper's experiments) — they
+differ only in the projection tensor ``core.simhash.make_projections``
+draws (``proj_kind``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import LSHFamily, normalize_rows
+
+
+def srp_collision_prob(x: jax.Array, q: jax.Array) -> jax.Array:
+    """SimHash collision probability cp(x,q) = 1 - arccos(cos)/pi.
+
+    x: (..., d), q: (d,) or broadcastable.  Computed in float32.  The
+    exact expression the pre-family stack used (``core.simhash.
+    collision_probability`` re-exports it) — pinned bit-identical by
+    the SRP parity tests.
+    """
+    xn = jnp.linalg.norm(x, axis=-1)
+    qn = jnp.linalg.norm(q, axis=-1)
+    cos = jnp.sum(x * q, axis=-1) / jnp.maximum(xn * qn, 1e-30)
+    cos = jnp.clip(cos, -1.0, 1.0)
+    return 1.0 - jnp.arccos(cos) / jnp.pi
+
+
+@dataclasses.dataclass(frozen=True)
+class SignedRPFamily(LSHFamily):
+    """Symmetric SRP: identity augmentation, cosine collision law.
+
+    ``augment_query`` L2-normalises (cp is scale-invariant, so this
+    changes no probability — it keeps the pipeline's query handling,
+    which always normalised, inside the family contract)."""
+
+    name: str = "dense"
+    proj_kind: str = "dense"
+    asymmetric: bool = False
+
+    def augment_query(self, q: jax.Array) -> jax.Array:
+        return normalize_rows(q)
+
+    def collision_prob(self, x_aug: jax.Array, q_aug: jax.Array) -> jax.Array:
+        return srp_collision_prob(x_aug, q_aug)

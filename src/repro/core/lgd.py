@@ -7,9 +7,17 @@ Reproduces the paper's training setup:
     so SGD / AdaGrad / Adam from ``repro.optim`` plug in unchanged
     ("LGD is not an alternative but a complement", Sec. 2.2).
 
-Data are preprocessed as in Sec. 2.2: rows of [x_i, y_i] are centred and
-scaled to unit L2 norm, so the SimHash collision probability is monotonic
-in the optimal sampling weight w*_i = |<[theta,-1],[x_i,y_i]>| (Eq. 4).
+Each workload (kind) is a THIN FAMILY INSTANTIATION: the kind supplies
+the base vector [x_i, y_i] / y_i*x_i, the base query [theta,-1] / -theta
+and the per-example loss; the hash family (``problem.lsh.family``, see
+``core.families``) supplies augmentation and the collision law.  With a
+symmetric family, data are preprocessed as in Sec. 2.2 — rows centred
+and scaled to unit L2 norm so the SimHash collision probability is
+monotonic in the optimal sampling weight w*_i = |<[theta,-1],[x_i,y_i]>|
+(Eq. 4) — bit-identical to the pre-family stack.  With the asymmetric
+``mips`` family the unit-norm restriction is DROPPED: raw rows flow
+through the Simple-LSH augmentation and the collision probability is
+monotone in the raw inner product (``preprocess_*_mips``).
 """
 
 from __future__ import annotations
@@ -22,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from . import estimator as est
+from .families import get_family
 from .sampler import SampleResult, sample, sample_batched, sample_drain
 from .simhash import (
     LSHParams,
@@ -62,6 +71,32 @@ def preprocess_logistic(x: jax.Array, y: jax.Array):
     return x, y, augment_logistic(x, y)
 
 
+def preprocess_regression_mips(x: jax.Array, y: jax.Array, family):
+    """No-normalisation regression preprocessing for asymmetric families.
+
+    The symmetric path MUST row-normalise x (cosine is only a proxy for
+    the inner product on unit vectors); the MIPS family hashes the raw
+    [x_i, y_i] rows through its Simple-LSH augmentation instead, so the
+    per-example scale information the row normalisation destroys stays
+    in the index.  x is centred (removes the corpus-mean offset from
+    every inner product) and y standardised GLOBALLY — per-row nothing
+    is rescaled.
+
+    Returns (x, y, x_aug) with x_aug = augment_data([x_i, y_i]).
+    """
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    y = (y - jnp.mean(y)) / jnp.maximum(jnp.std(y), 1e-30)
+    v = jnp.concatenate([x, y[:, None]], axis=-1)
+    return x, y, family.augment_data(v)
+
+
+def preprocess_logistic_mips(x: jax.Array, y: jax.Array, family):
+    """Centre x only; hash the raw y_i * x_i rows via the family."""
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    v = x * y[..., None]
+    return x, y, family.augment_data(v)
+
+
 # ---------------------------------------------------------------------------
 # per-example losses / gradients
 # ---------------------------------------------------------------------------
@@ -88,6 +123,24 @@ def logistic_loss_grad(theta, x, y):
 # LGD problem + state
 # ---------------------------------------------------------------------------
 
+# The two linear LGD workloads as thin family instantiations: a kind
+# contributes its base vector/query/loss; the family (problem.lsh.family)
+# contributes augmentation + the collision law.  Adding a workload is a
+# row here; adding a hash family never touches this table.
+_KINDS = {
+    "regression": dict(
+        base_query=regression_query,
+        loss=squared_loss, grad=squared_loss_grad,
+        preprocess=preprocess_regression,
+        preprocess_asym=preprocess_regression_mips),
+    "logistic": dict(
+        base_query=logistic_query,
+        loss=logistic_loss, grad=logistic_loss_grad,
+        preprocess=preprocess_logistic,
+        preprocess_asym=preprocess_logistic_mips),
+}
+
+
 @dataclasses.dataclass(frozen=True)
 class LGDProblem:
     """Static description of an LGD-trainable linear model."""
@@ -109,6 +162,9 @@ class LGDProblem:
     interpret: bool = False        # Pallas interpreter (kernel tests only)
 
     def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown kind {self.kind!r}; "
+                             f"kinds: {sorted(_KINDS)}")
         if self.query_jitter > 0.0 and self.drain:
             raise ValueError(
                 "query_jitter requires per-repetition queries; drain mode "
@@ -118,14 +174,33 @@ class LGDProblem:
                 "multiprobe is not supported in drain mode: the drained "
                 "bucket belongs to ONE (table, code) pair (Appendix B.2)")
 
+    @property
+    def family(self):
+        """The hash-family singleton this problem hashes/queries with."""
+        return get_family(self.lsh.family)
+
     def query_fn(self) -> Callable[[jax.Array], jax.Array]:
-        return regression_query if self.kind == "regression" else logistic_query
+        """theta -> hashed query.  Symmetric families keep the paper's
+        raw query (bit-identical to the pre-family stack); asymmetric
+        families route it through ``augment_query``."""
+        base = _KINDS[self.kind]["base_query"]
+        fam = self.family
+        if fam.asymmetric:
+            return lambda theta: fam.augment_query(base(theta))
+        return base
+
+    def preprocess(self, x: jax.Array, y: jax.Array):
+        """(x, y) -> (x_train, y_train, x_aug) for this kind + family."""
+        kind = _KINDS[self.kind]
+        if self.family.asymmetric:
+            return kind["preprocess_asym"](x, y, self.family)
+        return kind["preprocess"](x, y)
 
     def grad_fn(self):
-        return squared_loss_grad if self.kind == "regression" else logistic_loss_grad
+        return _KINDS[self.kind]["grad"]
 
     def loss_fn(self):
-        return squared_loss if self.kind == "regression" else logistic_loss
+        return _KINDS[self.kind]["loss"]
 
 
 class LGDState(NamedTuple):
@@ -147,10 +222,7 @@ def init(
 
     Returns (state, x_train, y_train, x_aug).
     """
-    if problem.kind == "regression":
-        xt, yt, x_aug = preprocess_regression(x, y)
-    else:
-        xt, yt, x_aug = preprocess_logistic(x, y)
+    xt, yt, x_aug = problem.preprocess(x, y)
     k_idx, k_theta = jax.random.split(key)
     index = build_index(k_idx, x_aug, problem.lsh,
                         use_pallas=problem.use_pallas,

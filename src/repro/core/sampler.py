@@ -70,12 +70,8 @@ import jax.numpy as jnp
 from repro.kernels import default_use_pallas
 from repro.kernels.gather_weight import gather_weight
 
-from .simhash import (
-    LSHParams,
-    collision_probability,
-    collision_probability_quadratic,
-    probe_masks,
-)
+from .families import get_family
+from .simhash import LSHParams, probe_masks
 from .tables import LSHIndex, bucket_bounds_batched, bucket_bounds_multi
 
 
@@ -105,9 +101,13 @@ class GatherBatch(NamedTuple):
 
 
 def _cp_fn(params: LSHParams):
-    if params.family == "quadratic":
-        return collision_probability_quadratic
-    return collision_probability
+    """The family's closed-form collision probability (see core.families).
+
+    Evaluated on (stored AUGMENTED vector, AUGMENTED query) — for
+    symmetric families those are the raw vectors; for asymmetric ones
+    (MIPS) the caller hashed/queried through ``augment_data`` /
+    ``augment_query`` and this closed form is exact on that pair."""
+    return get_family(params.family).collision_prob
 
 
 def _uniform_below(key: jax.Array, bound: jax.Array, shape=()) -> jax.Array:
@@ -165,11 +165,13 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
         cpk = cp ** params.k
         p_lsh = cpk * (1.0 - cpk) ** (l - 1) / size.astype(jnp.float32)
     else:
-        # q_r = cp^(K-r) (1-cp)^r per probed mask; the J buckets of one
-        # table are disjoint, so the per-table miss probability is
+        # q_r per probed mask from the family's probe-class law (default
+        # cp^(K-r) (1-cp)^r — i.i.d. bit collisions); the J buckets of
+        # one table are disjoint, so the per-table miss probability is
         # 1 - sum(q) and the winning probe contributes its own q.
         rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
-        q_all = cp ** (params.k - rs) * (1.0 - cp) ** rs       # (J,)
+        q_all = get_family(params.family).probe_class_probs(
+            cp, params.k, rs)                                  # (J,)
         miss = jnp.maximum(1.0 - jnp.sum(q_all), 0.0)
         p_lsh = q_all[pj] * miss ** (l - 1) / size.astype(jnp.float32)
     p = jnp.where(found, p_lsh, 1.0 / n_points)
@@ -466,27 +468,3 @@ def sample_drain(
         fallback=jnp.broadcast_to(~found, (m,)),
         probe_code=jnp.full((m,), jnp.where(found, 0, -1), jnp.int32),
     )
-
-
-def exact_inclusion_probability(
-    index: LSHIndex, x_aug: jax.Array, query: jax.Array, params: LSHParams,
-    l: jax.Array | int = 1,
-    multiprobe: int = 0,
-) -> jax.Array:
-    """p_i = Q_i (1-Q_i)^(l-1) for *all* points (O(N d), analysis only).
-
-    ``Q_i`` is the probability that point i lands in SOME probed bucket
-    of one table: ``cp_i^K`` for single-probe, and the probe-sequence
-    sum ``sum_j cp_i^(K-r_j) (1-cp_i)^(r_j)`` under multi-probe.  Used
-    by tests and the variance diagnostics; never on the training path.
-    """
-    cp = _cp_fn(params)(x_aug, query)
-    if multiprobe <= 0:
-        q_tab = cp ** params.k
-    else:
-        masks = probe_masks(params.k, 1 + multiprobe)
-        rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
-        q_tab = jnp.sum(
-            cp[..., None] ** (params.k - rs) * (1.0 - cp[..., None]) ** rs,
-            axis=-1)
-    return q_tab * (1.0 - q_tab) ** (jnp.asarray(l, jnp.float32) - 1.0)

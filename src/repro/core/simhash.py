@@ -1,26 +1,20 @@
-"""Signed-random-projection (SimHash) LSH families for LGD.
+"""SimHash parameters, projections, packed codes and probe masks.
 
 The paper (Chen, Xu & Shrivastava, NeurIPS 2019) samples training points
 with probability monotonic to |<[theta,-1], [x_i,y_i]>| using SimHash
-(signed random projections).  Three families are provided:
+(signed random projections).  WHICH hash family is in play — symmetric
+SRP (dense/sparse projections), quadratic SRP over T(v)=vec(v vᵀ), or
+the asymmetric Simple-LSH MIPS family — is pluggable: the contract and
+registry live in ``core.families``; ``LSHParams.family`` names a
+registry entry, and this module draws the matching projection tensor
+and packs codes in the shared TPU-native layout.
 
-* ``SignedRP``       — dense Gaussian projections, sign(Wx).
-* ``SparseSignedRP`` — very sparse Rademacher projections (density ~1/30,
-  as used in the paper's experiments: "sparse random projections with
-  sparsity 1/30 for speed").
-* ``QuadraticSRP``   — SRP over the implicit quadratic feature expansion
-  T(v) = vec(v v^T), so that the collision probability is monotonic in
-  (v.q)^2 = |v.q|^2, handling the absolute value exactly as described in
-  Sec. 2.1.  A projection w on T(v) is the quadratic form v^T M v, which
-  we evaluate without materialising T.
-
-All families pack K sign bits per table into a single uint32 code, giving
-``codes[n, l]`` — the TPU-native layout consumed by ``tables.py``.
-
-Collision probability of SimHash (Goemans-Williamson):
-    cp(x, q) = 1 - arccos(cos_sim(x, q)) / pi
-which is monotonically increasing in the inner product for normalised
-vectors — the monotonicity LGD's adaptive distribution relies on.
+All families pack ``code_width(K)`` sign bits per table into a single
+uint32 code, giving ``codes[n, l]`` — the layout consumed by
+``tables.py``.  The closed-form collision probabilities are owned by
+the family objects; ``collision_probability`` (SRP cosine law) and
+``collision_probability_quadratic`` are re-exported here for
+back-compat with the pre-family API.
 """
 
 from __future__ import annotations
@@ -32,6 +26,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .families import (  # noqa: F401  (re-exported: pre-family API)
+    get_family,
+    quadratic_collision_prob as collision_probability_quadratic,
+    srp_collision_prob as collision_probability,
+)
+
 MAX_K = 32  # sign bits packed per uint32 code
 
 
@@ -42,30 +42,35 @@ class LSHParams:
     k: int = 5          # bits (hash fns) per table    (paper: K=5 linear, 7 BERT)
     l: int = 100        # number of hash tables        (paper: L=100 linear, 10 BERT)
     dim: int = 0        # input dimensionality (of the *augmented* vector)
-    family: str = "sparse"  # "dense" | "sparse" | "quadratic"
+    family: str = "sparse"  # registry key: core.families.get_family
     sparsity: float = 1.0 / 30.0  # density of sparse projections
     seed: int = 0
 
     def __post_init__(self):
-        if not (1 <= self.k <= MAX_K):
-            raise ValueError(f"K must be in [1,{MAX_K}], got {self.k}")
+        fam = get_family(self.family)   # raises on unknown family names
+        if not (1 <= fam.code_width(self.k) <= MAX_K):
+            raise ValueError(
+                f"code width must be in [1,{MAX_K}], got "
+                f"{fam.code_width(self.k)} (K={self.k})")
         if self.l < 1:
             raise ValueError(f"L must be >= 1, got {self.l}")
-        if self.family not in ("dense", "sparse", "quadratic"):
-            raise ValueError(f"unknown family {self.family!r}")
 
 
 def make_projections(key: jax.Array, params: LSHParams) -> jax.Array:
     """Draw the random projection tensor for the family.
 
-    Returns
+    Returns (by the family's ``proj_kind``)
       dense/sparse:  (dim, L*K) float32
       quadratic:     (L*K, dim, dim) float32  (random M per hash function)
+
+    ``params.dim`` is the dimensionality of the AUGMENTED vectors the
+    family actually hashes (asymmetric families: ``aug_dim(d_raw)``).
     """
+    proj_kind = get_family(params.family).proj_kind
     d, lk = params.dim, params.l * params.k
-    if params.family == "dense":
+    if proj_kind == "dense":
         return jax.random.normal(key, (d, lk), dtype=jnp.float32)
-    if params.family == "sparse":
+    if proj_kind == "sparse":
         kv, ks = jax.random.split(key)
         signs = jax.random.rademacher(kv, (d, lk), dtype=jnp.float32)
         mask = jax.random.bernoulli(ks, params.sparsity, (d, lk))
@@ -140,31 +145,6 @@ def probe_masks(k: int, n_codes: int) -> tuple:
     masks.extend(
         (1 << i) | (1 << j) for i in range(k) for j in range(i + 1, k))
     return tuple(masks[:n_codes])
-
-
-def collision_probability(x: jax.Array, q: jax.Array) -> jax.Array:
-    """SimHash collision probability cp(x,q) = 1 - arccos(cos)/pi.
-
-    x: (..., d), q: (d,) or broadcastable. Computed in float32.
-    """
-    xn = jnp.linalg.norm(x, axis=-1)
-    qn = jnp.linalg.norm(q, axis=-1)
-    cos = jnp.sum(x * q, axis=-1) / jnp.maximum(xn * qn, 1e-30)
-    cos = jnp.clip(cos, -1.0, 1.0)
-    return 1.0 - jnp.arccos(cos) / jnp.pi
-
-
-def collision_probability_quadratic(x: jax.Array, q: jax.Array) -> jax.Array:
-    """Collision prob. of QuadraticSRP = SimHash cp between T(x), T(q).
-
-    cos(T(x),T(q)) = (x.q)^2 / (|x|^2 |q|^2)   (since <T(u),T(v)> = (u.v)^2).
-    """
-    xn2 = jnp.sum(x * x, axis=-1)
-    qn2 = jnp.sum(q * q, axis=-1)
-    ip = jnp.sum(x * q, axis=-1)
-    cos = ip * ip / jnp.maximum(xn2 * qn2, 1e-30)
-    cos = jnp.clip(cos, -1.0, 1.0)
-    return 1.0 - jnp.arccos(cos) / jnp.pi
 
 
 def augment_regression(x: jax.Array, y: jax.Array) -> jax.Array:

@@ -55,6 +55,7 @@ from repro.kernels.bucket_probe import (
 )
 from repro.kernels.simhash import simhash_codes
 
+from .families import get_family
 from .simhash import LSHParams, compute_codes, make_projections
 
 
@@ -76,8 +77,13 @@ class LSHIndex(NamedTuple):
 
 def _hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
                  use_pallas: Optional[bool], interpret: bool) -> jax.Array:
-    """(N, d) points -> (L, N) codes via the fastest path for the family."""
-    if params.family == "quadratic":
+    """(N, d) points -> (L, N) codes via the fastest path for the family.
+
+    ``x`` is ALREADY augmented (the family's ``augment_data`` ran at the
+    call site); linear families (``proj_kind`` dense/sparse — including
+    the asymmetric MIPS family's augmented vectors) route through the
+    fused simhash kernel dispatch, quadratic forms stay on XLA."""
+    if get_family(params.family).proj_kind == "quadratic":
         codes = compute_codes(x, proj, k=params.k, l=params.l,
                               quadratic=True)
     else:
@@ -216,7 +222,7 @@ def query_codes(index: LSHIndex, q: jax.Array, params: LSHParams) -> jax.Array:
     """Hash a query (d,) or batch (m, d) -> (L,) or (m, L) uint32."""
     return compute_codes(
         q, index.projections, k=params.k, l=params.l,
-        quadratic=params.family == "quadratic",
+        quadratic=get_family(params.family).proj_kind == "quadratic",
     )
 
 
@@ -270,7 +276,7 @@ def bucket_bounds_batched(index: LSHIndex, queries: jax.Array,
         b = queries.shape[0] if queries.ndim == 2 else 1
         use_pallas = (default_use_pallas() and
                       index.n_points <= b * COUNTING_PROBE_MAX_POINTS_PER_QUERY)
-    if params.family == "quadratic":
+    if get_family(params.family).proj_kind == "quadratic":
         # quadratic SRP hashes via per-function quadratic forms — not a
         # single matmul — so hash on the XLA path, probe in the kernel.
         qcodes = query_codes(index, queries, params)
@@ -314,7 +320,7 @@ def bucket_bounds_multi(index: LSHIndex, queries: jax.Array,
         b = queries.shape[0] if queries.ndim == 2 else 1
         use_pallas = (default_use_pallas() and
                       index.n_points <= b * COUNTING_PROBE_MAX_POINTS_PER_QUERY)
-    if params.family == "quadratic":
+    if get_family(params.family).proj_kind == "quadratic":
         qcodes = query_codes(index, queries, params)        # (..., L)
         squeeze = qcodes.ndim == 1
         if squeeze:

@@ -67,6 +67,19 @@ that change the mesh (and hence shard count) rebuild every per-shard
 index bit-deterministically from the restored step — see
 ``repro.train.elastic.rebuild_sharded_pipeline``.
 
+HASH FAMILY (``LSHPipelineConfig.family``): "srp" (default) keeps the
+paper's recipe — feature embeddings row-normalised so cosine SimHash
+proxies the inner product — bit-identical to the pre-family pipeline;
+"mips" hashes embeddings UN-normalised through the asymmetric
+Simple-LSH augmentation (``core.families.mips``), whose collision
+probability is monotone in the raw inner product.  Augmentation runs
+at build/refresh time on the feature side and once per draw on the
+query side, so the per-step jitted sample->gather->weight program is
+byte-for-byte the same; the MIPS data scale M is pinned at each full
+(re)build and replayed for delta-refresh subsets (``_feat_scale`` —
+async refreshes commit features, index and scale together at the swap
+boundary, so a failed refresh cannot leave them out of sync).
+
 KEY DISCIPLINE: all randomness derives from the constructor key by
 ``fold_in`` with distinct stream salts (build / per-step sampling /
 per-refresh), never by chained ``split``.  The determinism contract is
@@ -94,6 +107,7 @@ import numpy as np
 from repro.core import (
     LSHParams,
     build_index,
+    get_family,
     hash_points,
     refresh_index,
     refresh_index_delta,
@@ -157,6 +171,16 @@ class LSHPipelineConfig:
     # fallback rate drops (tab_optimizers gates this on a skewed
     # corpus).  0 = the paper's single-probe Algorithm 1.
     multiprobe: int = 0
+    # LSH family (core.families registry name).  "srp" (default, the
+    # pre-family behaviour bit-identically): features are row-L2
+    # normalised before hashing so cosine proxies the inner product.
+    # "mips": features are hashed UN-normalised through the asymmetric
+    # Simple-LSH augmentation — collision probability monotone in the
+    # raw inner product, the right family for feature embeddings whose
+    # norms carry signal.  Augmentation runs at build/refresh (feature
+    # side) and once per draw (query side); the per-step jitted
+    # sample->gather->weight program is unchanged.
+    family: str = "srp"
 
     def __post_init__(self):
         if self.refresh_mode not in ("full", "delta"):
@@ -166,6 +190,7 @@ class LSHPipelineConfig:
         if self.multiprobe < 0:
             raise ValueError(
                 f"multiprobe must be >= 0, got {self.multiprobe}")
+        get_family(self.family)   # raises on unknown family names
 
 
 class LSHSampledPipeline:
@@ -219,6 +244,7 @@ class LSHSampledPipeline:
         store_device=None,
     ):
         self.cfg = config
+        self.family = get_family(config.family)
         self.tokens = tokens
         self.n = tokens.shape[0]
         # the device-resident example store: uploaded exactly once; every
@@ -257,10 +283,18 @@ class LSHSampledPipeline:
         self._fallback_sum = jnp.zeros((), jnp.int32)
         self._primary_miss_sum = jnp.zeros((), jnp.int32)
         self._last_fallback = jnp.zeros((), jnp.float32)
+        # asymmetric-family scale (MIPS: the max feature norm M), pinned
+        # at each FULL (re)build so partial re-augmentations (delta
+        # refresh) stay consistent with the indexed vectors.
+        self._feat_scale = None
         self.features = self._compute_features()
-        dim = self.features.shape[-1]
+        dim = self.features.shape[-1]          # post-augmentation dim
+        # "srp" instantiates the registry's dense-SRP entry under its
+        # canonical LSHParams name — bit-identical to the pre-family
+        # pipeline (pinned by tests/test_families.py).
+        lsh_family = "dense" if config.family == "srp" else config.family
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
-                             family="dense")
+                             family=lsh_family)
         self.index: LSHIndex = build_index(
             self._build_key, self.features, self.lsh,
             use_pallas=config.use_pallas, interpret=config.interpret)
@@ -287,27 +321,58 @@ class LSHSampledPipeline:
         return f / jnp.maximum(
             jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-30)
 
-    def _compute_features(self, params: Any = None) -> jax.Array:
-        """Embed every local example; normalised for SimHash."""
+    def _compute_features_scaled(self, params: Any = None):
+        """(features, scale) for a full-corpus embed — NO attribute
+        writes, so async refresh workers can call it and hand the
+        freshly derived scale to the swap boundary.
+
+        Symmetric families row-normalise (the pre-family behaviour,
+        bit-identical) and return ``scale=None``; asymmetric families
+        run ``augment_data`` under a freshly derived data scale M and
+        return it.
+        """
         params = self.params if params is None else params
         w = self.row_width
         outs = []
         for i in range(0, self.n, self.feature_batch):
             outs.append(self._embed(
                 self.store[i:i + self.feature_batch, :w - 1], params))
-        return self._normalize(jnp.concatenate(outs, axis=0))
+        raw = jnp.concatenate(outs, axis=0)
+        if not self.family.asymmetric:
+            return self._normalize(raw), None
+        scale = self.family.data_scale(raw)
+        return self.family.augment_data(raw, scale=scale), scale
 
-    def _embed_rows(self, ids: jax.Array, params: Any) -> jax.Array:
-        """Embed a gathered subset of rows (delta refresh), normalised.
+    def _compute_features(self, params: Any = None) -> jax.Array:
+        """Embed every local example; family-augmented for hashing.
+
+        Synchronous entry: pins the asymmetric-family scale M alongside
+        the returned features (build / sync refresh / restore paths).
+        Async refreshes must use ``_compute_features_scaled`` and commit
+        features, index and scale together at the swap boundary.
+        """
+        feats, scale = self._compute_features_scaled(params)
+        if self.family.asymmetric:
+            self._feat_scale = scale
+        return feats
+
+    def _embed_rows(self, ids: jax.Array, params: Any,
+                    scale=None) -> jax.Array:
+        """Embed a gathered subset of rows (delta refresh), augmented.
 
         Chunked exactly like ``_compute_features`` so an all-rows subset
-        produces bitwise the same features as a full re-embed.
+        produces bitwise the same features as a full re-embed — for
+        asymmetric families at ``scale`` (the pinned M the indexed
+        vectors were built with; delta refresh snapshots it at launch).
         """
         rows = jnp.take(self.store, ids, axis=0)[:, :self.row_width - 1]
         outs = []
         for i in range(0, rows.shape[0], self.feature_batch):
             outs.append(self._embed(rows[i:i + self.feature_batch], params))
-        return self._normalize(jnp.concatenate(outs, axis=0))
+        raw = jnp.concatenate(outs, axis=0)
+        if not self.family.asymmetric:
+            return self._normalize(raw)
+        return self.family.augment_data(raw, scale=scale)
 
     # -- refresh ------------------------------------------------------------
 
@@ -318,7 +383,7 @@ class LSHSampledPipeline:
 
     def _delta_refresh_values(self, kr: jax.Array, params: Any,
                               dirty: jax.Array, features: jax.Array,
-                              index: LSHIndex):
+                              index: LSHIndex, scale=None):
         """(features, index) after a delta refresh of ``dirty`` rows.
 
         Pure in its explicit inputs so the async thread can run it on a
@@ -340,7 +405,7 @@ class LSHSampledPipeline:
         size = min(_dirty_bucket(nd), self.n)
         ids = jnp.flatnonzero(dirty, size=size,
                               fill_value=jnp.argmax(dirty))
-        feats_d = self._embed_rows(ids, params)
+        feats_d = self._embed_rows(ids, params, scale=scale)
         codes_d = hash_points(feats_d, index.projections, self.lsh,
                               use_pallas=self.cfg.use_pallas,
                               interpret=self.cfg.interpret)
@@ -366,7 +431,8 @@ class LSHSampledPipeline:
                 use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
         else:
             self.features, self.index = self._delta_refresh_values(
-                kr, self.params, dirty, self.features, self.index)
+                kr, self.params, dirty, self.features, self.index,
+                scale=self._feat_scale)
         self._refresh_count += 1
 
     def _launch_refresh(self):
@@ -378,13 +444,19 @@ class LSHSampledPipeline:
         full = self.cfg.refresh_mode != "delta"
         dirty = self._take_dirty()    # delta dirt is claimed at launch
         old_index, old_features = self.index, self.features
+        old_scale = self._feat_scale  # snapshot: delta re-augments at it
         box: dict = {}
 
         def work():
+            # attribute-write-free: features/index/scale are committed
+            # TOGETHER at the swap boundary, so an errored or abandoned
+            # refresh cannot leave self._feat_scale out of sync with
+            # the live (features, index) pair.
             try:
                 if full:
-                    feats = self._compute_features(params)
+                    feats, scale = self._compute_features_scaled(params)
                     box["features"] = feats
+                    box["scale"] = scale
                     box["index"] = refresh_index(
                         kr, old_index, feats, self.lsh,
                         use_pallas=self.cfg.use_pallas,
@@ -392,7 +464,9 @@ class LSHSampledPipeline:
                 else:
                     box["features"], box["index"] = \
                         self._delta_refresh_values(
-                            kr, params, dirty, old_features, old_index)
+                            kr, params, dirty, old_features, old_index,
+                            scale=old_scale)
+                    box["scale"] = old_scale
             except BaseException as e:   # surfaced at the swap boundary
                 box["error"] = e
 
@@ -412,6 +486,8 @@ class LSHSampledPipeline:
             raise box["error"]
         self.features = box["features"]
         self.index = box["index"]
+        if self.family.asymmetric:
+            self._feat_scale = box["scale"]
         self._refresh_count += 1
 
     def finalize(self):
@@ -483,7 +559,9 @@ class LSHSampledPipeline:
     def _query(self) -> jax.Array:
         q = self.query_fn(self.params) if self._params_aware \
             else self.query_fn()
-        return q / jnp.maximum(jnp.linalg.norm(q), 1e-30)
+        # family query augmentation: SRP normalises (bit-identical to
+        # the pre-family pipeline), MIPS appends the zero coordinate.
+        return self.family.augment_query(q)
 
     def _mark_dirty(self, indices: jax.Array):
         if self._track_dirty:
@@ -553,8 +631,7 @@ class LSHSampledPipeline:
         exact per-sample Algorithm-1 probabilities under its own query.
         """
         sub = self._tick()
-        qn = queries / jnp.maximum(
-            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-30)
+        qn = self.family.augment_query(queries)
         gb = sample_gather_batched(
             sub, self.index, self.features, qn, self.store, self.lsh,
             m=self.cfg.minibatch, example_offset=self.example_offset,

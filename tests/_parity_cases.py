@@ -1,0 +1,138 @@
+"""Shared input construction for the SRP parity pin (tests/test_families.py).
+
+The pluggable-family refactor must leave the SRP path bit-identical to
+the pre-refactor sampler/pipeline.  This module builds the exact inputs
+for the pinned entry points — ``sample``, ``sample_gather_batched`` and
+``LSHSampledPipeline.next_batch_multi``, each at multiprobe 0 and 2 —
+and, when run as a script, records their outputs to
+``tests/golden/srp_parity.npz``:
+
+    PYTHONPATH=src python tests/_parity_cases.py
+
+The golden file was generated BEFORE the family refactor landed, so the
+test comparing against it pins the refactor to the old behaviour.
+Integer outputs (indices, probe codes, fallback flags, example ids)
+must match exactly; float outputs (probs, weights) to tight tolerance
+(the golden file may have been written on a different host).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GOLDEN = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "golden", "srp_parity.npz")
+
+
+def _feature_fn(tokens: jax.Array) -> jax.Array:
+    """Deterministic params-free embedding: (B, S) int32 -> (B, 8) f32."""
+    t = tokens.astype(jnp.float32)
+    scales = (jnp.arange(8, dtype=jnp.float32) + 1.0) * 0.1
+    return jnp.mean(jnp.sin(t[..., None] * scales), axis=1)
+
+
+def sample_case(multiprobe: int):
+    """Inputs + outputs of ``sample`` on a dense-SRP index."""
+    from repro.core import LSHParams, build_index, sample
+
+    kx, kq, kb, ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    x = jax.random.normal(kx, (512, 16))
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    q = jax.random.normal(kq, (16,))
+    p = LSHParams(k=6, l=12, dim=16, family="dense")
+    index = build_index(kb, x, p)
+    res = sample(ks, index, x, q, p, m=64, multiprobe=multiprobe)
+    return {
+        "indices": res.indices, "probs": res.probs,
+        "n_probes": res.n_probes, "bucket_sizes": res.bucket_sizes,
+        "fallback": res.fallback, "probe_code": res.probe_code,
+    }
+
+
+def quadratic_sample_case(multiprobe: int):
+    """Same pin for the quadratic family (refactor covers it too)."""
+    from repro.core import LSHParams, build_index, sample
+
+    kx, kq, kb, ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    x = jax.random.normal(kx, (256, 10))
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    q = jax.random.normal(kq, (10,))
+    p = LSHParams(k=4, l=8, dim=10, family="quadratic")
+    index = build_index(kb, x, p)
+    res = sample(ks, index, x, q, p, m=48, multiprobe=multiprobe)
+    return {
+        "indices": res.indices, "probs": res.probs,
+        "fallback": res.fallback, "probe_code": res.probe_code,
+    }
+
+
+def gather_case(multiprobe: int):
+    """Inputs + outputs of ``sample_gather_batched`` (device-resident path)."""
+    from repro.core import LSHParams, build_index, sample_gather_batched
+
+    kx, kq, kb, ks, kt = jax.random.split(jax.random.PRNGKey(13), 5)
+    n, d, s = 384, 12, 20
+    x = jax.random.normal(kx, (n, d))
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    queries = jax.random.normal(kq, (4, d))
+    store = jax.random.randint(kt, (n, s + 1), 0, 101, dtype=jnp.int32)
+    p = LSHParams(k=5, l=10, dim=d, family="dense")
+    index = build_index(kb, x, p)
+    gb = sample_gather_batched(ks, index, x, queries, store, p, m=8,
+                               example_offset=17, multiprobe=multiprobe)
+    return {
+        "tokens": gb.tokens, "targets": gb.targets,
+        "loss_weights": gb.loss_weights, "example_ids": gb.example_ids,
+        "indices": gb.indices, "probs": gb.probs,
+        "fallback": gb.fallback, "probe_code": gb.probe_code,
+    }
+
+
+def pipeline_case(multiprobe: int):
+    """Inputs + outputs of ``LSHSampledPipeline.next_batch_multi``."""
+    from repro.data import LSHPipelineConfig, LSHSampledPipeline
+
+    kt, kq, kp = jax.random.split(jax.random.PRNGKey(19), 3)
+    tokens = np.asarray(
+        jax.random.randint(kt, (256, 25), 0, 97, dtype=jnp.int32))
+    qfix = jax.random.normal(kq, (8,))
+
+    pipe = LSHSampledPipeline(
+        kp, tokens, _feature_fn, lambda: qfix,
+        LSHPipelineConfig(k=6, l=8, minibatch=8, refresh_every=0,
+                          multiprobe=multiprobe))
+    queries = jax.random.normal(jax.random.fold_in(kq, 1), (3, 8))
+    outs = [pipe.next_batch_multi(queries) for _ in range(2)]
+    flat = {}
+    for step, chains in enumerate(outs):
+        for c, b in enumerate(chains):
+            for k, v in b.items():
+                flat[f"s{step}_c{c}_{k}"] = v
+    return flat
+
+
+def all_cases():
+    cases = {}
+    for mp in (0, 2):
+        for name, fn in (("sample", sample_case),
+                         ("quad", quadratic_sample_case),
+                         ("gather", gather_case),
+                         ("pipe", pipeline_case)):
+            for k, v in fn(mp).items():
+                cases[f"{name}_mp{mp}_{k}"] = np.asarray(v)
+    return cases
+
+
+def main():
+    os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+    cases = all_cases()
+    np.savez_compressed(GOLDEN, **cases)
+    print(f"wrote {len(cases)} arrays to {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()

@@ -272,7 +272,7 @@ class TestSampler:
             return in_bucket
 
         hits = np.mean(np.asarray(jax.lax.map(one, keys)), axis=0)
-        expected = np.asarray(exact_inclusion_probability(None, x, q, p, l=1))
+        expected = np.asarray(exact_inclusion_probability(x, q, p, l=1))
         # expected = cp^K; hits estimates it with MC error ~ sqrt(p/q)/sqrt(B)
         np.testing.assert_allclose(hits, expected, atol=0.05)
 

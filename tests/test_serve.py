@@ -1,0 +1,49 @@
+"""CPU smoke test for ``examples/serve.py`` (the batched serving driver).
+
+``serve.py`` was the only example with zero CI coverage; this pins the
+prefill + N-step decode path end-to-end for two architectures — one
+attention-KV-cache arch (``phi4_mini_3_8b``) and one hybrid-SSM arch
+(``zamba2_1_2b``, serve's default) — by running the script exactly as
+documented, as a subprocess.  Part of the tier-1 job (plain pytest
+collection), so the documented serving invocation cannot rot.
+"""
+
+import os
+import re
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SERVE = os.path.join(ROOT, "examples", "serve.py")
+
+NEW_TOKENS = 4
+
+
+def _run_serve(arch: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    proc = subprocess.run(
+        [sys.executable, SERVE, "--arch", arch, "--batch", "2",
+         "--prompt-len", "16", "--new-tokens", str(NEW_TOKENS)],
+        capture_output=True, text=True, timeout=300, cwd=ROOT, env=env)
+    assert proc.returncode == 0, (
+        f"serve.py --arch {arch} failed (exit {proc.returncode}):\n"
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    return proc.stdout
+
+
+@pytest.mark.parametrize("arch", ["phi4_mini_3_8b", "zamba2_1_2b"])
+def test_serve_prefill_and_decode(arch):
+    out = _run_serve(arch)
+    assert re.search(r"prefill 2x16", out), out
+    m = re.search(rf"decoded {NEW_TOKENS} tokens/seq", out)
+    assert m, f"decode line missing:\n{out}"
+    # the sample row must contain NEW_TOKENS generated token ids
+    m = re.search(r"sample row: \[([^\]]*)\]", out)
+    assert m, out
+    toks = [t for t in m.group(1).split(",") if t.strip()]
+    assert len(toks) == min(NEW_TOKENS, 12), out
