@@ -40,6 +40,17 @@ Train step (``train_step.json``):
                     timings are noisier than microbenchmarks) of the
                     committed baseline ratio.
 
+Robustness (``robustness.json``):
+  degraded step     us(stale-index step) / us(healthy step) and
+                    us(uniform-fallback step) / us(healthy step), all
+                    three trainers interleaved same-run — degraded
+                    modes are FALLBACKS, not slow paths, so each ratio
+                    is capped at ``--robustness-degraded-cap`` (default
+                    1.1: within 10% of healthy).
+  recovery          after a bounded injected refresh-failure burst the
+                    ladder must report ``recovered: true`` — a run that
+                    ends stuck in a degraded state fails the gate.
+
 Optimizers (``optimizers.json``):
   adam step         us(lgd-adam step) / us(uniform-adam step), same
                     run, with the LGD pipeline running multiprobe=2 —
@@ -92,6 +103,7 @@ DEFAULT = os.path.join(HERE, "results", "sampling_cost.json")
 DEFAULT_REFRESH = os.path.join(HERE, "results", "refresh_cost.json")
 DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
 DEFAULT_OPTIM = os.path.join(HERE, "results", "optimizers.json")
+DEFAULT_ROBUSTNESS = os.path.join(HERE, "results", "robustness.json")
 DEFAULT_FAMILIES = os.path.join(HERE, "results", "families.json")
 
 
@@ -211,6 +223,42 @@ def compare_train(baseline: dict, fresh: dict, tolerance: float) -> list:
     return failures
 
 
+def compare_robustness(baseline: dict, fresh: dict,
+                       degraded_cap: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "batch", "n_corpus"), "robustness")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+
+    for mode in ("stale_index", "uniform_fallback"):
+        got = fresh["degraded_over_healthy"][mode]
+        base = baseline["degraded_over_healthy"][mode]
+        ok = got <= degraded_cap
+        print(f"robustness {mode} step: baseline {base:.3f}  fresh "
+              f"{got:.3f}  cap {degraded_cap:.3f}  "
+              f"[{'ok' if ok else 'FAIL'}]")
+        if not ok:
+            failures.append(
+                f"degraded-mode ({mode}) step regressed: "
+                f"{got:.3f}x healthy > cap {degraded_cap:.3f} (a "
+                "degradation rung must not be a slow path)")
+
+    rec = fresh["recovery"]
+    ok = bool(rec["recovered"])
+    print(f"robustness recovery: baseline "
+          f"{baseline['recovery']['latency_steps']} steps  fresh "
+          f"{rec['latency_steps']} steps  recovered={rec['recovered']}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            "degradation ladder did not recover after the injected "
+            "refresh-failure burst cleared (run ended degraded — see "
+            "robustness.json recovery)")
+    return failures
+
+
 def compare_optimizers(baseline: dict, fresh: dict, step_cap: float,
                        var_cap: float, fallback_cap: float) -> list:
     failures = _comparable(baseline, fresh,
@@ -306,7 +354,8 @@ def compare_families(baseline: dict, fresh: dict, step_cap: float,
 
 
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
-             optim_base: dict, families_base: dict, args) -> int:
+             optim_base: dict, families_base: dict,
+             robustness_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -375,6 +424,20 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_families(families_base, fam_var,
                                          *fam_args)))
 
+    rob_slow = json.loads(json.dumps(robustness_base))
+    rob_slow["degraded_over_healthy"]["uniform_fallback"] = \
+        args.robustness_degraded_cap * 1.5
+    print("-- selftest 11: injected degraded-mode step slowdown --")
+    results.append(bool(compare_robustness(robustness_base, rob_slow,
+                                           args.robustness_degraded_cap)))
+
+    rob_stuck = json.loads(json.dumps(robustness_base))
+    rob_stuck["recovery"]["recovered"] = False
+    rob_stuck["recovery"]["latency_steps"] = None
+    print("-- selftest 12: injected lost ladder recovery --")
+    results.append(bool(compare_robustness(robustness_base, rob_stuck,
+                                           args.robustness_degraded_cap)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -405,6 +468,10 @@ def main() -> int:
                     help="committed families baseline JSON")
     ap.add_argument("--fresh-families", default=DEFAULT_FAMILIES,
                     help="freshly measured families JSON")
+    ap.add_argument("--baseline-robustness", default=DEFAULT_ROBUSTNESS,
+                    help="committed robustness baseline JSON")
+    ap.add_argument("--fresh-robustness", default=DEFAULT_ROBUSTNESS,
+                    help="freshly measured robustness JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
@@ -430,6 +497,9 @@ def main() -> int:
     ap.add_argument("--families-var-cap", type=float, default=1.0,
                     help="MIPS estimator variance ratio vs uniform must "
                          "stay below this on the un-normalised corpus")
+    ap.add_argument("--robustness-degraded-cap", type=float, default=1.1,
+                    help="absolute cap on degraded-mode (stale-index / "
+                         "uniform-fallback) over healthy step-time ratio")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
@@ -444,9 +514,11 @@ def main() -> int:
         optim_base = json.load(f)
     with open(args.baseline_families) as f:
         families_base = json.load(f)
+    with open(args.baseline_robustness) as f:
+        robustness_base = json.load(f)
     if args.selftest:
         return selftest(baseline, refresh_base, train_base, optim_base,
-                        families_base, args)
+                        families_base, robustness_base, args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -458,6 +530,8 @@ def main() -> int:
         optim_fresh = json.load(f)
     with open(args.fresh_families) as f:
         families_fresh = json.load(f)
+    with open(args.fresh_robustness) as f:
+        robustness_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
@@ -470,6 +544,8 @@ def main() -> int:
     failures += compare_families(families_base, families_fresh,
                                  args.families_step_cap,
                                  args.families_var_cap)
+    failures += compare_robustness(robustness_base, robustness_fresh,
+                                   args.robustness_degraded_cap)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

@@ -14,6 +14,10 @@
   tab_train_step           end-to-end Trainer step: uniform vs sharded-LGD
                            (device-resident batches) step wall time,
                            sampler-overhead fraction, estimator variance
+  tab_robustness           degradation-ladder step cost: healthy vs
+                           stale-index vs uniform-fallback Trainer step
+                           time, plus recovery latency after an injected
+                           refresh-failure burst
   tab_optimizers           adaptive optimisers (momentum/AdaGrad/Adam)
                            under LGD: per-optimizer step time + estimator
                            variance, and multi-probe vs single-probe
@@ -568,6 +572,136 @@ def tab_train_step(quick: bool = False):
     return out
 
 
+def tab_robustness(quick: bool = False):
+    """Degradation-ladder step cost + recovery latency (one table).
+
+    Two gated quantities for the self-healing LGD story:
+      * degraded-mode step time — Trainer step wall time with the
+        sampler held in ``stale-index`` and ``uniform-fallback`` health
+        states vs a healthy run, all three stepped ALTERNATELY in one
+        loop with 10th-percentile stats (same discipline as
+        ``tab_train_step``) — degraded modes are fallbacks, not slow
+        paths, so each must stay within 1.1x of healthy;
+      * recovery latency — steps from the first health transition away
+        from ``healthy`` to the ``recovered`` transition after an
+        injected bounded refresh-failure burst (the ladder must come
+        back, and quickly, once the fault clears).
+    """
+    from repro.data import HealthConfig
+    from repro.testing import RefreshRaise
+
+    cfg = ModelConfig(
+        name="lm-robustness", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256, chunk=16, loss_chunk=64,
+        dtype="float32", rope_theta=10000.0, lgd_enabled=True)
+    n_corpus, batch = (512, 16) if quick else (2048, 32)
+    steps = 16 if quick else 48
+    refresh_every = 8
+    corpus = make_token_corpus(17, n_corpus, 24, cfg.vocab, hard_frac=0.12)
+
+    def make(health, injector=None, retries=1):
+        params = init_params(KEY, cfg)
+        sampler = ShardedLSHPipeline(
+            jax.random.PRNGKey(21), corpus.tokens,
+            mean_pool_feature_fn(cfg), lm_head_query_fn(),
+            LSHPipelineConfig(k=5, l=10, minibatch=batch,
+                              refresh_every=refresh_every,
+                              refresh_async=True, refresh_backoff=0.0,
+                              refresh_retries=retries, health=health),
+            n_shards=2, params=params)
+        if injector is not None:
+            sampler.set_fault_injector(injector)
+        tr = Trainer(cfg, params, Adam(lr=3e-3),
+                     tcfg=TrainerConfig(log_every=10_000), sampler=sampler)
+        return tr, sampler
+
+    NEVER = 10 ** 9
+    # healthy: faults off, ladder idle.
+    tr_ok, _ = make(HealthConfig(fallback_spike=1.1))
+    # stale-index: every refresh fails (injected), the ladder is pinned
+    # below the fallback rung, so the run serves from the last good
+    # index forever — the steady-state cost of a broken refresh worker.
+    tr_stale, s_stale = make(
+        HealthConfig(max_stale_refreshes=NEVER, fallback_spike=1.1),
+        injector=RefreshRaise(cycles=NEVER), retries=0)
+    # uniform-fallback: monitors forced onto the bottom rung (recovery
+    # cadence pinned out of reach) — weight-1 uniform draws all the way.
+    tr_uni, s_uni = make(
+        HealthConfig(max_stale_refreshes=1, recover_after=NEVER,
+                     fallback_spike=1.1))
+    for shard in s_uni.shards:
+        shard.health.note_refresh_failure(0, "benchmark: forced rung")
+        shard.health.note_refresh_failure(0, "benchmark: forced rung")
+    for shard in s_stale.shards:
+        shard.health.note_refresh_failure(0, "benchmark: forced rung")
+
+    trainers = {"healthy": tr_ok, "stale_index": tr_stale,
+                "uniform_fallback": tr_uni}
+    for tr in trainers.values():
+        tr.run(4)                              # warm up jit + caches
+    dts = {name: [] for name in trainers}
+    for _ in range(steps):
+        for name, tr in trainers.items():
+            t0 = time.perf_counter()
+            tr.run(1)
+            dts[name].append(time.perf_counter() - t0)
+    step_us = {name: float(np.percentile(v, 10)) * 1e6
+               for name, v in dts.items()}
+    for tr in trainers.values():
+        tr.finalize()
+    assert s_stale.health_state() == "stale-index", s_stale.health_state()
+    assert s_uni.health_state() == "uniform-fallback", s_uni.health_state()
+
+    # recovery latency: a BOUNDED failure burst (2 cycles per shard)
+    # walks the ladder down to uniform-fallback, then the recovery
+    # cadence rebuilds the index and the run returns to healthy.
+    rec_steps = 60
+    tr_rec, s_rec = make(
+        HealthConfig(max_stale_refreshes=1, recover_after=8,
+                     fallback_spike=1.1),
+        injector=RefreshRaise(cycles=2), retries=0)
+    tr_rec.run(rec_steps)
+    tr_rec.finalize()
+    trans = s_rec.health_summary()["transitions"]
+    down = [t for t in trans if t[-2] != "healthy"]
+    up = [t for t in trans if t[-2] == "healthy"]
+    degraded_at = int(down[0][1]) if down else None
+    recovered_at = int(up[0][1]) if up else None
+    recovered = bool(up) and s_rec.health_state() == "healthy"
+    latency = (recovered_at - degraded_at
+               if recovered and degraded_at is not None else None)
+
+    ok_us = max(step_us["healthy"], 1e-9)
+    _row("tab_robustness_healthy", step_us["healthy"], "baseline")
+    _row("tab_robustness_stale_index", step_us["stale_index"],
+         f"{step_us['stale_index'] / ok_us:.2f}x healthy")
+    _row("tab_robustness_uniform_fallback", step_us["uniform_fallback"],
+         f"{step_us['uniform_fallback'] / ok_us:.2f}x healthy")
+    _row("tab_robustness_recovery", 0.0,
+         f"{latency} steps to recover" if recovered else "NOT RECOVERED")
+    out = {
+        "backend": jax.default_backend(),
+        "quick": quick, "batch": batch, "n_corpus": n_corpus,
+        "steps_timed": steps, "n_shards": 2,
+        "refresh_every": refresh_every,
+        "step_us": step_us,
+        "degraded_over_healthy": {
+            "stale_index": step_us["stale_index"] / ok_us,
+            "uniform_fallback": step_us["uniform_fallback"] / ok_us,
+        },
+        "recovery": {
+            "injected_cycles": 2, "steps_run": rec_steps,
+            "degraded_at_step": degraded_at,
+            "recovered_at_step": recovered_at,
+            "latency_steps": latency, "recovered": recovered,
+        },
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "robustness.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def tab_optimizers(quick: bool = False):
     """Adaptive optimisers under LGD + multi-probe querying (one table).
 
@@ -932,6 +1066,7 @@ TABLES = {
     "tab_refresh_cost": tab_refresh_cost,
     "fig5_lm_epochwise": lambda quick: fig5_lm_epochwise(),
     "tab_train_step": tab_train_step,
+    "tab_robustness": tab_robustness,
     "tab_optimizers": tab_optimizers,
     "tab_families": tab_families,
     "thm2_variance": lambda quick: thm2_variance(),
@@ -950,7 +1085,8 @@ def main() -> None:
     os.makedirs(RESULTS, exist_ok=True)
     print("name,us_per_call,derived")
     quick_aware = {"tab_sampling_cost", "tab_refresh_cost",
-                   "tab_train_step", "tab_optimizers", "tab_families"}
+                   "tab_train_step", "tab_robustness", "tab_optimizers",
+                   "tab_families"}
     if args.quick:
         ignored = [n for n in names if n not in quick_aware]
         if ignored:

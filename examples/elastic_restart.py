@@ -18,7 +18,7 @@ from repro.data import make_token_corpus, uniform_batches
 from repro.models import ModelConfig, init_params
 from repro.optim import Adam
 from repro.train import Trainer, TrainerConfig, checkpoint as ckpt
-from repro.train.elastic import rescale_plan, restore_on_mesh
+from repro.train.elastic import rescale_plan, restore_latest_valid_on_mesh
 
 
 def main():
@@ -58,8 +58,10 @@ def main():
         mesh = jax.make_mesh((1, 1), ("data", "model"))
         template = {"params": init_params(key, cfg),
                     "opt_state": Adam(lr=1e-2).init(init_params(key, cfg))}
-        state, extra = restore_on_mesh(d, ckpt.latest_step(d),
-                                       template, mesh)
+        # integrity-checked selection: a checkpoint truncated by the
+        # "failure" would be skipped for the newest VALID one
+        step_v, state, extra = restore_latest_valid_on_mesh(
+            d, template, mesh)
         n = sum(x.size for x in jax.tree.leaves(state["params"]))
         print(f"phase 3: restored step {extra['step']} onto mesh "
               f"{dict(zip(mesh.axis_names, mesh.devices.shape))} "

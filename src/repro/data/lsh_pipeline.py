@@ -80,6 +80,24 @@ byte-for-byte the same; the MIPS data scale M is pinned at each full
 async refreshes commit features, index and scale together at the swap
 boundary, so a failed refresh cannot leave them out of sync).
 
+SELF-HEALING (the degradation ladder — see ``repro.data.health``): a
+refresh that raises is retried with exponential backoff + deterministic
+jitter (``refresh_retries`` / ``refresh_backoff``); a refresh worker
+that HANGS is abandoned by a watchdog (``refresh_timeout``) and counts
+as a failed attempt.  On exhausted retries the pipeline enters
+STALE-INDEX mode: it keeps drawing from the last good (features,
+index) buffer — still unbiased w.r.t. the indexed vectors — instead of
+re-raising at the swap boundary, with a bounded staleness counter.
+Past the staleness bound (or on a fallback-rate spike / non-finite-loss
+streak reported by the trainer) it degrades to UNIFORM-FALLBACK:
+batches are drawn uniformly with weight 1 (unbiased by construction,
+zero LSH dependence) from the same per-step key stream, and every
+``recover_after`` steps a full canonical index rebuild is attempted;
+on success the ladder returns to healthy.  All transitions are recorded
+in ``health.transitions`` and surfaced through the trainer's metrics.
+Fault injection for tests/chaos drills hooks in via
+``set_fault_injector`` (see ``repro.testing.faults``).
+
 KEY DISCIPLINE: all randomness derives from the constructor key by
 ``fold_in`` with distinct stream salts (build / per-step sampling /
 per-refresh), never by chained ``split``.  The determinism contract is
@@ -97,7 +115,10 @@ coincide bitwise; pinned by tests/test_sharded_lgd.py).
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
+import time
+import zlib
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -121,6 +142,15 @@ from repro.dist.sharding import (
     shard_store_device,
 )
 from repro.kernels import default_use_pallas
+from .health import (
+    HEALTHY,
+    STALE_INDEX,
+    UNIFORM_FALLBACK,
+    HealthConfig,
+    HealthMonitor,
+)
+
+log = logging.getLogger("repro.lgd.health")
 
 # fold_in stream salts: one disjoint stream per random consumer, so a
 # pipeline's draw at (stream, counter) is independent of how many draws
@@ -181,6 +211,23 @@ class LSHPipelineConfig:
     # side) and once per draw (query side); the per-step jitted
     # sample->gather->weight program is unchanged.
     family: str = "srp"
+    # -- self-healing refresh (module docstring: degradation ladder) --
+    # retries after a failed refresh attempt (so 1 + refresh_retries
+    # attempts total per refresh cycle) before declaring the cycle
+    # failed and entering stale-index mode.
+    refresh_retries: int = 2
+    # base backoff seconds between retry attempts; attempt j sleeps
+    # backoff * 2^(j-1) * (1 + jitter), with the jitter derived
+    # deterministically from (refresh_count, attempt).  0 disables.
+    refresh_backoff: float = 0.05
+    # watchdog seconds for a refresh computation: an attempt exceeding
+    # it is abandoned (daemon thread) and counted as failed.  For the
+    # async double-buffered path this is the EXTRA wait at the swap-
+    # boundary join (the worker already had ``refresh_lead`` steps).
+    # None = wait forever (no watchdog).
+    refresh_timeout: Optional[float] = None
+    # degradation-ladder thresholds; None = HealthConfig() defaults.
+    health: Optional[HealthConfig] = None
 
     def __post_init__(self):
         if self.refresh_mode not in ("full", "delta"):
@@ -190,6 +237,9 @@ class LSHPipelineConfig:
         if self.multiprobe < 0:
             raise ValueError(
                 f"multiprobe must be >= 0, got {self.multiprobe}")
+        if self.refresh_retries < 0:
+            raise ValueError(
+                f"refresh_retries must be >= 0, got {self.refresh_retries}")
         get_family(self.family)   # raises on unknown family names
 
 
@@ -273,6 +323,14 @@ class LSHSampledPipeline:
         self._refresh_count = 0
         self._refresh_thread: Optional[threading.Thread] = None
         self._refresh_box: Optional[dict] = None
+        # snapshot of the async refresh's inputs, kept until the swap
+        # boundary so a failed/hung worker can be retried synchronously
+        # on bit-identical inputs.
+        self._refresh_snapshot: Optional[tuple] = None
+        self._health_cfg = config.health or HealthConfig()
+        self.health = HealthMonitor(self._health_cfg)
+        self.fault_injector = None         # repro.testing.faults hook
+        self._uniform_fn = None            # lazy jit: uniform-fallback draw
         self._track_dirty = (config.refresh_mode == "delta"
                              and config.refresh_every > 0)
         self._dirty = jnp.zeros((self.n,), jnp.bool_)
@@ -412,28 +470,133 @@ class LSHSampledPipeline:
         return (features.at[ids].set(feats_d),
                 refresh_index_delta(index, ids, codes_d))
 
-    def refresh(self, full: Optional[bool] = None):
+    # -- refresh resilience --------------------------------------------------
+
+    def set_fault_injector(self, injector):
+        """Install a ``repro.testing.faults`` injector (None clears).
+
+        The pipeline fires ``refresh_compute`` (per refresh attempt) and
+        ``recover_rebuild`` (per uniform-fallback recovery attempt)
+        events through it — deterministic chaos for tests and drills.
+        """
+        self.fault_injector = injector
+
+    def _fault(self, event: str, **info):
+        if self.fault_injector is not None:
+            self.fault_injector.fire(event, **info)
+
+    def _sleep_backoff(self, attempt: int):
+        """Exponential backoff with DETERMINISTIC jitter: the jitter is
+        a pure function of (refresh_count, attempt), so two replays of
+        the same faulted run sleep identically (wall time is not part of
+        the batch-determinism contract, but keeping it reproducible
+        makes chaos drills comparable)."""
+        base = self.cfg.refresh_backoff
+        if base <= 0 or attempt <= 0:
+            return
+        j = (zlib.crc32(f"{self._refresh_count}:{attempt}".encode())
+             % 1000) / 1000.0
+        time.sleep(base * (2 ** (attempt - 1)) * (1.0 + 0.5 * j))
+
+    def _attempt_refresh(self, kr, full, dirty, params, features, index,
+                         scale, attempt: int):
+        """ONE refresh attempt on explicit inputs -> (features, index,
+        scale).  Attribute-write-free so failed attempts cannot leave
+        partially-committed state (features newer than index, or a scale
+        out of sync with both)."""
+        self._fault("refresh_compute", refresh=self._refresh_count,
+                    attempt=attempt)
+        if full:
+            feats, new_scale = self._compute_features_scaled(params)
+            new_index = refresh_index(
+                kr, index, feats, self.lsh,
+                use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+            return feats, new_index, new_scale
+        feats, new_index = self._delta_refresh_values(
+            kr, params, dirty, features, index, scale=scale)
+        return feats, new_index, scale
+
+    def _guarded(self, thunk):
+        """Run ``thunk`` under the hang watchdog: with
+        ``refresh_timeout`` set it runs on a daemon thread and a run
+        exceeding the timeout raises TimeoutError here (the worker is
+        abandoned — it only ever writes its private box)."""
+        if self.cfg.refresh_timeout is None:
+            return thunk()
+        box: dict = {}
+
+        def work():
+            try:
+                box["result"] = thunk()
+            except BaseException as e:
+                box["error"] = e
+
+        t = threading.Thread(target=work, daemon=True)
+        t.start()
+        t.join(self.cfg.refresh_timeout)
+        if t.is_alive():
+            raise TimeoutError(
+                f"refresh attempt exceeded watchdog timeout "
+                f"{self.cfg.refresh_timeout}s; worker abandoned")
+        if "error" in box:
+            raise box["error"]
+        return box["result"]
+
+    def _retry_refresh(self, kr, full, dirty, params, features, index,
+                       scale, first_error=None, start_attempt=0) -> bool:
+        """Retry loop around the refresh computation; commits the
+        (features, index, scale) triple atomically on success.
+
+        Returns True on success.  On exhausted retries the pipeline
+        STAYS on its last good buffer (stale-index mode: Algorithm 1's
+        probabilities remain exact w.r.t. the indexed vectors, the index
+        merely lags the model) and the health monitor decides whether
+        the staleness bound was crossed — nothing raises at the swap
+        boundary.
+        """
+        attempts = 1 + max(self.cfg.refresh_retries, 0)
+        err = first_error
+        for attempt in range(start_attempt, attempts):
+            self._sleep_backoff(attempt)
+            try:
+                feats, new_index, new_scale = self._guarded(
+                    lambda: self._attempt_refresh(
+                        kr, full, dirty, params, features, index, scale,
+                        attempt))
+            except Exception as e:       # noqa: BLE001 — any failure retries
+                err = e
+                log.warning("refresh %d attempt %d failed: %r",
+                            self._refresh_count, attempt, e)
+                continue
+            self.features, self.index = feats, new_index
+            if self.family.asymmetric:
+                self._feat_scale = new_scale
+            self.health.note_refresh_success(self._step)
+            return True
+        log.warning("refresh %d failed after %d attempt(s); keeping stale "
+                    "index (last error: %r)", self._refresh_count,
+                    attempts - start_attempt, err)
+        self.health.note_refresh_failure(self._step, repr(err))
+        return False
+
+    def refresh(self, full: Optional[bool] = None) -> bool:
         """Re-embed + re-hash the local shard synchronously.
 
         ``full=None`` follows ``cfg.refresh_mode``; ``full=True`` forces
         the whole-shard path regardless of mode.  Both paths re-sort
         through the previous ``order`` (warm start / delta merge), so
         the rebuilt index double-buffers cleanly: unchanged codes keep
-        their slots.
+        their slots.  Failures retry with backoff; on exhaustion the
+        last good buffer stays live (returns False, health degrades).
         """
         full = (self.cfg.refresh_mode != "delta") if full is None else full
         kr = jax.random.fold_in(self._refresh_stream, self._refresh_count)
         dirty = self._take_dirty()
-        if full:
-            self.features = self._compute_features()
-            self.index = refresh_index(
-                kr, self.index, self.features, self.lsh,
-                use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
-        else:
-            self.features, self.index = self._delta_refresh_values(
-                kr, self.params, dirty, self.features, self.index,
-                scale=self._feat_scale)
+        ok = self._retry_refresh(kr, full, dirty, self.params,
+                                 self.features, self.index,
+                                 self._feat_scale)
         self._refresh_count += 1
+        return ok
 
     def _launch_refresh(self):
         """Start the double-buffer refresh on a host thread (overlap)."""
@@ -453,53 +616,138 @@ class LSHSampledPipeline:
             # refresh cannot leave self._feat_scale out of sync with
             # the live (features, index) pair.
             try:
-                if full:
-                    feats, scale = self._compute_features_scaled(params)
-                    box["features"] = feats
-                    box["scale"] = scale
-                    box["index"] = refresh_index(
-                        kr, old_index, feats, self.lsh,
-                        use_pallas=self.cfg.use_pallas,
-                        interpret=self.cfg.interpret)
-                else:
-                    box["features"], box["index"] = \
-                        self._delta_refresh_values(
-                            kr, params, dirty, old_features, old_index,
-                            scale=old_scale)
-                    box["scale"] = old_scale
-            except BaseException as e:   # surfaced at the swap boundary
+                box["result"] = self._attempt_refresh(
+                    kr, full, dirty, params, old_features, old_index,
+                    old_scale, attempt=0)
+            except BaseException as e:   # handled at the swap boundary
                 box["error"] = e
 
         t = threading.Thread(target=work, daemon=True)
         t.start()
         self._refresh_thread, self._refresh_box = t, box
+        # the retry path re-runs the worker's computation on the SAME
+        # inputs, so a boundary retry is bit-identical to what the
+        # worker would have produced.
+        self._refresh_snapshot = (kr, full, dirty, params, old_features,
+                                  old_index, old_scale)
 
     def _swap_refresh(self):
-        """Join the in-flight refresh and swap buffers (fixed boundary)."""
+        """Join the in-flight refresh and swap buffers (fixed boundary).
+
+        A worker that errored is retried synchronously (same inputs,
+        backoff between attempts); one that HANGS past
+        ``refresh_timeout`` is abandoned by the watchdog and counted as
+        a failed attempt.  Exhausted retries leave the last good buffer
+        live (stale-index mode) instead of raising.
+        """
         if self._refresh_thread is None:   # e.g. fresh restore: sync path
             self.refresh()
             return
-        self._refresh_thread.join()
-        box = self._refresh_box
-        self._refresh_thread, self._refresh_box = None, None
-        if "error" in box:                 # re-raise the worker's failure
-            raise box["error"]
-        self.features = box["features"]
-        self.index = box["index"]
-        if self.family.asymmetric:
-            self._feat_scale = box["scale"]
+        t, box = self._refresh_thread, self._refresh_box
+        snap = self._refresh_snapshot
+        t.join(self.cfg.refresh_timeout)
+        hung = t.is_alive()
+        self._refresh_thread = None
+        self._refresh_box = None
+        self._refresh_snapshot = None
+        kr, full, dirty, params, features, index, scale = snap
+        if hung:
+            err = TimeoutError(
+                f"async refresh worker hung past the swap boundary "
+                f"(watchdog {self.cfg.refresh_timeout}s); abandoned")
+            log.warning("%s", err)
+            self._retry_refresh(kr, full, dirty, params, features, index,
+                                scale, first_error=err, start_attempt=1)
+        elif "error" in box:
+            self._retry_refresh(kr, full, dirty, params, features, index,
+                                scale, first_error=box["error"],
+                                start_attempt=1)
+        else:
+            feats, new_index, new_scale = box["result"]
+            self.features, self.index = feats, new_index
+            if self.family.asymmetric:
+                self._feat_scale = new_scale
+            self.health.note_refresh_success(self._step)
         self._refresh_count += 1
 
+    def _attempt_recovery(self) -> bool:
+        """Uniform-fallback -> healthy: try a full CANONICAL index
+        rebuild (fresh argsort from the build key, like ``restore_at`` —
+        not the refresh-stream warm-start chain, which the failed
+        refreshes desynced).  Failure stays in uniform-fallback until
+        the next ``recover_after`` boundary."""
+        try:
+            def build():
+                self._fault("recover_rebuild", step=self._step)
+                feats, scale = self._compute_features_scaled(self.params)
+                idx = build_index(
+                    self._build_key, feats, self.lsh,
+                    use_pallas=self.cfg.use_pallas,
+                    interpret=self.cfg.interpret)
+                return feats, idx, scale
+            feats, idx, scale = self._guarded(build)
+        except Exception as e:           # noqa: BLE001
+            log.warning("recovery rebuild failed at step %d: %r",
+                        self._step, e)
+            self.health.refresh_failures += 1
+            return False
+        self.features, self.index = feats, idx
+        if self.family.asymmetric:
+            self._feat_scale = scale
+        self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        self.health.note_recovered(self._step)
+        log.info("recovered at step %d: index rebuilt", self._step)
+        return True
+
+    def _discard_refresh(self):
+        """Abandon any in-flight refresh worker (it only writes its
+        private box) — used when degrading to uniform-fallback, where
+        the refresh schedule is suspended."""
+        self._refresh_thread = None
+        self._refresh_box = None
+        self._refresh_snapshot = None
+
+    def note_loss(self, finite: bool):
+        """Trainer hook: per-step loss finiteness feeds the ladder (a
+        non-finite streak degrades to uniform-fallback)."""
+        pre = self.health.state
+        self.health.note_loss(self._step, finite)
+        if self.health.state != pre and \
+                self.health.state == UNIFORM_FALLBACK:
+            self._discard_refresh()
+
+    def check_health(self):
+        """Feed the latest batch's fallback rate into the ladder (syncs
+        a device scalar — call at log cadence, not per step) and return
+        the current state."""
+        pre = self.health.state
+        if self._stat_draws > 0 and pre != UNIFORM_FALLBACK:
+            self.health.note_fallback_rate(
+                self._step, float(self._last_fallback))
+            if self.health.state == UNIFORM_FALLBACK:
+                self._discard_refresh()
+        return self.health.state
+
+    def health_state(self) -> str:
+        return self.health.state
+
+    def health_summary(self) -> dict:
+        return self.health.summary()
+
     def finalize(self):
-        """Join any in-flight refresh thread (call before teardown);
-        re-raises a worker failure that had not yet hit a swap boundary
-        so it cannot vanish at shutdown."""
+        """Join any in-flight refresh thread (call before teardown).
+        A worker failure that had not yet hit a swap boundary is folded
+        into the health state (and logged) rather than raised — teardown
+        is resilient by design."""
         if self._refresh_thread is not None:
-            self._refresh_thread.join()
-            box = self._refresh_box
-            self._refresh_thread, self._refresh_box = None, None
-            if box and "error" in box:
-                raise box["error"]
+            self._refresh_thread.join(self.cfg.refresh_timeout)
+            box = self._refresh_box or {}
+            self._discard_refresh()
+            if "error" in box:
+                log.warning("in-flight refresh failed at teardown: %r",
+                            box["error"])
+                self.health.note_refresh_failure(
+                    self._step, repr(box["error"]))
 
     def _maybe_refresh(self):
         re = self.cfg.refresh_every
@@ -518,11 +766,50 @@ class LSHSampledPipeline:
     # -- batches ------------------------------------------------------------
 
     def _tick(self):
-        """Shared refresh gate + per-step key for both batch entry points."""
-        self._maybe_refresh()
+        """Shared refresh gate + per-step key for both batch entry points.
+
+        In uniform-fallback the refresh schedule is suspended (the index
+        is not trusted); instead the pipeline periodically attempts a
+        full canonical rebuild to climb back to healthy.  The per-step
+        key stream advances identically in every state, so a run that
+        degrades and recovers stays on the same key schedule as a
+        healthy one.
+        """
+        if self.health.state == UNIFORM_FALLBACK:
+            if self.health.should_attempt_recovery(self._step):
+                self._attempt_recovery()
+        else:
+            self._maybe_refresh()
         sub = jax.random.fold_in(self._step_stream, self._step)
         self._step += 1
         return sub
+
+    def _uniform_batch(self, sub: jax.Array, m: int):
+        """Uniform-fallback draw: m uniform rows with weight 1.
+
+        Plain Monte-Carlo — E[(1/m)·Σ ∇f_i] over uniform i is the exact
+        mean gradient, so weight 1 is unbiased by construction with ZERO
+        dependence on the LSH state (Needell & Ward's safe baseline).
+        Under sharding the owner rescales by n_s·S/N exactly as for
+        weighted batches, which composes shard-means into the global
+        mean — no special-casing needed.
+        """
+        if self._uniform_fn is None:
+            n, off, rw = self.n, self.example_offset, self.row_width
+
+            def draw(key, mm):
+                idx = jax.random.randint(key, (mm,), 0, n)
+                rows = jnp.take(self.store, idx, axis=0)[:, :rw]
+                return {
+                    "tokens": rows[:, :-1],
+                    "targets": rows[:, 1:],
+                    "loss_weights": jnp.ones((mm,), jnp.float32),
+                    "example_ids": idx + off,
+                }, idx
+            self._uniform_fn = jax.jit(draw, static_argnums=1)
+        batch, idx = self._uniform_fn(sub, m)
+        self._mark_dirty(idx)
+        return batch
 
     def restore_at(self, step: int, rebuild: bool = True):
         """Elastic/deterministic resume: rewind counters to ``step`` and
@@ -549,6 +836,11 @@ class LSHSampledPipeline:
         self._refresh_count = (
             0 if re <= 0 or step < 1 else (step - 1) // re)
         self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        # a restored pipeline starts HEALTHY: the rebuild below (or the
+        # constructor build it mirrors) is a fresh, verified index, and
+        # determinism requires replays to be state-independent.
+        self.health = HealthMonitor(self._health_cfg)
+        self._refresh_snapshot = None
         if rebuild:
             self.features = self._compute_features()
             self.index = build_index(
@@ -603,6 +895,8 @@ class LSHSampledPipeline:
         (already normalised) lets a sharded owner compute the shared
         global query once for all shards."""
         sub = self._tick()
+        if self.health.state == UNIFORM_FALLBACK:
+            return self._uniform_batch(sub, self.cfg.minibatch)
         q = self._query() if query is None else query
         gb = sample_gather(
             sub, self.index, self.features, q, self.store, self.lsh,
@@ -631,6 +925,11 @@ class LSHSampledPipeline:
         exact per-sample Algorithm-1 probabilities under its own query.
         """
         sub = self._tick()
+        if self.health.state == UNIFORM_FALLBACK:
+            c, m = queries.shape[0], self.cfg.minibatch
+            big = self._uniform_batch(sub, c * m)
+            return [{k: v[i * m:(i + 1) * m] for k, v in big.items()}
+                    for i in range(c)]
         qn = self.family.augment_query(queries)
         gb = sample_gather_batched(
             sub, self.index, self.features, qn, self.store, self.lsh,
@@ -755,6 +1054,41 @@ class ShardedLSHPipeline:
     def refresh(self, full: Optional[bool] = None):
         for p in self.shards:
             p.refresh(full=full)
+
+    def set_fault_injector(self, injector, shard: Optional[int] = None):
+        """Install a fault injector on one shard (or all, shard=None)."""
+        targets = self.shards if shard is None else [self.shards[shard]]
+        for p in targets:
+            p.set_fault_injector(injector)
+
+    def note_loss(self, finite: bool):
+        for p in self.shards:
+            p.note_loss(finite)
+
+    def check_health(self) -> str:
+        for p in self.shards:
+            p.check_health()
+        return self.health_state()
+
+    def health_state(self) -> str:
+        """Worst state across shards (one degraded shard degrades the
+        reported aggregate — its portion of every batch is affected)."""
+        rank = {HEALTHY: 0, STALE_INDEX: 1, UNIFORM_FALLBACK: 2}
+        worst = max(self.shards, key=lambda p: rank[p.health.state])
+        return worst.health.state
+
+    def health_summary(self) -> dict:
+        per = [p.health_summary() for p in self.shards]
+        return {
+            "state": self.health_state(),
+            "stale_refreshes": max(s["stale_refreshes"] for s in per),
+            "refresh_failures": sum(s["refresh_failures"] for s in per),
+            "recoveries": sum(s["recoveries"] for s in per),
+            "transitions": [
+                (shard_idx,) + tuple(t)
+                for shard_idx, s in enumerate(per)
+                for t in s["transitions"]],
+        }
 
     def sampler_stats(self) -> Dict[str, float]:
         """Draw-weighted aggregate of per-shard sampling diagnostics."""

@@ -1,0 +1,198 @@
+"""Deterministic fault injection for the self-healing LGD stack.
+
+Chaos engineering in miniature: every injector here is DETERMINISTIC —
+it fires on exact (refresh cycle / draw index / byte offset) triggers,
+never on wall clock or randomness — so a chaos test that survives a
+fault proves the recovery path, and a failure replays exactly.
+
+Three fault surfaces, matching the failure model in
+docs/ARCHITECTURE.md:
+
+* REFRESH faults (``RefreshRaise``, ``RefreshHang``) hook the
+  pipeline's ``set_fault_injector`` port and fire inside the refresh
+  computation — exercising retry/backoff, the hang watchdog, and the
+  stale-index / uniform-fallback ladder.
+* CHECKPOINT corrupters (``truncate_arrays``, ``delete_leaf``,
+  ``flip_manifest_byte``) damage on-disk state the way real incidents
+  do (truncated write, lost file, bit rot) — exercising ``verify()``
+  and ``latest_valid_step`` fallback.
+* GRADIENT poison (``NanLossWeights``) wraps a sampler and multiplies
+  a window of batches' ``loss_weights`` by NaN — the loss and every
+  gradient go non-finite, exercising the trainer's skip guard and
+  checkpoint rollback.  Injection rides in BATCH DATA, not in the loss
+  function, so the jitted step is untouched (no recompiles, no
+  step-conditional tracing).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+import zipfile
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class FaultError(RuntimeError):
+    """Raised by injectors — distinguishable from organic failures."""
+
+
+class FaultInjector:
+    """Base injector: ``fire(event, **info)`` is called by instrumented
+    code at fault points; subclasses raise/hang/poison on their trigger.
+    Events fired by the pipeline:
+
+    * ``refresh_compute`` (``refresh=<cycle>, attempt=<n>``) — inside
+      every refresh attempt, including retries;
+    * ``recover_rebuild`` (``step=<s>``) — inside a uniform-fallback
+      recovery rebuild.
+    """
+
+    def fire(self, event: str, **info):   # pragma: no cover - interface
+        pass
+
+
+class RefreshRaise(FaultInjector):
+    """Fail the first ``cycles`` refresh cycles (every attempt of each,
+    so retries are exhausted and the cycle genuinely fails).
+
+    ``fail_recovery=True`` also fails uniform-fallback recovery rebuilds
+    for those cycles' lifetime (count tracked separately).
+    """
+
+    def __init__(self, cycles: int = 3, fail_recovery: bool = False,
+                 recovery_fails: int = 0):
+        self.cycles = cycles
+        self._seen: set = set()
+        self.fired = 0                 # total injected raises
+        self._recovery_left = recovery_fails if fail_recovery or \
+            recovery_fails else 0
+
+    def fire(self, event: str, **info):
+        if event == "recover_rebuild" and self._recovery_left > 0:
+            self._recovery_left -= 1
+            self.fired += 1
+            raise FaultError(
+                f"injected recovery failure at step {info.get('step')}")
+        if event != "refresh_compute":
+            return
+        r = info.get("refresh")
+        if r in self._seen or len(self._seen) < self.cycles:
+            self._seen.add(r)
+            self.fired += 1
+            raise FaultError(
+                f"injected refresh failure (cycle {r}, "
+                f"attempt {info.get('attempt')})")
+
+
+class RefreshHang(FaultInjector):
+    """Hang the first ``cycles`` refresh cycles' attempts for
+    ``seconds`` — longer than the pipeline's ``refresh_timeout`` so the
+    watchdog abandons the worker and counts the attempt as failed."""
+
+    def __init__(self, seconds: float = 5.0, cycles: int = 1):
+        self.seconds = seconds
+        self.cycles = cycles
+        self._seen: set = set()
+        self.fired = 0
+
+    def fire(self, event: str, **info):
+        if event != "refresh_compute":
+            return
+        r = info.get("refresh")
+        if r in self._seen or len(self._seen) < self.cycles:
+            self._seen.add(r)
+            self.fired += 1
+            time.sleep(self.seconds)
+
+
+class NanLossWeights:
+    """Sampler proxy poisoning ``loss_weights`` with NaN for the draws
+    serving steps ``[at_step, at_step + count)``.
+
+    One-shot by design: the poison budget (``count`` draws) is spent
+    once and never refills, so after a trainer ROLLBACK the replayed
+    window comes through clean — the chaos test then proves the rolled-
+    back run actually recovers rather than re-poisoning forever.  The
+    draw counter tracks the wrapped pipeline's step alignment (batch k
+    trains step k) and rewinds on ``restore_at``.
+    """
+
+    def __init__(self, inner, at_step: int, count: int = 1):
+        self._inner = inner
+        self._at = at_step
+        self._count = count
+        self._draws = getattr(inner, "_step", 0)
+        self.fired = 0                 # poisoned batches so far
+
+    def __getattr__(self, name):
+        # full sampler surface (set_params, sampler_stats, note_loss,
+        # check_health, finalize, ...) delegates to the wrapped pipeline
+        return getattr(self._inner, name)
+
+    def _poison(self, batch):
+        batch = dict(batch)
+        batch["loss_weights"] = batch["loss_weights"] * jnp.float32(
+            np.nan)
+        self.fired += 1
+        return batch
+
+    def next_batch(self, *args, **kwargs):
+        b = self._inner.next_batch(*args, **kwargs)
+        s, self._draws = self._draws, self._draws + 1
+        if self.fired < self._count and s >= self._at:
+            return self._poison(b)
+        return b
+
+    def restore_at(self, step: int, **kwargs):
+        self._inner.restore_at(step, **kwargs)
+        self._draws = step             # batch k <-> step k realignment
+
+
+# -- checkpoint corrupters ---------------------------------------------------
+# Damage MUST defeat naive restore but be caught by verify(): each
+# corrupter mimics a distinct real-world incident class.
+
+
+def _ckpt_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
+def truncate_arrays(ckpt_dir: str, step: int, keep_bytes: int = 512):
+    """Truncate ``arrays.npz`` to ``keep_bytes`` — a writer killed mid-
+    flush / disk-full incident.  Kills the zip central directory, so
+    even opening the file fails verify."""
+    p = os.path.join(_ckpt_path(ckpt_dir, step), "arrays.npz")
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.truncate(min(keep_bytes, size))
+
+
+def delete_leaf(ckpt_dir: str, step: int, index: int = 0):
+    """Rewrite ``arrays.npz`` without its ``index``-th member — a lost
+    object / partial replication incident.  The zip stays VALID, so
+    only the manifest cross-check catches it."""
+    p = os.path.join(_ckpt_path(ckpt_dir, step), "arrays.npz")
+    with zipfile.ZipFile(p) as z:
+        names = z.namelist()
+        victim = names[index % len(names)]
+        survivors = {n: z.read(n) for n in names if n != victim}
+    with zipfile.ZipFile(p, "w", zipfile.ZIP_STORED) as z:
+        for n, blob in survivors.items():
+            z.writestr(n, blob)
+    return victim
+
+
+def flip_manifest_byte(ckpt_dir: str, step: int, offset: int = -2):
+    """Flip one byte of ``manifest.json`` — bit rot.  Lands inside the
+    JSON body (default: near the end, inside the checksum hex), so the
+    manifest either stops parsing or fails its self-checksum."""
+    p = os.path.join(_ckpt_path(ckpt_dir, step), "manifest.json")
+    with open(p, "r+b") as f:
+        data = bytearray(f.read())
+        data[offset % len(data)] ^= 0xFF
+        f.seek(0)
+        f.write(data)
+        f.truncate(len(data))

@@ -12,19 +12,49 @@ Design for 1000+ nodes (documented; exercised single-host here):
   * on a real fleet each host writes only its addressable shards; here a
     single host owns everything, but the format (per-leaf files keyed by
     path) is the multi-writer-safe layout.
+
+INTEGRITY (the self-healing contract): every leaf records a CRC32 of
+its raw bytes in the manifest, and the manifest itself carries a
+self-checksum (SHA-256 over its canonical JSON minus the checksum
+field).  ``verify()`` re-derives both and structurally cross-checks the
+npz against the manifest, so a truncated ``arrays.npz``, a deleted
+leaf, or a flipped byte in ``manifest.json`` all turn the checkpoint
+INVALID instead of silently corrupting a resume.  ``latest_valid_step``
+walks steps newest-first and returns the first checkpoint that passes
+``verify()`` — the restore path's fallback to the newest GOOD state.
+``latest_step`` (existence check only) is retained for callers that
+want the cheap answer.
+
+Failure hygiene:
+  * ``AsyncCheckpointer`` captures its worker thread's exception in a
+    box and re-raises it at the next ``save()``/``wait()`` — a failed
+    background write can make AT MOST one further training step before
+    it surfaces, mirroring the refresh-thread error box in
+    ``repro.data.lsh_pipeline``.
+  * a writer killed mid-``save`` leaves ``step_*.tmp`` behind;
+    ``keep_last`` garbage-collects any ``.tmp`` not newer than the
+    newest COMPLETED checkpoint (an in-flight async write is always for
+    a strictly newer step), and ``save`` logs when it clobbers one.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
+import logging
 import os
 import re
 import shutil
 import threading
-from typing import Any, Optional
+import zlib
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
+
+log = logging.getLogger("repro.checkpoint")
+
+MANIFEST_VERSION = 2
 
 
 def _path_str(kp) -> str:
@@ -35,26 +65,42 @@ def _sanitize(p: str) -> str:
     return re.sub(r"[^\w./-]", "_", p).replace("/", "__")
 
 
+def _manifest_digest(manifest: dict) -> str:
+    """SHA-256 over the canonical JSON of everything but the checksum
+    field itself — a flipped byte anywhere in the manifest (paths, crcs,
+    shapes, extra) changes this digest."""
+    body = {k: v for k, v in manifest.items() if k != "checksum"}
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
     """Synchronous atomic checkpoint of an arbitrary pytree."""
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
+        # a previous writer died mid-save (or an overwrite): not an
+        # error, but worth a trace — keep_last GCs these when orphaned.
+        log.warning("checkpoint save: clobbering stale %s", tmp)
         shutil.rmtree(tmp)
     os.makedirs(tmp, exist_ok=True)
 
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    manifest = {"version": MANIFEST_VERSION, "step": step, "leaves": [],
+                "extra": extra or {}}
     arrays = {}
     for kp, v in flat:
         path = _path_str(kp)
         key = _sanitize(path)
-        arrays[key] = np.asarray(jax.device_get(v))
+        arr = np.asarray(jax.device_get(v))
+        arrays[key] = arr
         manifest["leaves"].append({
             "path": path, "key": key,
-            "shape": list(arrays[key].shape),
-            "dtype": str(arrays[key].dtype),
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
         })
+    manifest["checksum"] = _manifest_digest(manifest)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
@@ -64,11 +110,69 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
     return final
 
 
+def verify(ckpt_dir: str, step: int) -> Tuple[bool, str]:
+    """Integrity check of one checkpoint: (ok, reason).
+
+    Validates, in order: manifest parses as JSON; manifest self-checksum
+    matches (byte flips anywhere in the manifest); ``arrays.npz`` loads
+    (truncation corrupts the zip central directory); every manifest leaf
+    exists in the npz with the recorded shape/dtype; every leaf's CRC32
+    matches the recorded one (bit flips in array data).  Legacy
+    (version-1) manifests without checksums pass the structural checks
+    only.
+    """
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    mpath = os.path.join(d, "manifest.json")
+    apath = os.path.join(d, "arrays.npz")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        return False, f"manifest unreadable: {e}"
+    if not isinstance(manifest, dict) or "leaves" not in manifest:
+        return False, "manifest malformed: no leaves"
+    if "checksum" in manifest and \
+            manifest["checksum"] != _manifest_digest(manifest):
+        return False, "manifest self-checksum mismatch"
+    try:
+        data = np.load(apath)
+        keys = set(data.files)
+    except Exception as e:   # truncated zip raises various error types
+        return False, f"arrays.npz unreadable: {e}"
+    try:
+        for leaf in manifest["leaves"]:
+            key = leaf["key"]
+            if key not in keys:
+                return False, f"leaf missing from arrays.npz: {leaf['path']}"
+            try:
+                arr = data[key]
+            except Exception as e:   # per-member truncation/corruption
+                return False, f"leaf unreadable: {leaf['path']}: {e}"
+            if list(arr.shape) != list(leaf["shape"]):
+                return False, (f"leaf shape mismatch: {leaf['path']} "
+                               f"{list(arr.shape)} != {leaf['shape']}")
+            if str(arr.dtype) != leaf["dtype"]:
+                return False, (f"leaf dtype mismatch: {leaf['path']} "
+                               f"{arr.dtype} != {leaf['dtype']}")
+            if "crc32" in leaf and zlib.crc32(
+                    np.ascontiguousarray(arr).tobytes()) != leaf["crc32"]:
+                return False, f"leaf crc mismatch: {leaf['path']}"
+    finally:
+        data.close()
+    return True, "ok"
+
+
 class AsyncCheckpointer:
-    """Overlap checkpoint serialisation with training compute."""
+    """Overlap checkpoint serialisation with training compute.
+
+    A write-thread failure is captured in an error box and re-raised at
+    the NEXT ``save()`` or ``wait()`` — it cannot be silently swallowed,
+    and it surfaces at most one checkpoint interval after it happened.
+    """
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     def save(self, ckpt_dir: str, step: int, tree: Any,
              extra: Optional[dict] = None):
@@ -76,7 +180,10 @@ class AsyncCheckpointer:
         host_tree = jax.device_get(tree)   # snapshot before training mutates
 
         def _write():
-            save(ckpt_dir, step, host_tree, extra)
+            try:
+                save(ckpt_dir, step, host_tree, extra)
+            except BaseException as e:     # boxed; re-raised at next call
+                self._error = e
 
         self._thread = threading.Thread(target=_write, daemon=True)
         self._thread.start()
@@ -85,18 +192,45 @@ class AsyncCheckpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint write failed") from err
+
+
+def _completed_steps(ckpt_dir: str) -> list:
+    return sorted(
+        int(m.group(1))
+        for name in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)", name))
+        and os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")))
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest checkpoint step by EXISTENCE only (no integrity check)."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = []
-    for name in os.listdir(ckpt_dir):
-        m = re.fullmatch(r"step_(\d+)", name)
-        if m and os.path.exists(
-                os.path.join(ckpt_dir, name, "manifest.json")):
-            steps.append(int(m.group(1)))
+    steps = _completed_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def latest_valid_step(ckpt_dir: str) -> Optional[int]:
+    """Newest checkpoint that passes ``verify()``.
+
+    Walks steps newest-first, skipping corrupt/truncated checkpoints
+    (each skip is logged with the verify reason) — the restore path's
+    guarantee that a bad newest checkpoint degrades resume by one
+    interval instead of bricking it.
+    """
+    if not os.path.isdir(ckpt_dir):
+        return None
+    for s in sorted(_completed_steps(ckpt_dir), reverse=True):
+        ok, reason = verify(ckpt_dir, s)
+        if ok:
+            return s
+        log.warning("checkpoint step %d failed verify (%s); skipping",
+                    s, reason)
+    return None
 
 
 def restore(ckpt_dir: str, step: int, template: Any,
@@ -136,14 +270,48 @@ def restore(ckpt_dir: str, step: int, template: Any,
         treedef, leaves), manifest.get("extra", {})
 
 
-def keep_last(ckpt_dir: str, n: int = 3):
-    """Garbage-collect old checkpoints, keep the newest n."""
+def discard_after(ckpt_dir: str, step: int):
+    """Delete every checkpoint (and ``.tmp``) for steps > ``step``.
+
+    Called by the restore path: once a run resumes at ``step``, newer
+    checkpoints on disk belong to an ABANDONED timeline (a corrupt
+    newest that verify() skipped, or the poisoned future a rollback
+    rewound past).  Leaving them would shadow the resumed run's own
+    writes and break ``keep_last``'s invariant that an in-flight async
+    ``.tmp`` is always strictly newer than every completed step.
+    """
     if not os.path.isdir(ckpt_dir):
         return
-    steps = sorted(
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)(\.tmp)?", name)
+        if m and int(m.group(1)) > step:
+            log.warning("discarding abandoned-timeline checkpoint %s "
+                        "(resumed at step %d)", name, step)
+            shutil.rmtree(os.path.join(ckpt_dir, name),
+                          ignore_errors=True)
+
+
+def keep_last(ckpt_dir: str, n: int = 3):
+    """Garbage-collect old checkpoints, keep the newest n.
+
+    Also reaps orphaned ``step_*.tmp`` dirs left by writers killed
+    mid-``save``: any ``.tmp`` not strictly newer than the newest
+    COMPLETED checkpoint is an orphan (an in-flight async write is
+    always for a newer step than every completed one).
+    """
+    if not os.path.isdir(ckpt_dir):
+        return
+    all_steps = sorted(
         int(m.group(1))
         for name in os.listdir(ckpt_dir)
         if (m := re.fullmatch(r"step_(\d+)", name)))
-    for s in steps[:-n]:
+    for s in all_steps[:-n]:
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
                       ignore_errors=True)
+    completed = _completed_steps(ckpt_dir)
+    newest = completed[-1] if completed else -1
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.tmp", name)
+        if m and int(m.group(1)) <= newest:
+            log.warning("checkpoint GC: removing orphaned %s", name)
+            shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)

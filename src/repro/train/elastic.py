@@ -36,6 +36,28 @@ def restore_on_mesh(
     return ckpt.restore(ckpt_dir, step, template, shardings)
 
 
+def restore_latest_valid_on_mesh(
+    ckpt_dir: str,
+    template: Any,
+    mesh,
+) -> tuple:
+    """Elastic restart entry point: restore the newest checkpoint that
+    passes ``verify()`` onto ``mesh``.
+
+    The node-failure scenario this serves is exactly the one where the
+    newest checkpoint is most likely truncated (the writer died mid-
+    save), so the elastic path defaults to integrity-checked selection.
+    Returns ``(step, state, extra)``; raises FileNotFoundError when no
+    valid checkpoint exists.
+    """
+    step = ckpt.latest_valid_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(
+            f"no valid checkpoint under {ckpt_dir!r}")
+    state, extra = restore_on_mesh(ckpt_dir, step, template, mesh)
+    return step, state, extra
+
+
 def rebuild_sharded_pipeline(
     key: jax.Array,
     tokens,

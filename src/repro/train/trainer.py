@@ -9,6 +9,13 @@ Fault-tolerance contract:
   * on a real fleet, a failed host triggers a restart from the latest
     checkpoint on the surviving mesh (see train/elastic.py for the
     reshard-on-restore path, exercised in tests by mesh-shape changes).
+  * resume picks the newest checkpoint that passes ``verify()``
+    (``latest_valid_step``), so a corrupt/truncated newest checkpoint
+    costs one interval, not the run.
+  * non-finite loss/grad-norm steps apply NO update (``skip_nonfinite``;
+    counted in ``skipped_steps``); ``rollback_after`` consecutive bad
+    steps trigger a rollback to the newest verified checkpoint (sampler
+    mode).  See docs/ARCHITECTURE.md "Failure model".
 
 Straggler mitigation (documented policy, host-side): per-step wall-time
 is tracked with an EWMA; steps exceeding ``straggler_factor`` x EWMA are
@@ -92,6 +99,20 @@ class TrainerConfig:
     # path (see optim/compression.py); quantisation happens inside the
     # step so the wire-crossing tree is 4x smaller than bf16.
     grad_compress: bool = False
+    # -- self-healing guards (docs/ARCHITECTURE.md: failure model) --
+    # a step whose loss or grad-norm is non-finite applies NO update
+    # (params/opt_state/ef_residual selected unchanged inside the jitted
+    # step); the batch is still consumed and ``step`` still advances, so
+    # the data stream stays aligned with the step counter and restore
+    # determinism holds.  Counted in ``skipped_steps``.
+    skip_nonfinite: bool = True
+    # after this many CONSECUTIVE skipped steps, roll back to the newest
+    # checkpoint that passes verify() (sampler mode only — a plain batch
+    # iterator cannot be rewound).  0 disables rollback.
+    rollback_after: int = 5
+    # lifetime cap on rollbacks (a persistent NaN source must not pin
+    # the run in a restore loop forever).
+    max_rollbacks: int = 3
 
 
 class Trainer:
@@ -153,6 +174,9 @@ class Trainer:
         self._ckpt = ckpt.AsyncCheckpointer()
         self._ewma_dt = None
         self.straggler_steps = 0
+        self.skipped_steps = 0      # non-finite steps (no update applied)
+        self.rollbacks = 0          # checkpoint rollbacks taken
+        self._bad_streak = 0        # consecutive skipped steps
         self.data_seconds = 0.0     # host-blocking batch-draw time (total)
         self.loop_seconds = 0.0     # total run() wall time
         self._last_draw_dt = 0.0    # host-blocking time of the last draw
@@ -189,33 +213,56 @@ class Trainer:
             scale = 1.0 / accum
             return l * scale, jax.tree.map(lambda x: x * scale, g)
 
+        guard = tcfg.skip_nonfinite
+
         def train_step(params, opt_state, batch, ef_residual=None):
             l, grads = grads_of(params, batch)
+            old_ef = ef_residual
             if compress_on:
                 from repro.optim import compression as _gc
                 # this quantised tree is what crosses the DP links
                 qtree, ef_residual = _gc.compress_with_feedback(
                     grads, ef_residual)
                 grads = _gc.decompress(qtree, like=grads)
-            if clip is not None:
+            if clip is not None or guard:
+                # a single NaN/Inf anywhere in the gradient tree
+                # propagates into this norm, so isfinite(gnorm) is a
+                # whole-tree finiteness check.
                 gnorm = jnp.sqrt(sum(
                     jnp.sum(jnp.square(g.astype(jnp.float32)))
                     for g in jax.tree.leaves(grads)))
+            else:
+                gnorm = jnp.zeros(())
+            if clip is not None:
                 scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
                 grads = jax.tree.map(
                     lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
                     grads)
+            updates, new_opt = optimizer.update(grads, opt_state, params)
+            new_params = apply_updates(params, updates)
+            if guard:
+                # branchless skip: a non-finite loss or grad-norm keeps
+                # params/opt_state/error-feedback EXACTLY as they were
+                # (the where selects the old buffers) — the poisoned
+                # gradients never reach the optimiser's moments.
+                ok = jnp.isfinite(l) & jnp.isfinite(gnorm)
+                sel = lambda n, o: jnp.where(ok, n, o)  # noqa: E731
+                new_params = jax.tree.map(sel, new_params, params)
+                new_opt = jax.tree.map(sel, new_opt, opt_state)
+                if compress_on:
+                    ef_residual = jax.tree.map(sel, ef_residual, old_ef)
             else:
-                gnorm = jnp.zeros(())
-            updates, opt_state = optimizer.update(grads, opt_state, params)
-            params = apply_updates(params, updates)
-            return params, opt_state, l, gnorm, ef_residual
+                ok = jnp.array(True)
+            return new_params, new_opt, l, gnorm, ef_residual, ok
 
         self._step_fn = jax.jit(
             train_step, donate_argnums=(0, 1) if tcfg.donate else ())
 
         if resume and tcfg.ckpt_dir:
-            last = ckpt.latest_step(tcfg.ckpt_dir)
+            # resume from the newest checkpoint that passes verify() —
+            # a corrupt/truncated newest checkpoint costs one interval,
+            # not the run.
+            last = ckpt.latest_valid_step(tcfg.ckpt_dir)
             if last is not None:
                 self.restore(last)
 
@@ -238,6 +285,10 @@ class Trainer:
         self.params = tree["params"]
         self.opt_state = tree["opt_state"]
         self.step = extra.get("step", step)
+        # checkpoints newer than the restore point are an abandoned
+        # timeline (corrupt newest, or a rolled-back poisoned future) —
+        # drop them so the resumed run's own writes are authoritative.
+        ckpt.discard_after(self.tcfg.ckpt_dir, self.step)
         if self._sampler is not None and hasattr(self._sampler,
                                                  "restore_at"):
             # rebuild the sampler's index from the restored params and
@@ -248,8 +299,40 @@ class Trainer:
             self._sampler.restore_at(self.step)
         else:
             # deterministic data resume: skip already-consumed batches
-            for _ in range(self.step):
-                next(self.batches)
+            for i in range(self.step):
+                try:
+                    next(self.batches)
+                except StopIteration:
+                    raise RuntimeError(
+                        f"batch iterator exhausted after {i} batches "
+                        f"while skipping to checkpoint step {self.step} "
+                        f"— the iterator is shorter than the checkpoint "
+                        f"(it must be re-creatable past the restore "
+                        f"point)") from None
+
+    def _rollback(self) -> bool:
+        """Roll back to the newest VERIFIED checkpoint after a streak of
+        non-finite steps (sampler mode only — ``restore_at`` rewinds the
+        data stream; a plain iterator cannot).  Returns True on success.
+        """
+        try:
+            self._ckpt.wait()           # surface a boxed async failure
+        except RuntimeError:
+            pass                        # the write failed; disk may still
+            #                             hold an older valid checkpoint
+        step_v = ckpt.latest_valid_step(self.tcfg.ckpt_dir)
+        if step_v is None:
+            return False
+        prev = self.step
+        self.restore(step_v)
+        self.rollbacks += 1
+        self._bad_streak = 0
+        self.metrics_history.append({
+            "step": self.step, "event": "rollback",
+            "from_step": prev, "to_step": step_v,
+            "skipped_steps": self.skipped_steps,
+        })
+        return True
 
     def finalize(self):
         self._ckpt.wait()
@@ -279,15 +362,42 @@ class Trainer:
             return {"losses": losses}
         target = self.step + n_steps
         t_loop = time.time()
-        next_batch = self._draw()                # double buffering
+        try:
+            next_batch = self._draw()            # double buffering
+        except StopIteration:
+            # an empty/exhausted iterator on the FIRST draw is a clean
+            # no-op run, not a crash (satellite: bare StopIteration).
+            self.loop_seconds += time.time() - t_loop
+            return {"losses": losses}
         while self.step < target:
             t0 = time.time()
             batch = next_batch
-            self.params, self.opt_state, l, gnorm, ef = self._step_fn(
+            self.params, self.opt_state, l, gnorm, ef, ok = self._step_fn(
                 self.params, self.opt_state, batch,
                 getattr(self, "_ef_residual", None))
             if ef is not None:
                 self._ef_residual = ef
+            ok = bool(ok) if self.tcfg.skip_nonfinite else True
+            if ok:
+                self._bad_streak = 0
+            else:
+                self.skipped_steps += 1
+                self._bad_streak += 1
+            if self._sampler is not None and \
+                    hasattr(self._sampler, "note_loss"):
+                # feed the degradation ladder: a non-finite streak sends
+                # the pipeline to uniform-fallback (weights un-poisoned
+                # by construction).
+                self._sampler.note_loss(ok)
+            if not ok and self.tcfg.rollback_after > 0 and \
+                    self._bad_streak >= self.tcfg.rollback_after and \
+                    self._sampler is not None and self.tcfg.ckpt_dir and \
+                    self.rollbacks < self.tcfg.max_rollbacks:
+                if self._rollback():
+                    # the prefetched batch belongs to the abandoned
+                    # stream position; re-draw at the rolled-back step.
+                    next_batch = self._draw()
+                    continue
             if self._sampler is not None and \
                     hasattr(self._sampler, "set_params"):
                 # point the sampler at the post-step params (async jax
@@ -326,6 +436,8 @@ class Trainer:
                     "grad_norm": float(gnorm), "dt": dt,
                     "data_dt": self._last_draw_dt,
                     "stragglers": self.straggler_steps,
+                    "skipped_steps": self.skipped_steps,
+                    "rollbacks": self.rollbacks,
                 }
                 if self._sampler is not None and \
                         hasattr(self._sampler, "sampler_stats"):
@@ -333,6 +445,13 @@ class Trainer:
                     st = self._sampler.sampler_stats()
                     entry["fallback_rate"] = st["fallback_rate"]
                     entry["primary_miss_rate"] = st["primary_miss_rate"]
+                if self._sampler is not None and \
+                        hasattr(self._sampler, "check_health"):
+                    # feeds the batch fallback rate into the ladder and
+                    # reports the state (syncs; log cadence only)
+                    entry["health"] = self._sampler.check_health()
+                    hs = self._sampler.health_summary()
+                    entry["health_transitions"] = hs["transitions"]
                 self.metrics_history.append(entry)
             if self.tcfg.ckpt_dir and \
                     self.step % self.tcfg.ckpt_every == 0:

@@ -1,0 +1,163 @@
+"""Chaos drill CLI: inject one fault into a short CPU LGD run and
+report the self-healing story.
+
+Each drill trains a tiny LM with the full Trainer + ShardedLSHPipeline
+stack while one deterministic fault from ``repro.testing.faults``
+fires, then checks the survival contract: the run completes, the loss
+falls, and the health/skip bookkeeping recorded what happened.  Exit 0
+means the stack healed; exit 1 prints which guarantee broke.
+
+Usage:
+    PYTHONPATH=src python tools/chaos.py --fault refresh-raise
+    PYTHONPATH=src python tools/chaos.py --fault all --steps 60
+
+Faults: refresh-raise | refresh-hang | ckpt-truncate | nan-grad |
+        none | all
+"""
+
+from __future__ import annotations
+
+import argparse
+import logging
+import sys
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.data import (
+    HealthConfig,
+    LSHPipelineConfig,
+    ShardedLSHPipeline,
+    make_token_corpus,
+    mean_pool_feature_fn,
+    lm_head_query_fn,
+)
+from repro.models import ModelConfig, init_params
+from repro.optim import Adam
+from repro.testing import NanLossWeights, RefreshHang, RefreshRaise, \
+    truncate_arrays
+from repro.train import Trainer, TrainerConfig, checkpoint as ckpt
+
+FAULTS = ("refresh-raise", "refresh-hang", "ckpt-truncate", "nan-grad",
+          "none")
+
+
+def _cfg():
+    return ModelConfig(
+        name="chaos-drill", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=64, chunk=16, loss_chunk=16,
+        dtype="float32", rope_theta=10000.0, lgd_enabled=True)
+
+
+def _stack(cfg, corpus, params, ckpt_dir=None, **pipe_kw):
+    pipe_kw.setdefault("health", HealthConfig(fallback_spike=1.1))
+    sampler = ShardedLSHPipeline(
+        jax.random.PRNGKey(12), corpus.tokens, mean_pool_feature_fn(cfg),
+        lm_head_query_fn(),
+        LSHPipelineConfig(k=5, l=10, minibatch=16, refresh_every=10,
+                          refresh_async=True, refresh_backoff=0.0,
+                          **pipe_kw),
+        n_shards=2, params=params)
+    tcfg = TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=10, log_every=10,
+                         rollback_after=3)
+    return sampler, tcfg
+
+
+def drill(fault: str, steps: int) -> dict:
+    cfg = _cfg()
+    corpus = make_token_corpus(11, 256, 16, cfg.vocab, hard_frac=0.15)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+
+    with tempfile.TemporaryDirectory() as d:
+        if fault == "ckpt-truncate":
+            sampler, tcfg = _stack(cfg, corpus, params, ckpt_dir=d)
+            t1 = Trainer(cfg, params, Adam(lr=1e-2), tcfg=tcfg,
+                         resume=False, sampler=sampler)
+            out1 = t1.run(steps // 2)
+            t1.finalize()
+            truncate_arrays(d, t1.step)          # corrupt the newest
+            sampler2, tcfg2 = _stack(cfg, corpus,
+                                     init_params(jax.random.PRNGKey(0),
+                                                 cfg), ckpt_dir=d)
+            tr = Trainer(cfg, init_params(jax.random.PRNGKey(0), cfg),
+                         Adam(lr=1e-2), tcfg=tcfg2, resume=True,
+                         sampler=sampler2)
+            resumed_at = tr.step
+            out = tr.run(steps - tr.step)
+            tr.finalize()
+            losses = out1["losses"][:resumed_at] + out["losses"]
+            sampler = sampler2
+        else:
+            injector = None
+            pipe_kw = {}
+            if fault == "refresh-raise":
+                injector = RefreshRaise(cycles=3)
+                pipe_kw = {"refresh_retries": 1}
+            elif fault == "refresh-hang":
+                injector = RefreshHang(seconds=5.0, cycles=1)
+                pipe_kw = {"refresh_retries": 0, "refresh_timeout": 0.25}
+            sampler, tcfg = _stack(cfg, corpus, params, ckpt_dir=d,
+                                   **pipe_kw)
+            if injector is not None:
+                sampler.set_fault_injector(injector, shard=0)
+            if fault == "nan-grad":
+                sampler = NanLossWeights(sampler, at_step=steps // 3,
+                                         count=2)
+            tr = Trainer(cfg, params, Adam(lr=1e-2), tcfg=tcfg,
+                         resume=False, sampler=sampler)
+            out = tr.run(steps)
+            tr.finalize()
+            losses = out["losses"]
+
+        finite = [l for l in losses if np.isfinite(l)]
+        report = {
+            "fault": fault,
+            "steps": len(losses),
+            "loss_head": float(np.mean(finite[:5])),
+            "loss_tail": float(np.mean(finite[-5:])),
+            "skipped_steps": tr.skipped_steps,
+            "rollbacks": tr.rollbacks,
+            "health": sampler.health_state(),
+            "transitions": sampler.health_summary()["transitions"],
+            "valid_ckpt": ckpt.latest_valid_step(d),
+        }
+        report["survived"] = (
+            len(losses) == steps
+            and np.isfinite(report["loss_tail"])
+            and report["loss_tail"] < report["loss_head"])
+        return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fault", default="all",
+                    choices=FAULTS + ("all",))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="show the health log as faults fire")
+    args = ap.parse_args(argv)
+    if not args.verbose:
+        logging.disable(logging.WARNING)
+
+    faults = list(FAULTS) if args.fault == "all" else [args.fault]
+    failed = []
+    for f in faults:
+        r = drill(f, args.steps)
+        verdict = "SURVIVED" if r["survived"] else "DIED"
+        print(f"[{verdict}] {f:14s} loss {r['loss_head']:.3f} -> "
+              f"{r['loss_tail']:.3f}  skipped={r['skipped_steps']} "
+              f"rollbacks={r['rollbacks']} health={r['health']}")
+        for t in r["transitions"]:
+            print(f"    transition: {t}")
+        if not r["survived"]:
+            failed.append(f)
+    if failed:
+        print(f"FAILED drills: {', '.join(failed)}")
+        return 1
+    print(f"all {len(faults)} drill(s) survived")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
