@@ -32,6 +32,15 @@ Refresh (``refresh_cost.json``):
                     >= ``--refresh-min-speedup`` (default 2.0 — the
                     device-resident LGD acceptance bar).
 
+Streaming (``streaming.json``):
+  append_vs_rebuild total us(append 10% of rows, chunked, with live
+                    draws between chunks) / us(one full refresh of the
+                    final corpus), same run — appending a tenth of the
+                    corpus through the index-mutation API must cost at
+                    most ``--streaming-cap`` (default 0.5: half a
+                    rebuild) or streaming's amortisation claim is
+                    broken.
+
 Train step (``train_step.json``):
   step_overhead     us(lgd step) / us(uniform step), same run — the
                     end-to-end cost of adaptive sampling on the
@@ -105,6 +114,7 @@ DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
 DEFAULT_OPTIM = os.path.join(HERE, "results", "optimizers.json")
 DEFAULT_ROBUSTNESS = os.path.join(HERE, "results", "robustness.json")
 DEFAULT_FAMILIES = os.path.join(HERE, "results", "families.json")
+DEFAULT_STREAMING = os.path.join(HERE, "results", "streaming.json")
 
 
 def ratios(d: dict) -> dict:
@@ -200,6 +210,26 @@ def compare_refresh(baseline: dict, fresh: dict, min_speedup: float) -> list:
         failures.append(
             f"delta refresh lost its amortisation: {got:.2f}x < "
             f"{min_speedup:.2f}x over full refresh at 10% dirty")
+    return failures
+
+
+def compare_streaming(baseline: dict, fresh: dict, cap: float) -> list:
+    failures = _comparable(baseline, fresh, ("quick", "n0", "l"),
+                           "streaming")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+    got = fresh["append_vs_rebuild"]
+    base = baseline["append_vs_rebuild"]
+    ok = got <= cap
+    print(f"streaming append_vs_rebuild@10%: baseline {base:.3f}  "
+          f"fresh {got:.3f}  cap {cap:.3f}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"streaming append lost its amortisation: appending 10% of "
+            f"rows cost {got:.3f}x a full rebuild > cap {cap:.3f}")
     return failures
 
 
@@ -355,7 +385,7 @@ def compare_families(baseline: dict, fresh: dict, step_cap: float,
 
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
              optim_base: dict, families_base: dict,
-             robustness_base: dict, args) -> int:
+             robustness_base: dict, streaming_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -438,6 +468,12 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_robustness(robustness_base, rob_stuck,
                                            args.robustness_degraded_cap)))
 
+    stream_slow = json.loads(json.dumps(streaming_base))
+    stream_slow["append_vs_rebuild"] = args.streaming_cap * 1.5
+    print("-- selftest 13: injected streaming-append amortisation loss --")
+    results.append(bool(compare_streaming(streaming_base, stream_slow,
+                                          args.streaming_cap)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -472,6 +508,10 @@ def main() -> int:
                     help="committed robustness baseline JSON")
     ap.add_argument("--fresh-robustness", default=DEFAULT_ROBUSTNESS,
                     help="freshly measured robustness JSON")
+    ap.add_argument("--baseline-streaming", default=DEFAULT_STREAMING,
+                    help="committed streaming baseline JSON")
+    ap.add_argument("--fresh-streaming", default=DEFAULT_STREAMING,
+                    help="freshly measured streaming JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
@@ -497,6 +537,9 @@ def main() -> int:
     ap.add_argument("--families-var-cap", type=float, default=1.0,
                     help="MIPS estimator variance ratio vs uniform must "
                          "stay below this on the un-normalised corpus")
+    ap.add_argument("--streaming-cap", type=float, default=0.5,
+                    help="absolute cap on (total 10% append) / (full "
+                         "rebuild) wall-time ratio")
     ap.add_argument("--robustness-degraded-cap", type=float, default=1.1,
                     help="absolute cap on degraded-mode (stale-index / "
                          "uniform-fallback) over healthy step-time ratio")
@@ -516,9 +559,12 @@ def main() -> int:
         families_base = json.load(f)
     with open(args.baseline_robustness) as f:
         robustness_base = json.load(f)
+    with open(args.baseline_streaming) as f:
+        streaming_base = json.load(f)
     if args.selftest:
         return selftest(baseline, refresh_base, train_base, optim_base,
-                        families_base, robustness_base, args)
+                        families_base, robustness_base, streaming_base,
+                        args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -532,6 +578,8 @@ def main() -> int:
         families_fresh = json.load(f)
     with open(args.fresh_robustness) as f:
         robustness_fresh = json.load(f)
+    with open(args.fresh_streaming) as f:
+        streaming_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
@@ -546,6 +594,8 @@ def main() -> int:
                                  args.families_var_cap)
     failures += compare_robustness(robustness_base, robustness_fresh,
                                    args.robustness_degraded_cap)
+    failures += compare_streaming(streaming_base, streaming_fresh,
+                                  args.streaming_cap)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

@@ -50,7 +50,8 @@ import numpy as np
 from repro.core import (
     LGDProblem,
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     init as lgd_init,
     lgd_step,
     full_loss,
@@ -74,6 +75,11 @@ from repro.train import Trainer, TrainerConfig
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 DATASETS = {
     "yearmsd-like": dict(d=90, noise="pareto"),
@@ -103,7 +109,7 @@ def fig9_sample_quality():
         xt, yt, x_aug = preprocess_regression(ds.x_train, ds.y_train)
         theta, *_ = jnp.linalg.lstsq(xt, yt)   # 'freeze after 1/4 epoch'
         p = LSHParams(k=5, l=100, dim=xt.shape[1] + 1, family="quadratic")
-        index = build_index(jax.random.PRNGKey(1), x_aug, p)
+        index = _build_index(jax.random.PRNGKey(1), x_aug, p)
         q = regression_query(theta)
         t0 = time.perf_counter()
         res = S.sample(jax.random.PRNGKey(2), index, x_aug, q, p, m=1024)
@@ -218,7 +224,7 @@ def tab_sampling_cost(quick: bool = False):
     d = xt.shape[1]
     n = x_aug.shape[0]
     p = LSHParams(k=5, l=100, dim=d + 1, family="sparse")
-    index = build_index(jax.random.PRNGKey(5), x_aug, p)
+    index = _build_index(jax.random.PRNGKey(5), x_aug, p)
     theta = 0.05 * jax.random.normal(jax.random.PRNGKey(6), (d,))
     q = regression_query(theta)
     B = 64
@@ -417,6 +423,105 @@ def tab_refresh_cost(quick: bool = False):
     return out
 
 
+def tab_streaming(quick: bool = False):
+    """Streaming append under live traffic vs a full index rebuild.
+
+    The index-mutation API promises that growing the corpus does NOT
+    cost a rebuild: appending a chunk embeds/hashes only the new rows
+    and tie-stably merges them through the previous sort order, while
+    draws keep flowing between chunks.  This table appends 10% of the
+    corpus in chunks with a batch drawn after every chunk (the "live
+    traffic"), timing only the appends, and compares the TOTAL against
+    one full refresh of the final corpus (re-embed + re-hash + re-sort
+    of every live row).  The regression gate caps the ratio at 0.5x:
+    streaming in a tenth of the corpus must cost at most half a
+    rebuild, or the amortisation story is broken.
+
+    Measured on the LM feature path (pooled last-layer reps, the
+    deep-model regime where re-embedding dominates), same geometry as
+    tab_refresh_cost so the two tables read together.
+    """
+    cfg = ModelConfig(
+        name="lm-streaming", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=256, chunk=16, loss_chunk=64,
+        dtype="float32", rope_theta=10000.0)
+    n0 = 1536 if quick else 3584           # capacity 2048 / 4096: the
+    chunk_rows = 32                        # 10% append fits with no
+    n_app = (n0 // 10) // chunk_rows * chunk_rows   # growth recompile
+    iters = 4 if quick else 8
+    corpus = make_token_corpus(41, n0 + n_app + chunk_rows, 24,
+                               cfg.vocab, hard_frac=0.12)
+    params = init_params(KEY, cfg)
+    pipe = LSHSampledPipeline(
+        jax.random.PRNGKey(43), corpus.tokens[:n0],
+        mean_pool_feature_fn(cfg), lm_head_query_fn(),
+        LSHPipelineConfig(k=5, l=10, minibatch=16, refresh_every=0,
+                          streaming=True),
+        params=params)
+
+    # warm up the append/evict/draw programs off the clock, then return
+    # the window to its starting membership.
+    warm = corpus.tokens[n0 + n_app:n0 + n_app + chunk_rows]
+    gids = pipe.append_rows(warm)
+    pipe.next_batch()
+    pipe.evict_rows(gids)
+    jax.block_until_ready(pipe.index.sorted_codes)
+
+    t_app = 0.0
+    for s in range(0, n_app, chunk_rows):
+        chunk = corpus.tokens[n0 + s:n0 + s + chunk_rows]
+        t0 = time.perf_counter()
+        pipe.append_rows(chunk)
+        jax.block_until_ready(pipe.index.sorted_codes)
+        t_app += time.perf_counter() - t0
+        pipe.next_batch()                  # live traffic, untimed
+    us_append = t_app * 1e6
+    assert pipe.n_live == n0 + n_app
+
+    pipe.refresh(full=True)                # warm up jit caches
+    dts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        pipe.refresh(full=True)
+        jax.block_until_ready((pipe.index.sorted_codes, pipe.features))
+        dts.append(time.perf_counter() - t0)
+    us_rebuild = float(np.median(dts)) * 1e6
+    ratio = us_append / max(us_rebuild, 1e-9)
+
+    # eviction is a device-side sentinel merge — reported for the
+    # record, ungated (no rebuild-equivalent to normalise against).
+    # Chunked like the appends so the warmed merge shape is reused.
+    evict_ids = np.arange(n_app, dtype=np.int64) + pipe.example_offset \
+        + n0
+    t_ev = 0.0
+    for s in range(0, n_app, chunk_rows):
+        t0 = time.perf_counter()
+        pipe.evict_rows(evict_ids[s:s + chunk_rows])
+        jax.block_until_ready(pipe.index.sorted_codes)
+        t_ev += time.perf_counter() - t0
+    us_evict = t_ev * 1e6
+
+    _row("tab_streaming_rebuild", us_rebuild, "baseline")
+    _row("tab_streaming_append[0.10]", us_append,
+         f"{ratio:.2f}x of full rebuild")
+    _row("tab_streaming_evict[0.10]", us_evict, "sentinel merge")
+    out = {
+        "backend": jax.default_backend(),
+        "quick": quick, "n0": n0, "n_appended": n_app, "k": 5, "l": 10,
+        "append_us_total": us_append,
+        "rebuild_us": us_rebuild,
+        "evict_us": us_evict,
+        "append_vs_rebuild": ratio,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    # streaming.json is the CI regression-gate baseline (quick mode);
+    # BENCH_streaming.json keeps the full-mode trajectory record.
+    fname = "streaming.json" if quick else "BENCH_streaming.json"
+    with open(os.path.join(RESULTS, fname), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def fig5_lm_epochwise(steps=240):
     """Deep-model LGD: LSH-sampled LM training vs uniform sampling."""
     cfg = ModelConfig(
@@ -432,18 +537,19 @@ def fig5_lm_epochwise(steps=240):
     def run(use_lgd):
         params = init_params(KEY, cfg)
         if use_lgd:
-            def feature_fn(tokens):
-                h = forward(params, cfg, {"tokens": tokens})
+            def feature_fn(p, tokens):
+                h = forward(p, cfg, {"tokens": tokens})
                 return jnp.mean(h.astype(jnp.float32), axis=1)
 
-            def query_fn():
-                w = params["embed_group"]["lm_head"].astype(jnp.float32)
+            def query_fn(p):
+                w = p["embed_group"]["lm_head"].astype(jnp.float32)
                 return jnp.mean(w, axis=1)
 
             pipe = LSHSampledPipeline(
                 jax.random.PRNGKey(8), corpus.tokens, jax.jit(feature_fn),
                 query_fn, LSHPipelineConfig(k=7, l=10, minibatch=16,
-                                            refresh_every=100))
+                                            refresh_every=100),
+                params=params)
             batches = iter(pipe.next_batch, None)
         else:
             batches = uniform_batches(corpus, 16, seed=9)
@@ -804,7 +910,7 @@ def tab_optimizers(quick: bool = False):
     y = x @ jax.random.normal(kt, (d_lin,)) + noise
     xt, yt, x_aug = preprocess_regression(x, y)
     p_lin = LSHParams(k=5, l=100, dim=d_lin + 1, family="quadratic")
-    index = build_index(jax.random.PRNGKey(10), x_aug, p_lin)
+    index = _build_index(jax.random.PRNGKey(10), x_aug, p_lin)
     prob = LGDProblem(kind="regression", lsh=p_lin, minibatch=m_var)
 
     var_out = {}
@@ -852,7 +958,7 @@ def tab_optimizers(quick: bool = False):
                                               (n_sk, d_sk))
     x_sk = x_sk / jnp.linalg.norm(x_sk, axis=-1, keepdims=True)
     p_sk = LSHParams(k=k_sk, l=l_sk, dim=d_sk, family="dense")
-    idx_sk = build_index(jax.random.PRNGKey(1), x_sk, p_sk)
+    idx_sk = _build_index(jax.random.PRNGKey(1), x_sk, p_sk)
     qs = c[None] + 0.9 * jax.random.normal(jax.random.PRNGKey(11),
                                            (64, d_sk))
     qs = qs / jnp.linalg.norm(qs, axis=-1, keepdims=True)
@@ -940,8 +1046,8 @@ def tab_families(quick: bool = False):
 
     p_srp = LSHParams(k=k_lsh, l=l_lsh, dim=d + 1, family="dense")
     p_mips = LSHParams(k=k_lsh, l=l_lsh, dim=d + 2, family="mips")
-    idx_srp = build_index(jax.random.PRNGKey(34), xa_srp, p_srp)
-    idx_mips = build_index(jax.random.PRNGKey(34), xa_mips, p_mips)
+    idx_srp = _build_index(jax.random.PRNGKey(34), xa_srp, p_srp)
+    idx_mips = _build_index(jax.random.PRNGKey(34), xa_mips, p_mips)
 
     theta = jnp.zeros(d)                     # early training (Lemma 1)
     q_srp = regression_query(theta)
@@ -970,7 +1076,7 @@ def tab_families(quick: bool = False):
     def var_over_builds(x_aug, qv, params, xt, yt):
         def per_build(bk):
             kb_, ks = jax.random.split(bk)
-            index = build_index(kb_, x_aug, params)
+            index = _build_index(kb_, x_aug, params)
             r = S.sample(ks, index, x_aug, qv, params, m=draws)
             w = 1.0 / (r.probs * n)
             g = jax.vmap(lambda i, wi: squared_loss_grad(
@@ -1034,7 +1140,7 @@ def thm2_variance():
     y = x @ jax.random.normal(kt, (d,)) + noise
     xt, yt, x_aug = preprocess_regression(x, y)
     p = LSHParams(k=5, l=100, dim=d + 1, family="quadratic")
-    index = build_index(jax.random.PRNGKey(10), x_aug, p)
+    index = _build_index(jax.random.PRNGKey(10), x_aug, p)
     theta = jnp.zeros(d)
     q = regression_query(theta)
     keys = jax.random.split(jax.random.PRNGKey(11), 1500)
@@ -1064,6 +1170,7 @@ TABLES = {
     "fig12_adagrad": lambda quick: fig12_adagrad(),
     "tab_sampling_cost": tab_sampling_cost,
     "tab_refresh_cost": tab_refresh_cost,
+    "tab_streaming": tab_streaming,
     "fig5_lm_epochwise": lambda quick: fig5_lm_epochwise(),
     "tab_train_step": tab_train_step,
     "tab_robustness": tab_robustness,
@@ -1085,8 +1192,8 @@ def main() -> None:
     os.makedirs(RESULTS, exist_ok=True)
     print("name,us_per_call,derived")
     quick_aware = {"tab_sampling_cost", "tab_refresh_cost",
-                   "tab_train_step", "tab_robustness", "tab_optimizers",
-                   "tab_families"}
+                   "tab_streaming", "tab_train_step", "tab_robustness",
+                   "tab_optimizers", "tab_families"}
     if args.quick:
         ignored = [n for n in names if n not in quick_aware]
         if ignored:

@@ -24,12 +24,18 @@ from .simhash import (  # noqa: F401
     regression_query,
 )
 from .tables import (  # noqa: F401
+    EMPTY_CODE,
+    IndexMutation,
     LSHIndex,
+    append_rows,
     bucket_bounds,
     bucket_bounds_batched,
     bucket_bounds_multi,
     build_index,
+    evict_rows,
+    grow_index,
     hash_points,
+    mutate_index,
     query_codes,
     refresh_index,
     refresh_index_delta,

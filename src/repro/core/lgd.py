@@ -39,7 +39,7 @@ from .simhash import (
     logistic_query,
     regression_query,
 )
-from .tables import LSHIndex, build_index
+from .tables import IndexMutation, LSHIndex, mutate_index
 
 
 # ---------------------------------------------------------------------------
@@ -224,9 +224,9 @@ def init(
     """
     xt, yt, x_aug = problem.preprocess(x, y)
     k_idx, k_theta = jax.random.split(key)
-    index = build_index(k_idx, x_aug, problem.lsh,
-                        use_pallas=problem.use_pallas,
-                        interpret=problem.interpret)
+    index = mutate_index(
+        None, IndexMutation("build", key=k_idx, x_aug=x_aug), problem.lsh,
+        use_pallas=problem.use_pallas, interpret=problem.interpret)
     theta = theta0 if theta0 is not None else jnp.zeros(xt.shape[1], jnp.float32)
     return (
         LGDState(theta, optimizer.init(theta), index, jnp.zeros((), jnp.int32)),

@@ -126,7 +126,7 @@ def _uniform_below(key: jax.Array, bound: jax.Array, shape=()) -> jax.Array:
 
 
 def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
-                max_probes: int, masks: tuple):
+                max_probes: int, masks: tuple, n_live=None):
     """Single repetition of Algorithm 1 given precomputed bucket bounds.
 
     ``lo``/``hi`` are (J, L) — bucket bounds of the J Hamming-ball probe
@@ -135,6 +135,14 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
     sequence in order; the first non-empty bucket in (table-draw, probe)
     lexicographic order wins, and the reported probability is corrected
     for the walk (module docstring derives the formula).
+
+    ``n_live`` (traced int32 scalar, streaming indexes only): the LIVE
+    row count of a capacity-managed index.  Empty slots carry the
+    sentinel code (``tables.EMPTY_CODE``, the sort maximum), so the
+    first ``n_live`` entries of EVERY table's sorted order are exactly
+    the live ids — the uniform fallback draws from that prefix with
+    p = 1/n_live, keeping the estimator exactly unbiased over the live
+    window.  ``None`` keeps the dense-index path bit-identical.
     """
     n_tables, n_points = order.shape
     j_codes = len(masks)
@@ -156,7 +164,14 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
     slot = lo[pj, t] + _uniform_below(k_slot, size)
     idx = order[t, slot]
 
-    fb_idx = jax.random.randint(k_fb, (), 0, n_points)
+    if n_live is None:
+        fb_idx = jax.random.randint(k_fb, (), 0, n_points)
+        p_fb = 1.0 / n_points
+    else:
+        # live rows occupy sorted slots [0, n_live) of every table —
+        # a uniform draw over that prefix is uniform over live rows.
+        fb_idx = order[0, _uniform_below(k_fb, n_live)]
+        p_fb = 1.0 / n_live.astype(jnp.float32)
     idx = jnp.where(found, idx, fb_idx).astype(jnp.int32)
 
     x = x_aug[idx]
@@ -174,7 +189,7 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
             cp, params.k, rs)                                  # (J,)
         miss = jnp.maximum(1.0 - jnp.sum(q_all), 0.0)
         p_lsh = q_all[pj] * miss ** (l - 1) / size.astype(jnp.float32)
-    p = jnp.where(found, p_lsh, 1.0 / n_points)
+    p = jnp.where(found, p_lsh, p_fb)
     return SampleResult(
         indices=idx,
         probs=p.astype(jnp.float32),
@@ -214,6 +229,7 @@ def sample(
     multiprobe: int = 0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
+    n_live: Optional[jax.Array] = None,
 ) -> SampleResult:
     """m independent LSH samples for one query (paper Algorithm 1 x m).
 
@@ -229,6 +245,10 @@ def sample(
         per table before moving to the next table draw (0 = the paper's
         single-probe Algorithm 1, bit-identical to previous behaviour).
       use_pallas / interpret: kernel dispatch, see ``tables``.
+      n_live: traced int32 live-row count of a capacity-managed
+        streaming index (``None`` = dense index, bit-identical to the
+        pre-streaming path).  Uniform fallbacks then draw from the live
+        prefix of the sorted order with p = 1/n_live.
 
     Returns:
       ``SampleResult`` with every field shaped (m,).  ``probs`` is the
@@ -247,7 +267,7 @@ def sample(
     keys = jax.random.split(key, m)
     res = jax.vmap(
         lambda k: _sample_one(k, lo, hi, index.order, x_aug, query, params,
-                              max_probes, masks)
+                              max_probes, masks, n_live)
     )(keys)
     return res
 
@@ -265,6 +285,7 @@ def sample_batched(
     multiprobe: int = 0,
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
+    n_live: Optional[jax.Array] = None,
 ) -> SampleResult:
     """Algorithm 1 for B queries at once; every field comes back (B, m).
 
@@ -272,7 +293,7 @@ def sample_batched(
     B*J*L bucket slices; sampling then vmaps ``_sample_one`` over
     (B, m).  Each (query b, repetition j) pair is an independent,
     exact-probability Algorithm-1 sample, so averaging over either axis
-    stays unbiased.  ``multiprobe`` as in ``sample``.
+    stays unbiased.  ``multiprobe`` / ``n_live`` as in ``sample``.
     """
     if queries.ndim != 2:
         raise ValueError(
@@ -288,7 +309,7 @@ def sample_batched(
     def per_query(ks, lo_q, hi_q, q):
         return jax.vmap(
             lambda kk: _sample_one(kk, lo_q, hi_q, index.order, x_aug, q,
-                                   params, max_probes, masks)
+                                   params, max_probes, masks, n_live)
         )(ks)
 
     return jax.vmap(per_query)(keys, lo, hi, queries)
@@ -296,13 +317,19 @@ def sample_batched(
 
 def _assemble(res: SampleResult, store: jax.Array, example_offset,
               p_floor: float, normalize: bool, use_pallas: Optional[bool],
-              interpret: bool, row_width: Optional[int]) -> GatherBatch:
+              interpret: bool, row_width: Optional[int],
+              n_live=None) -> GatherBatch:
     """Gather token rows + compute 1/(p·N) weights for one draw (m,)."""
     if use_pallas is None:
         use_pallas = default_use_pallas()
     rows, w = gather_weight(store, res.indices, res.probs,
                             p_floor=p_floor, use_pallas=use_pallas,
                             interpret=interpret)
+    if n_live is not None:
+        # the fused kernel divides by the STORE height (capacity C of a
+        # streaming store); rescale by C/n_live so every weight is
+        # exactly 1/(p·N_live) — unbiased over the live window.
+        w = w * (jnp.float32(store.shape[0]) / n_live.astype(jnp.float32))
     if normalize:
         w = w / jnp.maximum(jnp.mean(w), 1e-30)
     ids = (res.indices
@@ -341,6 +368,7 @@ def sample_gather(
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
     row_width: Optional[int] = None,
+    n_live: Optional[jax.Array] = None,
 ) -> GatherBatch:
     """The device-resident LGD step: Algorithm 1 + gather + weights, one
     compiled program.
@@ -363,6 +391,10 @@ def sample_gather(
         composition passes False and normalises once globally).
       row_width: logical S+1 when the store rows were lane-padded once
         at build (keeps the per-call pad zero-width).
+      n_live: traced int32 live-row count of a capacity-managed
+        streaming store/index (``None`` = dense).  Fallback draws and
+        EVERY 1/(p·N) weight then use N = n_live, so the estimator
+        stays exactly unbiased as a sliding window advances.
 
     Returns:
       ``GatherBatch`` with every field shaped (m, ...): token rows,
@@ -375,9 +407,10 @@ def sample_gather(
     """
     res = sample(key, index, x_aug, query, params, m=m,
                  max_probes=max_probes, multiprobe=multiprobe,
-                 use_pallas=use_pallas, interpret=interpret)
+                 use_pallas=use_pallas, interpret=interpret,
+                 n_live=n_live)
     return _assemble(res, store, example_offset, p_floor, normalize,
-                     use_pallas, interpret, row_width)
+                     use_pallas, interpret, row_width, n_live)
 
 
 @partial(jax.jit, static_argnames=("params", "m", "max_probes", "multiprobe",
@@ -399,6 +432,7 @@ def sample_gather_batched(
     use_pallas: Optional[bool] = None,
     interpret: bool = False,
     row_width: Optional[int] = None,
+    n_live: Optional[jax.Array] = None,
 ) -> GatherBatch:
     """``sample_gather`` for C queries at once; every field comes back
     (C, m, ...).  The C·m gathered rows run through ONE gather+weight
@@ -408,10 +442,11 @@ def sample_gather_batched(
     res = sample_batched(key, index, x_aug, queries, params, m=m,
                          max_probes=max_probes, multiprobe=multiprobe,
                          use_pallas=use_pallas,
-                         interpret=interpret)          # fields (C, m)
+                         interpret=interpret,
+                         n_live=n_live)                # fields (C, m)
     flat = SampleResult(*(f.reshape((-1,) + f.shape[2:]) for f in res))
     batch = _assemble(flat, store, example_offset, p_floor, False,
-                      use_pallas, interpret, row_width)
+                      use_pallas, interpret, row_width, n_live)
     unflat = GatherBatch(*(f.reshape((c, m) + f.shape[1:]) for f in batch))
     if normalize:
         w = unflat.loss_weights

@@ -38,14 +38,42 @@ CPU hosts take the numerically identical XLA reference):
 The index is a pytree and can be sharded over the ``data`` mesh axis so
 each data-parallel group maintains the index of its own shard of the
 training set (see ``repro/data/lsh_pipeline.py``).
+
+INDEX MUTATIONS (the ONE write surface).  Everything that changes an
+index — the one-time build, the periodic full refresh, the dirty-subset
+delta merge, and the streaming ``append``/``evict`` membership changes —
+goes through ``mutate_index(index, IndexMutation(op, ...), params)``.
+The legacy per-op entry points (``build_index`` / ``refresh_index`` /
+``refresh_index_delta``) survive as thin wrappers that emit
+``DeprecationWarning``; see docs/ARCHITECTURE.md for the migration
+table.
+
+STREAMING / CAPACITY MODEL.  A streaming index is allocated at a
+power-of-two CAPACITY C >= N (``grow_index`` doubles it — bounded
+recompiles, the same trick as the delta path's power-of-two id
+buckets).  Empty slots carry the sentinel code ``EMPTY_CODE``
+(0xFFFFFFFF): packed K-bit codes satisfy code < 2^K, so with K <= 31
+every live code sorts strictly before every sentinel — buckets of real
+query codes can never contain an empty slot, and the first ``n_live``
+entries of EVERY table's sorted order are exactly the live ids (what
+the sampler's live-N uniform fallback gathers from).  ``append_rows``
+writes fresh codes into previously-empty slots and ``evict_rows``
+writes sentinels into live ones; both are the SAME tie-stable merge as
+``refresh_index_delta`` (scatter into the previous sorted slots, then
+a stable argsort composed through the previous order), so appended
+rows land after existing equal-code ties and unchanged rows keep their
+exact slots.
 """
 
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+import dataclasses
+import warnings
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import default_use_pallas
 from repro.kernels.bucket_probe import (
@@ -94,70 +122,41 @@ def _hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
     return codes.T
 
 
-def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams,
-                *, use_pallas: Optional[bool] = None,
-                interpret: bool = False) -> LSHIndex:
-    """One-time (or periodic-refresh) preprocessing: hash + sort per table.
+# Sentinel code of an EMPTY capacity slot.  Packed K-bit codes satisfy
+# code < 2^K, so for K <= 31 every live code sorts strictly before the
+# sentinel: empty slots cluster at the tail of every table's sorted
+# order and no real query code can ever bucket onto them.
+EMPTY_CODE = 0xFFFFFFFF
 
-    Args:
-      key: PRNG key for the projection draw (the ONLY randomness here).
-      x_aug: (N, d) augmented vectors to index (unit-norm rows for
-        SimHash monotonicity).
-      params: hash-family hyper-parameters (static).
-      use_pallas: ``None`` routes hashing through the fused SimHash
-        kernel on TPU and the bit-identical XLA reference elsewhere;
-        pass True/False to force a path.
-      interpret: run the kernel under the Pallas interpreter (tests).
 
-    Returns:
-      An immutable ``LSHIndex`` pytree (projections, per-table sorted
-      codes, sort order).
+def _mask_codes(codes: jax.Array,
+                live_mask: Optional[jax.Array]) -> jax.Array:
+    """Force the codes of dead capacity slots to the sentinel."""
+    if live_mask is None:
+        return codes
+    return jnp.where(live_mask[None, :], codes, jnp.uint32(EMPTY_CODE))
 
-    Determinism: a pure function of (key, x_aug, params) — two builds
-    with the same inputs are bitwise identical on every backend, which
-    is what ``restore_at``-style canonical rebuilds rely on.
-    """
+
+def _build_impl(key: jax.Array, x_aug: jax.Array, params: LSHParams,
+                live_mask: Optional[jax.Array],
+                use_pallas: Optional[bool], interpret: bool) -> LSHIndex:
     if params.dim != x_aug.shape[-1]:
         raise ValueError(f"params.dim={params.dim} != data dim {x_aug.shape[-1]}")
     proj = make_projections(key, params)
-    codes = _hash_points(x_aug, proj, params, use_pallas, interpret)  # (L, N)
+    codes = _mask_codes(
+        _hash_points(x_aug, proj, params, use_pallas, interpret),
+        live_mask)                                          # (L, C)
     order = jnp.argsort(codes, axis=1).astype(jnp.int32)
     sorted_codes = jnp.take_along_axis(codes, order, axis=1)
     return LSHIndex(proj, sorted_codes, order)
 
 
-def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
-                  params: LSHParams, *, use_pallas: Optional[bool] = None,
-                  interpret: bool = False,
-                  warm_start: bool = True) -> LSHIndex:
-    """Re-hash the (possibly updated) points, keeping the same projections.
-
-    Used for deep models where stored features drift slowly (Sec. 3.2 /
-    Appendix E): hash tables are periodically rebuilt from fresh features.
-
-    Args:
-      key: unused when projections are reused; kept for API symmetry.
-      index: the previous index (its projections are reused; with
-        ``warm_start`` its ``order`` seeds the re-sort).
-      x_aug: (N, d) fresh feature vectors (same N as the index).
-      params: hash-family hyper-parameters (static).
-      warm_start: keep tie layouts stable across refreshes (below).
-
-    Returns:
-      A new ``LSHIndex`` over the fresh features.
-
-    With ``warm_start`` the previous ``order`` seeds the re-sort: codes
-    are permuted by the old order first and a *stable* argsort of that
-    permutation is composed back.  The result is bitwise-valid for any
-    drift, ties keep their previous relative layout (stable double
-    buffering of bucket slices), and points whose codes did not change
-    keep their exact slots.  Note this buys layout *stability*, not
-    sort speed — XLA sorts are data-oblivious — at the cost of two
-    extra O(L*N) gathers, dwarfed by the re-hash itself.
-    """
-    del key
-    codes = _hash_points(x_aug, index.projections, params, use_pallas,
-                         interpret)  # (L, N)
+def _refresh_impl(index: LSHIndex, x_aug: jax.Array, params: LSHParams,
+                  live_mask: Optional[jax.Array], warm_start: bool,
+                  use_pallas: Optional[bool], interpret: bool) -> LSHIndex:
+    codes = _mask_codes(
+        _hash_points(x_aug, index.projections, params, use_pallas,
+                     interpret), live_mask)                 # (L, C)
     if warm_start:
         prev = index.order
         permuted = jnp.take_along_axis(codes, prev, axis=1)
@@ -171,30 +170,15 @@ def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
 
 
 @jax.jit
-def refresh_index_delta(index: LSHIndex, dirty_ids: jax.Array,
-                        dirty_codes: jax.Array) -> LSHIndex:
-    """Merge re-hashed codes for a dirty subset into the sorted index.
+def _merge_impl(index: LSHIndex, ids: jax.Array,
+                codes: jax.Array) -> LSHIndex:
+    """The ONE tie-stable merge under delta / append / evict.
 
-    ``dirty_ids``: (D,) int32 point ids whose features changed (callers
-    pad D to a static bucket; duplicate ids are legal as long as their
-    code columns agree — the scatter then writes identical values).
-    ``dirty_codes``: (L, D) uint32, the fresh codes of exactly those
-    points.  Clean points are NOT re-hashed — that is the whole point:
-    the O(N·d·L·K) hash (and the O(N·model) re-embed upstream) scale
-    with |dirty|, and only the merge below touches all N entries.
-
-    The merge works in the old-sorted domain, through the previous
-    ``order`` — the same tie-stability contract as the warm-started
-    ``refresh_index``: scatter the dirty codes into their previous
-    sorted slots (the clean segments stay sorted), then compose a
-    *stable* argsort back through the old permutation.  Entries are
-    therefore (re)placed by the key (new code, previous position), which
-    is bitwise what ``refresh_index(warm_start=True)`` computes when the
-    clean codes are unchanged — in particular, delta-refresh with ALL
-    points dirty is bit-identical to a full warm-started refresh, and a
-    dirty point whose code did not change keeps its exact slot.  The
-    stable sort costs O(L·N log N) on packed uint32 codes — memcpy-rate
-    device work, dwarfed by the avoided re-embed + re-hash.
+    Scatter the changed codes into their previous sorted slots (clean
+    segments stay sorted), then compose a *stable* argsort back through
+    the previous ``order``.  Entries are (re)placed by the key
+    (new code, previous position) — bitwise what a full warm-started
+    refresh computes when the unchanged codes are unchanged.
     """
     order = index.order
     l, n = order.shape
@@ -202,13 +186,233 @@ def refresh_index_delta(index: LSHIndex, dirty_ids: jax.Array,
     # position of each point id in the old sorted order, per table
     pos = jnp.zeros_like(order).at[
         jnp.arange(l, dtype=jnp.int32)[:, None], order].set(iota[None])
-    pos_d = jnp.take(pos, dirty_ids.astype(jnp.int32), axis=1)  # (L, D)
+    pos_d = jnp.take(pos, ids.astype(jnp.int32), axis=1)    # (L, D)
     permuted = jax.vmap(lambda sc, p, c: sc.at[p].set(c))(
-        index.sorted_codes, pos_d, dirty_codes)
+        index.sorted_codes, pos_d, codes)
     delta = jnp.argsort(permuted, axis=1, stable=True).astype(jnp.int32)
     new_order = jnp.take_along_axis(order, delta, axis=1)
     new_sorted = jnp.take_along_axis(permuted, delta, axis=1)
     return LSHIndex(index.projections, new_sorted, new_order)
+
+
+# -- the unified mutation surface ------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class IndexMutation:
+    """ONE declarative description of an index write (see ``mutate_index``).
+
+    ``op`` selects the mode; the other fields are its payload:
+
+      * ``"build"``   — ``key`` (projection draw) + ``x_aug`` (C, d);
+        optional ``live_mask`` (C,) bool under a managed capacity.
+      * ``"refresh"`` — ``x_aug`` fresh (C, d) features (projections are
+        reused); ``warm_start`` keeps tie layouts stable; optional
+        ``live_mask``.
+      * ``"delta"``   — ``ids`` (D,) + ``codes`` (L, D): merge fresh
+        codes of a dirty subset (pad D to a static bucket; duplicate
+        ids with equal code columns are legal).
+      * ``"append"``  — ``ids`` (D,) previously-EMPTY slots + ``codes``
+        (L, D) of the new rows.
+      * ``"evict"``   — ``ids`` (D,) live slots to empty (their codes
+        become ``EMPTY_CODE``).
+
+    ``tokens`` is a pipeline-level payload (raw token rows for a
+    pipeline append — ``LSHSampledPipeline.mutate`` embeds + hashes
+    them); ``mutate_index`` itself never reads it.
+    """
+
+    op: str
+    key: Optional[jax.Array] = None
+    x_aug: Optional[jax.Array] = None
+    ids: Optional[jax.Array] = None
+    codes: Optional[jax.Array] = None
+    live_mask: Optional[jax.Array] = None
+    warm_start: bool = True
+    tokens: Optional[Any] = None
+
+    _OPS = ("build", "refresh", "delta", "append", "evict")
+
+    def __post_init__(self):
+        if self.op not in self._OPS:
+            raise ValueError(
+                f"IndexMutation.op must be one of {self._OPS}, "
+                f"got {self.op!r}")
+
+
+def _require(mutation: IndexMutation, **fields):
+    for name, value in fields.items():
+        if value is None:
+            raise ValueError(
+                f"IndexMutation(op={mutation.op!r}) requires {name}")
+
+
+def mutate_index(index: Optional[LSHIndex], mutation: IndexMutation,
+                 params: Optional[LSHParams] = None, *,
+                 use_pallas: Optional[bool] = None,
+                 interpret: bool = False) -> LSHIndex:
+    """THE index write entry point: apply ``mutation`` and return the new
+    index (inputs are never mutated — ``LSHIndex`` is an immutable
+    pytree).
+
+    Args:
+      index: the previous index — ``None`` for ``op="build"``, required
+        for every other op.
+      mutation: what to do (see ``IndexMutation``).
+      params: hash-family hyper-parameters; required for the hashing
+        ops (``build`` / ``refresh``), unused by the pure merges
+        (``delta`` / ``append`` / ``evict``, whose payload is
+        pre-hashed codes).
+      use_pallas / interpret: kernel dispatch, as everywhere.
+
+    Determinism: every op is a pure function of its inputs, bitwise
+    reproducible on every backend.  ``append``/``evict`` share the
+    delta merge's tie-stability contract: unchanged rows keep their
+    exact slots, appended rows land after existing equal-code ties in
+    previous-tail order, evicted rows join the sentinel tail in their
+    previous relative order.
+    """
+    op = mutation.op
+    if op == "build":
+        _require(mutation, key=mutation.key, x_aug=mutation.x_aug,
+                 params=params)
+        return _build_impl(mutation.key, mutation.x_aug, params,
+                           mutation.live_mask, use_pallas, interpret)
+    if index is None:
+        raise ValueError(f"IndexMutation(op={op!r}) requires an index")
+    if op == "refresh":
+        _require(mutation, x_aug=mutation.x_aug, params=params)
+        return _refresh_impl(index, mutation.x_aug, params,
+                             mutation.live_mask, mutation.warm_start,
+                             use_pallas, interpret)
+    if op in ("delta", "append"):
+        _require(mutation, ids=mutation.ids, codes=mutation.codes)
+        return _merge_impl(index, mutation.ids, mutation.codes)
+    # op == "evict"
+    _require(mutation, ids=mutation.ids)
+    l = index.sorted_codes.shape[0]
+    codes = jnp.full((l, mutation.ids.shape[0]), EMPTY_CODE, jnp.uint32)
+    return _merge_impl(index, mutation.ids, codes)
+
+
+def append_rows(index: LSHIndex, ids: jax.Array,
+                codes: jax.Array) -> LSHIndex:
+    """Merge new rows into previously-EMPTY capacity slots.
+
+    ``ids``: (D,) int32 slot ids that currently hold ``EMPTY_CODE``;
+    ``codes``: (L, D) uint32 fresh codes of the appended rows.  Pad D
+    to a static bucket by REPEATING an entry (duplicate ids with equal
+    code columns are a no-op under the scatter), bounding recompiles
+    exactly like the delta path.  Same tie-stable merge as
+    ``refresh_index_delta``: every live row keeps its slot; appended
+    rows insert after existing equal-code ties.
+    """
+    return _merge_impl(index, ids, codes)
+
+
+def evict_rows(index: LSHIndex, ids: jax.Array) -> LSHIndex:
+    """Empty the given live slots (their codes become ``EMPTY_CODE``).
+
+    ``ids``: (D,) int32 — pad D to a static bucket by repeating an
+    entry.  Evicted slots join the sentinel tail of every table's
+    sorted order (stable among themselves); all remaining live rows
+    keep their exact slots, so the live prefix ``order[t, :n_live]``
+    stays a permutation of the live ids for every table t.
+    """
+    l = index.sorted_codes.shape[0]
+    codes = jnp.full((l, ids.shape[0]), EMPTY_CODE, jnp.uint32)
+    return _merge_impl(index, ids, codes)
+
+
+def grow_index(index: LSHIndex, new_capacity: int) -> LSHIndex:
+    """Grow a capacity-managed index to ``new_capacity`` slots.
+
+    The new slots are EMPTY (sentinel codes) and are appended to the
+    tail of every table's sorted order in slot order — the arrays stay
+    sorted (the sentinel is the maximum code) and every existing row
+    keeps its exact slot.  Callers double capacity (powers of two) so
+    the per-shape jit programs downstream recompile O(log N) times
+    total.
+    """
+    l, n = index.order.shape
+    if new_capacity < n:
+        raise ValueError(
+            f"new_capacity={new_capacity} < current capacity {n} "
+            "(shrink by compaction at the store level, not here)")
+    if new_capacity == n:
+        return index
+    pad = new_capacity - n
+    sorted_codes = jnp.pad(index.sorted_codes, ((0, 0), (0, pad)),
+                           constant_values=np.uint32(EMPTY_CODE))
+    extra = jnp.broadcast_to(
+        jnp.arange(n, new_capacity, dtype=jnp.int32)[None], (l, pad))
+    order = jnp.concatenate([index.order, extra], axis=1)
+    return LSHIndex(index.projections, sorted_codes, order)
+
+
+# -- deprecated per-op wrappers (migrate to mutate_index) ------------------
+
+
+def _warn_deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.core.tables.{old} is deprecated; use "
+        f"mutate_index(index, IndexMutation({new}), params) — "
+        "see docs/ARCHITECTURE.md 'Index mutation API & stability'",
+        DeprecationWarning, stacklevel=3)
+
+
+def build_index(key: jax.Array, x_aug: jax.Array, params: LSHParams,
+                *, use_pallas: Optional[bool] = None,
+                interpret: bool = False) -> LSHIndex:
+    """DEPRECATED thin wrapper: ``mutate_index(None,
+    IndexMutation("build", key=key, x_aug=x_aug), params)``.
+
+    One-time (or periodic-refresh) preprocessing: hash + sort per
+    table.  A pure function of (key, x_aug, params) — two builds with
+    the same inputs are bitwise identical on every backend, which is
+    what ``restore_at``-style canonical rebuilds rely on.
+    """
+    _warn_deprecated("build_index", '"build", key=..., x_aug=...')
+    return _build_impl(key, x_aug, params, None, use_pallas, interpret)
+
+
+def refresh_index(key: jax.Array, index: LSHIndex, x_aug: jax.Array,
+                  params: LSHParams, *, use_pallas: Optional[bool] = None,
+                  interpret: bool = False,
+                  warm_start: bool = True) -> LSHIndex:
+    """DEPRECATED thin wrapper: ``mutate_index(index,
+    IndexMutation("refresh", x_aug=x_aug, warm_start=...), params)``.
+
+    Re-hash the (possibly updated) points, keeping the same projections
+    (Sec. 3.2 / Appendix E periodic refresh).  With ``warm_start`` the
+    previous ``order`` seeds the re-sort: codes are permuted by the old
+    order first and a *stable* argsort of that permutation is composed
+    back — ties keep their previous relative layout (stable double
+    buffering of bucket slices) and points whose codes did not change
+    keep their exact slots.  ``key`` is unused (projections are
+    reused); kept for wrapper signature compatibility.
+    """
+    del key
+    _warn_deprecated("refresh_index", '"refresh", x_aug=...')
+    return _refresh_impl(index, x_aug, params, None, warm_start,
+                         use_pallas, interpret)
+
+
+def refresh_index_delta(index: LSHIndex, dirty_ids: jax.Array,
+                        dirty_codes: jax.Array) -> LSHIndex:
+    """DEPRECATED thin wrapper: ``mutate_index(index,
+    IndexMutation("delta", ids=dirty_ids, codes=dirty_codes))``.
+
+    Merge re-hashed codes for a dirty subset into the sorted index.
+    Clean points are NOT re-hashed — the O(N·d·L·K) hash (and the
+    O(N·model) re-embed upstream) scale with |dirty|; only the
+    tie-stable merge touches all N entries.  Delta-refresh with ALL
+    points dirty is bit-identical to a full warm-started refresh, and
+    a dirty point whose code did not change keeps its exact slot.
+    """
+    _warn_deprecated("refresh_index_delta",
+                     '"delta", ids=..., codes=...')
+    return _merge_impl(index, dirty_ids, dirty_codes)
 
 
 def hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,

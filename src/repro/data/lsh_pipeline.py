@@ -98,6 +98,41 @@ in ``health.transitions`` and surfaced through the trainer's metrics.
 Fault injection for tests/chaos drills hooks in via
 ``set_fault_injector`` (see ``repro.testing.faults``).
 
+STREAMING CORPORA (``streaming=True`` / ``window=``): the token store,
+feature buffer and index become CAPACITY-MANAGED device buffers sized
+to powers of two (``min_capacity`` floor).  Dead slots hash to the
+sentinel ``EMPTY_CODE`` and cluster at every table's sorted tail, so
+bucket probes and the uniform fallback only ever see live rows, and
+capacity changes (grow on append past capacity, compact when
+n_live <= capacity/4) are the ONLY recompile points — mutation
+batches are padded to power-of-two id buckets exactly like delta
+refresh.  All index mutations go through ONE entry point,
+``mutate(IndexMutation(...))`` with an explicit op (``append`` /
+``evict`` / ``delta`` / ``refresh`` / ``build``);
+``append_rows(tokens)`` / ``evict_rows(ids)`` are the typed
+conveniences behind it.  Appended rows are embedded at the pinned
+family scale and tie-stably merged through the previous sort order
+(the same contract as delta refresh); evictions are sentinel merges.
+Per-draw weights become 1/(p·n_live) with n_live a TRACED scalar —
+live-count changes do not recompile the step program — so the
+estimator stays exactly unbiased as the window advances; with
+``window=`` set, appends auto-evict the oldest live rows first.
+Mutations compose with the async double-buffered refresh: the launch
+snapshots (store, live mask, capacity); mutations during the flight
+apply to the live buffers AND are recorded as touched slots; at the
+swap boundary the committed result is reconciled by one delta merge
+over the touched slots (a capacity change in flight discards the
+worker's result and refreshes synchronously on current state).
+Explicit mutations are recorded in a MUTATION LOG
+(``mutation_log()`` / ``load_mutation_log``): ``restore_at(t)``
+truncates the log to entries with step <= t, replays MEMBERSHIP only
+(window evictions, growth and compaction are re-derived
+deterministically; no embeds) and then rebuilds the index canonically
+from restored params — restored-at-step-t bit-determinism survives
+streaming.  Slot ids are reused after eviction and remapped by
+compaction: ``example_ids`` identify live store rows, not immortal
+examples.
+
 KEY DISCIPLINE: all randomness derives from the constructor key by
 ``fold_in`` with distinct stream salts (build / per-step sampling /
 per-refresh), never by chained ``split``.  The determinism contract is
@@ -118,6 +153,7 @@ import dataclasses
 import logging
 import threading
 import time
+import warnings
 import zlib
 from typing import Any, Callable, Dict, List, Optional
 
@@ -126,16 +162,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (
+    EMPTY_CODE,
+    IndexMutation,
     LSHParams,
-    build_index,
     get_family,
     hash_points,
-    refresh_index,
-    refresh_index_delta,
+    mutate_index,
     sample_gather,
     sample_gather_batched,
 )
-from repro.core.tables import LSHIndex
+from repro.core.tables import LSHIndex, grow_index
 from repro.dist.sharding import (
     compose_sharded_batch,
     example_shard_bounds,
@@ -166,6 +202,46 @@ def _dirty_bucket(n: int) -> int:
     while b < n:
         b <<= 1
     return b
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p
+
+
+def _pad_mutation(ids: np.ndarray, codes, capacity: int):
+    """Pad a mutation batch to a power-of-two id bucket (bounded jit
+    recompiles, the delta-refresh trick).  Padding repeats the first
+    (id, code) column — a duplicate scatter of identical values, i.e.
+    a merge no-op."""
+    b = int(ids.shape[0])
+    size = min(_dirty_bucket(b), capacity)
+    ids_j = jnp.asarray(ids, jnp.int32)
+    codes_j = jnp.asarray(codes)
+    if size <= b:
+        return ids_j, codes_j
+    pad = size - b
+    ids_p = jnp.concatenate([ids_j, jnp.full((pad,), int(ids[0]),
+                                             jnp.int32)])
+    codes_p = jnp.concatenate(
+        [codes_j, jnp.tile(codes_j[:, :1], (1, pad))], axis=1)
+    return ids_p, codes_p
+
+
+# streaming sharded pipelines space their shards' global example ids by
+# a fixed stride (instead of the contiguous initial bounds), so ids stay
+# disjoint no matter how far each shard's window advances:
+# gid // _SHARD_STRIDE recovers the owning shard, gid % _SHARD_STRIDE
+# its local slot.
+_SHARD_STRIDE = 1 << 20
+
+_LEGACY_HOOK_MSG = (
+    "legacy closure hooks feature_fn(tokens) / query_fn() are "
+    "deprecated; pass params= to the pipeline constructor and use the "
+    "params-aware flavour feature_fn(params, tokens) / "
+    "query_fn(params) (the trainer keeps params fresh via set_params)")
 
 
 @dataclasses.dataclass
@@ -228,6 +304,16 @@ class LSHPipelineConfig:
     refresh_timeout: Optional[float] = None
     # degradation-ladder thresholds; None = HealthConfig() defaults.
     health: Optional[HealthConfig] = None
+    # -- streaming corpora (module docstring: STREAMING CORPORA) --
+    # capacity-managed store + the mutate()/append_rows()/evict_rows()
+    # index-mutation API.  Setting ``window`` implies streaming.
+    streaming: bool = False
+    # sliding window: appends past ``window`` live rows auto-evict the
+    # oldest rows first.  None = unbounded (explicit evicts only).
+    window: Optional[int] = None
+    # smallest (power-of-two) store capacity; compaction never shrinks
+    # below it.
+    min_capacity: int = 64
 
     def __post_init__(self):
         if self.refresh_mode not in ("full", "delta"):
@@ -240,6 +326,22 @@ class LSHPipelineConfig:
         if self.refresh_retries < 0:
             raise ValueError(
                 f"refresh_retries must be >= 0, got {self.refresh_retries}")
+        if self.window is not None:
+            if self.window < 1:
+                raise ValueError(f"window must be >= 1, got {self.window}")
+            self.streaming = True
+        if self.streaming:
+            if self.k > 31:
+                # the sentinel capacity model needs every packed K-bit
+                # code to sort strictly before EMPTY_CODE = 2^32 - 1.
+                raise ValueError(
+                    f"streaming requires k <= 31 (sentinel codes), "
+                    f"got k={self.k}")
+            if self.min_capacity < 1 or (
+                    self.min_capacity & (self.min_capacity - 1)):
+                raise ValueError(
+                    f"min_capacity must be a power of two >= 1, "
+                    f"got {self.min_capacity}")
         get_family(self.family)   # raises on unknown family names
 
 
@@ -248,7 +350,9 @@ class LSHSampledPipeline:
 
     ``feature_fn`` / ``query_fn`` come in two flavours:
       * legacy closures: ``feature_fn(tokens)``, ``query_fn()`` — params
-        are baked into the closure.
+        are baked into the closure.  DEPRECATED: constructing without
+        ``params=`` warns (DeprecationWarning) and the flavour will be
+        removed; migrate to the params-aware hooks.
       * params-aware (pass ``params=`` to the constructor):
         ``feature_fn(params, tokens)``, ``query_fn(params)`` — the
         trainer pushes fresh params via ``set_params`` after every step,
@@ -292,23 +396,26 @@ class LSHSampledPipeline:
         params: Any = None,
         example_offset: int = 0,
         store_device=None,
+        _warn_legacy: bool = True,
     ):
+        if params is None and _warn_legacy:
+            warnings.warn(_LEGACY_HOOK_MSG, DeprecationWarning,
+                          stacklevel=2)
         self.cfg = config
         self.family = get_family(config.family)
         self.tokens = tokens
         self.n = tokens.shape[0]
+        self.streaming = config.streaming
         # the device-resident example store: uploaded exactly once; every
         # subsequent step gathers from it on device.  On the Pallas
         # gather path the row width is lane-padded HERE, once, so the
         # kernel wrapper's per-call pad is zero-width and compiles away
-        # (``row_width`` keeps the logical S+1 for slicing).
+        # (``row_width`` keeps the logical S+1 for slicing).  Streaming
+        # pipelines additionally pad ROWS up to the power-of-two
+        # capacity (dead slots excluded from the index by the sentinel).
         self.row_width = tokens.shape[1]
-        store = jnp.asarray(tokens, jnp.int32)
-        if (config.use_pallas if config.use_pallas is not None
-                else default_use_pallas()):
-            store = jnp.pad(store, ((0, 0), (0, (-self.row_width) % 128)))
-        self.store = (jax.device_put(store, store_device)
-                      if store_device is not None else store)
+        self._store_device = store_device
+        self._init_membership(tokens)
         self.feature_fn = feature_fn
         self.query_fn = query_fn
         self.feature_batch = feature_batch
@@ -333,7 +440,11 @@ class LSHSampledPipeline:
         self._uniform_fn = None            # lazy jit: uniform-fallback draw
         self._track_dirty = (config.refresh_mode == "delta"
                              and config.refresh_every > 0)
-        self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        self._dirty = jnp.zeros((self.capacity,), jnp.bool_)
+        # streaming: explicit-mutation log (restore_at replays it) and
+        # the touched-slot set reconciled at async swap boundaries.
+        self._mutlog: List[dict] = []
+        self._touched: set = set()
         # sampling diagnostics: device-side lazy accumulators (no sync
         # on the step path; syncs happen only when sampler_stats() is
         # read, e.g. at the trainer's log cadence).
@@ -353,9 +464,66 @@ class LSHSampledPipeline:
         lsh_family = "dense" if config.family == "srp" else config.family
         self.lsh = LSHParams(k=config.k, l=config.l, dim=dim,
                              family=lsh_family)
-        self.index: LSHIndex = build_index(
-            self._build_key, self.features, self.lsh,
+        self.index: LSHIndex = mutate_index(
+            None,
+            IndexMutation("build", key=self._build_key,
+                          x_aug=self.features, live_mask=self._live_dev),
+            self.lsh,
             use_pallas=config.use_pallas, interpret=config.interpret)
+
+    # -- membership / capacity (streaming) -----------------------------------
+
+    def _upload_store(self, rows: jnp.ndarray) -> jax.Array:
+        """Lane-pad + device-place a (cap, row_width) token block."""
+        if (self.cfg.use_pallas if self.cfg.use_pallas is not None
+                else default_use_pallas()):
+            rows = jnp.pad(rows, ((0, 0), (0, (-self.row_width) % 128)))
+        return (jax.device_put(rows, self._store_device)
+                if self._store_device is not None else rows)
+
+    def _init_membership(self, tokens: np.ndarray):
+        """(Re)initialise the store + membership state from the
+        construction-time corpus — shared by ``__init__`` and the
+        ``restore_at`` replay reset."""
+        n0 = tokens.shape[0]
+        store = jnp.asarray(tokens, jnp.int32)
+        if self.streaming:
+            cap = max(_next_pow2(max(n0, 1)), self.cfg.min_capacity)
+            store = jnp.pad(store, ((0, cap - n0), (0, 0)))
+            self.capacity = cap
+            self._live_np = np.zeros((cap,), np.bool_)
+            self._live_np[:n0] = True
+            self._arrival = np.full((cap,), -1, np.int64)
+            self._arrival[:n0] = np.arange(n0)
+            self._next_arrival = n0
+            self._free = list(range(n0, cap))
+            self._n_live = n0
+        else:
+            self.capacity = n0
+            self._live_np = None
+            self._arrival = None
+            self._next_arrival = n0
+            self._free = []
+            self._n_live = n0
+        self.store = self._upload_store(store)
+        self._sync_live_dev()
+
+    def _sync_live_dev(self):
+        """Refresh the device mirrors of the membership state.  The
+        live-count scalar is TRACED into the step program, so advancing
+        the window never recompiles; non-streaming pipelines keep both
+        mirrors at None — the pre-streaming traces, bit-identically."""
+        if self.streaming:
+            self._live_dev = jnp.asarray(self._live_np)
+            self._n_live_dev = jnp.int32(self._n_live)
+        else:
+            self._live_dev = None
+            self._n_live_dev = None
+
+    @property
+    def n_live(self) -> int:
+        """Live (indexed) example count — ``n`` unless streaming."""
+        return self._n_live
 
     # -- params hook ---------------------------------------------------------
 
@@ -379,23 +547,31 @@ class LSHSampledPipeline:
         return f / jnp.maximum(
             jnp.linalg.norm(f, axis=-1, keepdims=True), 1e-30)
 
-    def _compute_features_scaled(self, params: Any = None):
-        """(features, scale) for a full-corpus embed — NO attribute
-        writes, so async refresh workers can call it and hand the
-        freshly derived scale to the swap boundary.
+    def _compute_features_scaled(self, params: Any = None, store=None,
+                                 live=None):
+        """(features, scale) for a full-store embed — NO attribute
+        writes, so async refresh workers can call it on launch-time
+        snapshots (``store``/``live``) and hand the freshly derived
+        scale to the swap boundary.
 
         Symmetric families row-normalise (the pre-family behaviour,
         bit-identical) and return ``scale=None``; asymmetric families
         run ``augment_data`` under a freshly derived data scale M and
-        return it.
+        return it.  With a ``live`` mask (streaming) dead rows are
+        zeroed BEFORE the scale derivation, so recycled slots holding
+        stale tokens never influence M (or the normalised features that
+        the sentinel already excludes from every bucket).
         """
         params = self.params if params is None else params
+        store = self.store if store is None else store
         w = self.row_width
         outs = []
-        for i in range(0, self.n, self.feature_batch):
+        for i in range(0, store.shape[0], self.feature_batch):
             outs.append(self._embed(
-                self.store[i:i + self.feature_batch, :w - 1], params))
+                store[i:i + self.feature_batch, :w - 1], params))
         raw = jnp.concatenate(outs, axis=0)
+        if live is not None:
+            raw = jnp.where(live[:, None], raw, 0.0)
         if not self.family.asymmetric:
             return self._normalize(raw), None
         scale = self.family.data_scale(raw)
@@ -409,21 +585,24 @@ class LSHSampledPipeline:
         Async refreshes must use ``_compute_features_scaled`` and commit
         features, index and scale together at the swap boundary.
         """
-        feats, scale = self._compute_features_scaled(params)
+        feats, scale = self._compute_features_scaled(
+            params, live=self._live_dev)
         if self.family.asymmetric:
             self._feat_scale = scale
         return feats
 
     def _embed_rows(self, ids: jax.Array, params: Any,
-                    scale=None) -> jax.Array:
-        """Embed a gathered subset of rows (delta refresh), augmented.
+                    scale=None, store=None) -> jax.Array:
+        """Embed a gathered subset of rows (delta refresh / append /
+        reconcile), augmented.
 
         Chunked exactly like ``_compute_features`` so an all-rows subset
         produces bitwise the same features as a full re-embed — for
         asymmetric families at ``scale`` (the pinned M the indexed
         vectors were built with; delta refresh snapshots it at launch).
         """
-        rows = jnp.take(self.store, ids, axis=0)[:, :self.row_width - 1]
+        store = self.store if store is None else store
+        rows = jnp.take(store, ids, axis=0)[:, :self.row_width - 1]
         outs = []
         for i in range(0, rows.shape[0], self.feature_batch):
             outs.append(self._embed(rows[i:i + self.feature_batch], params))
@@ -436,12 +615,14 @@ class LSHSampledPipeline:
 
     def _take_dirty(self) -> jax.Array:
         """Snapshot and clear the dirty mask (refresh claims the dirt)."""
-        dirty, self._dirty = self._dirty, jnp.zeros((self.n,), jnp.bool_)
+        dirty, self._dirty = (self._dirty,
+                              jnp.zeros((self.capacity,), jnp.bool_))
         return dirty
 
     def _delta_refresh_values(self, kr: jax.Array, params: Any,
                               dirty: jax.Array, features: jax.Array,
-                              index: LSHIndex, scale=None):
+                              index: LSHIndex, scale=None, store=None,
+                              live=None):
         """(features, index) after a delta refresh of ``dirty`` rows.
 
         Pure in its explicit inputs so the async thread can run it on a
@@ -450,25 +631,31 @@ class LSHSampledPipeline:
         deterministic per refresh index, so restores replay it — then
         padded to a power-of-two id bucket (duplicate ids are benign:
         identical rows re-embed to identical codes, and the scatter
-        writes identical values).
+        writes identical values).  Streaming: the mask is intersected
+        with the (snapshot) live mask, so a drift draw never re-embeds
+        a dead slot.
         """
+        cap = dirty.shape[0]
         if self.cfg.drift_frac > 0.0:
             kd = jax.random.fold_in(kr, 1)
             dirty = jnp.logical_or(
                 dirty,
-                jax.random.bernoulli(kd, self.cfg.drift_frac, (self.n,)))
+                jax.random.bernoulli(kd, self.cfg.drift_frac, (cap,)))
+        if live is not None:
+            dirty = jnp.logical_and(dirty, live)
         nd = int(jnp.sum(dirty))
         if nd == 0:
             return features, index
-        size = min(_dirty_bucket(nd), self.n)
+        size = min(_dirty_bucket(nd), cap)
         ids = jnp.flatnonzero(dirty, size=size,
                               fill_value=jnp.argmax(dirty))
-        feats_d = self._embed_rows(ids, params, scale=scale)
+        feats_d = self._embed_rows(ids, params, scale=scale, store=store)
         codes_d = hash_points(feats_d, index.projections, self.lsh,
                               use_pallas=self.cfg.use_pallas,
                               interpret=self.cfg.interpret)
         return (features.at[ids].set(feats_d),
-                refresh_index_delta(index, ids, codes_d))
+                mutate_index(index,
+                             IndexMutation("delta", ids=ids, codes=codes_d)))
 
     # -- refresh resilience --------------------------------------------------
 
@@ -499,21 +686,28 @@ class LSHSampledPipeline:
         time.sleep(base * (2 ** (attempt - 1)) * (1.0 + 0.5 * j))
 
     def _attempt_refresh(self, kr, full, dirty, params, features, index,
-                         scale, attempt: int):
+                         scale, store, live, attempt: int):
         """ONE refresh attempt on explicit inputs -> (features, index,
         scale).  Attribute-write-free so failed attempts cannot leave
         partially-committed state (features newer than index, or a scale
-        out of sync with both)."""
+        out of sync with both).  ``store``/``live`` are launch-time
+        snapshots: streaming mutations replace ``self.store`` under the
+        worker, and the swap boundary reconciles the delta."""
         self._fault("refresh_compute", refresh=self._refresh_count,
                     attempt=attempt)
         if full:
-            feats, new_scale = self._compute_features_scaled(params)
-            new_index = refresh_index(
-                kr, index, feats, self.lsh,
+            feats, new_scale = self._compute_features_scaled(
+                params, store=store, live=live)
+            new_index = mutate_index(
+                index,
+                IndexMutation("refresh", key=kr, x_aug=feats,
+                              live_mask=live, warm_start=True),
+                self.lsh,
                 use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
             return feats, new_index, new_scale
         feats, new_index = self._delta_refresh_values(
-            kr, params, dirty, features, index, scale=scale)
+            kr, params, dirty, features, index, scale=scale, store=store,
+            live=live)
         return feats, new_index, scale
 
     def _guarded(self, thunk):
@@ -543,7 +737,8 @@ class LSHSampledPipeline:
         return box["result"]
 
     def _retry_refresh(self, kr, full, dirty, params, features, index,
-                       scale, first_error=None, start_attempt=0) -> bool:
+                       scale, store, live, first_error=None,
+                       start_attempt=0) -> bool:
         """Retry loop around the refresh computation; commits the
         (features, index, scale) triple atomically on success.
 
@@ -562,7 +757,7 @@ class LSHSampledPipeline:
                 feats, new_index, new_scale = self._guarded(
                     lambda: self._attempt_refresh(
                         kr, full, dirty, params, features, index, scale,
-                        attempt))
+                        store, live, attempt))
             except Exception as e:       # noqa: BLE001 — any failure retries
                 err = e
                 log.warning("refresh %d attempt %d failed: %r",
@@ -594,7 +789,8 @@ class LSHSampledPipeline:
         dirty = self._take_dirty()
         ok = self._retry_refresh(kr, full, dirty, self.params,
                                  self.features, self.index,
-                                 self._feat_scale)
+                                 self._feat_scale, self.store,
+                                 self._live_dev)
         self._refresh_count += 1
         return ok
 
@@ -608,6 +804,12 @@ class LSHSampledPipeline:
         dirty = self._take_dirty()    # delta dirt is claimed at launch
         old_index, old_features = self.index, self.features
         old_scale = self._feat_scale  # snapshot: delta re-augments at it
+        # streaming: the worker computes on the LAUNCH-time store /
+        # membership; mutations landing during the flight go to the live
+        # buffers and into ``_touched`` for the swap-boundary reconcile.
+        old_store, old_live = self.store, self._live_dev
+        old_capacity = self.capacity
+        self._touched = set()
         box: dict = {}
 
         def work():
@@ -618,7 +820,7 @@ class LSHSampledPipeline:
             try:
                 box["result"] = self._attempt_refresh(
                     kr, full, dirty, params, old_features, old_index,
-                    old_scale, attempt=0)
+                    old_scale, old_store, old_live, attempt=0)
             except BaseException as e:   # handled at the swap boundary
                 box["error"] = e
 
@@ -629,7 +831,8 @@ class LSHSampledPipeline:
         # inputs, so a boundary retry is bit-identical to what the
         # worker would have produced.
         self._refresh_snapshot = (kr, full, dirty, params, old_features,
-                                  old_index, old_scale)
+                                  old_index, old_scale, old_store,
+                                  old_live, old_capacity)
 
     def _swap_refresh(self):
         """Join the in-flight refresh and swap buffers (fixed boundary).
@@ -650,25 +853,79 @@ class LSHSampledPipeline:
         self._refresh_thread = None
         self._refresh_box = None
         self._refresh_snapshot = None
-        kr, full, dirty, params, features, index, scale = snap
+        (kr, full, dirty, params, features, index, scale, store, live,
+         snap_capacity) = snap
+        if self.streaming and snap_capacity != self.capacity:
+            # a grow/compact landed during the flight: the worker's
+            # buffers have the wrong capacity (and compaction remapped
+            # slots).  Discard it and refresh synchronously on CURRENT
+            # state — the full path, since the claimed dirty mask also
+            # predates the remap.
+            self._touched = set()
+            zero_dirty = jnp.zeros((self.capacity,), jnp.bool_)
+            self._retry_refresh(kr, True, zero_dirty, self.params,
+                                self.features, self.index,
+                                self._feat_scale, self.store,
+                                self._live_dev)
+            self._refresh_count += 1
+            return
         if hung:
             err = TimeoutError(
                 f"async refresh worker hung past the swap boundary "
                 f"(watchdog {self.cfg.refresh_timeout}s); abandoned")
             log.warning("%s", err)
-            self._retry_refresh(kr, full, dirty, params, features, index,
-                                scale, first_error=err, start_attempt=1)
+            ok = self._retry_refresh(kr, full, dirty, params, features,
+                                     index, scale, store, live,
+                                     first_error=err, start_attempt=1)
         elif "error" in box:
-            self._retry_refresh(kr, full, dirty, params, features, index,
-                                scale, first_error=box["error"],
-                                start_attempt=1)
+            ok = self._retry_refresh(kr, full, dirty, params, features,
+                                     index, scale, store, live,
+                                     first_error=box["error"],
+                                     start_attempt=1)
         else:
             feats, new_index, new_scale = box["result"]
             self.features, self.index = feats, new_index
             if self.family.asymmetric:
                 self._feat_scale = new_scale
             self.health.note_refresh_success(self._step)
+            ok = True
+        if self.streaming:
+            if ok:
+                # the committed buffers predate any in-flight mutations;
+                # fold them back in with one delta merge.
+                self._reconcile_touched()
+            else:
+                # stale-index mode keeps the LIVE buffers, which already
+                # carry every mutation — nothing to reconcile.
+                self._touched = set()
         self._refresh_count += 1
+
+    def _reconcile_touched(self):
+        """Merge in-flight mutations into a just-committed refresh
+        result: touched live slots are re-embedded from the CURRENT
+        store at the committed scale and delta-merged; touched dead
+        slots are sentinel-merged — one tie-stable merge for both."""
+        touched = sorted(self._touched)
+        self._touched = set()
+        if not touched:
+            return
+        slots = np.asarray(touched, np.int64)
+        live = self._live_np[slots]
+        codes = np.full((self.lsh.l, len(slots)), EMPTY_CODE, np.uint32)
+        if live.any():
+            l_ids = jnp.asarray(slots[live], jnp.int32)
+            feats = self._embed_rows(l_ids, self.params,
+                                     scale=self._feat_scale)
+            codes_l = hash_points(feats, self.index.projections, self.lsh,
+                                  use_pallas=self.cfg.use_pallas,
+                                  interpret=self.cfg.interpret)
+            codes = jnp.asarray(codes).at[:, jnp.asarray(
+                np.flatnonzero(live))].set(codes_l)
+            self.features = self.features.at[l_ids].set(feats)
+        ids_p, codes_p = _pad_mutation(
+            np.asarray(slots, np.int32), jnp.asarray(codes), self.capacity)
+        self.index = mutate_index(
+            self.index, IndexMutation("delta", ids=ids_p, codes=codes_p))
 
     def _attempt_recovery(self) -> bool:
         """Uniform-fallback -> healthy: try a full CANONICAL index
@@ -679,9 +936,13 @@ class LSHSampledPipeline:
         try:
             def build():
                 self._fault("recover_rebuild", step=self._step)
-                feats, scale = self._compute_features_scaled(self.params)
-                idx = build_index(
-                    self._build_key, feats, self.lsh,
+                feats, scale = self._compute_features_scaled(
+                    self.params, live=self._live_dev)
+                idx = mutate_index(
+                    None,
+                    IndexMutation("build", key=self._build_key,
+                                  x_aug=feats, live_mask=self._live_dev),
+                    self.lsh,
                     use_pallas=self.cfg.use_pallas,
                     interpret=self.cfg.interpret)
                 return feats, idx, scale
@@ -694,7 +955,7 @@ class LSHSampledPipeline:
         self.features, self.index = feats, idx
         if self.family.asymmetric:
             self._feat_scale = scale
-        self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        self._dirty = jnp.zeros((self.capacity,), jnp.bool_)
         self.health.note_recovered(self._step)
         log.info("recovered at step %d: index rebuilt", self._step)
         return True
@@ -793,7 +1054,32 @@ class LSHSampledPipeline:
         Under sharding the owner rescales by n_s·S/N exactly as for
         weighted batches, which composes shard-means into the global
         mean — no special-casing needed.
+
+        Streaming: the draw is uniform over the LIVE rows — slot u of
+        table 0's sorted order for u < n_live (the sentinel clusters
+        every dead slot past the live prefix), with store / order /
+        n_live passed as traced arguments so mutations never recompile.
         """
+        if self.streaming:
+            if self._uniform_fn is None:
+                off, rw = self.example_offset, self.row_width
+
+                def draw(key, store, order0, n_live, mm):
+                    u = jax.random.randint(key, (mm,), 0, n_live)
+                    idx = order0[u]
+                    rows = jnp.take(store, idx, axis=0)[:, :rw]
+                    return {
+                        "tokens": rows[:, :-1],
+                        "targets": rows[:, 1:],
+                        "loss_weights": jnp.ones((mm,), jnp.float32),
+                        "example_ids": idx + off,
+                    }, idx
+                self._uniform_fn = jax.jit(draw, static_argnums=4)
+            batch, idx = self._uniform_fn(sub, self.store,
+                                          self.index.order[0],
+                                          self._n_live_dev, m)
+            self._mark_dirty(idx)
+            return batch
         if self._uniform_fn is None:
             n, off, rw = self.n, self.example_offset, self.row_width
 
@@ -829,13 +1115,35 @@ class LSHSampledPipeline:
         (its ``__init__`` build is bitwise what the rebuild would
         produce) — the elastic restore path uses this to avoid paying
         the corpus embed twice.
+
+        Streaming: the mutation log is truncated to entries with
+        step <= ``step`` and replayed MEMBERSHIP-ONLY (store writes,
+        window evictions, growth/compaction — all re-derived
+        deterministically, no embeds), then the index is rebuilt
+        canonically over the replayed membership; a non-empty replay
+        forces ``rebuild=True``.  Two restores at the same step are
+        bitwise identical — streaming included.
         """
         self.finalize()
+        if self.streaming:
+            kept = [e for e in self._mutlog if e["step"] <= step]
+            self._init_membership(self.tokens)
+            for e in kept:
+                if e["op"] == "append":
+                    self._apply_append(e["tokens"], with_index=False)
+                else:
+                    self._apply_evict(
+                        np.asarray(e["ids"], np.int64)
+                        - self.example_offset, with_index=False)
+            self._mutlog = kept
+            self._touched = set()
+            if kept:
+                rebuild = True
         re = self.cfg.refresh_every
         self._step = step
         self._refresh_count = (
             0 if re <= 0 or step < 1 else (step - 1) // re)
-        self._dirty = jnp.zeros((self.n,), jnp.bool_)
+        self._dirty = jnp.zeros((self.capacity,), jnp.bool_)
         # a restored pipeline starts HEALTHY: the rebuild below (or the
         # constructor build it mirrors) is a fresh, verified index, and
         # determinism requires replays to be state-independent.
@@ -843,10 +1151,265 @@ class LSHSampledPipeline:
         self._refresh_snapshot = None
         if rebuild:
             self.features = self._compute_features()
-            self.index = build_index(
-                self._build_key, self.features, self.lsh,
+            self.index = mutate_index(
+                None,
+                IndexMutation("build", key=self._build_key,
+                              x_aug=self.features,
+                              live_mask=self._live_dev),
+                self.lsh,
                 use_pallas=self.cfg.use_pallas,
                 interpret=self.cfg.interpret)
+
+    # -- index mutations (the unified entry point) ---------------------------
+
+    def _require_streaming(self, what: str):
+        if not self.streaming:
+            raise ValueError(
+                f"{what} requires streaming=True (or window=) in "
+                f"LSHPipelineConfig")
+
+    def mutate(self, mutation: IndexMutation):
+        """THE index-mutation entry point (explicit op — see
+        ``core.tables.IndexMutation``):
+
+          * ``append`` — ``tokens`` (B, S+1): add rows (streaming);
+            returns the assigned global example ids.
+          * ``evict`` — ``ids``: remove rows by global id (streaming).
+          * ``delta`` — refresh only visited + drift rows (the
+            ``refresh(full=False)`` path).
+          * ``refresh`` — full warm refresh (``refresh(full=True)``).
+          * ``build`` — canonical rebuild: re-embed everything and
+            fresh-argsort from the build key (what ``restore_at`` and
+            fault recovery do); discards any in-flight async refresh.
+
+        ``build``/``refresh``/``delta`` run synchronously here; the
+        periodic schedule (``refresh_every`` / ``refresh_async``) is
+        unchanged and composes with mutations as described in the
+        module docstring.
+        """
+        op = mutation.op
+        if op == "append":
+            if mutation.tokens is None:
+                raise ValueError("mutate(append) needs tokens=")
+            return self.append_rows(mutation.tokens)
+        if op == "evict":
+            if mutation.ids is None:
+                raise ValueError("mutate(evict) needs ids=")
+            return self.evict_rows(np.asarray(mutation.ids))
+        if op == "refresh":
+            return self.refresh(full=True)
+        if op == "delta":
+            return self.refresh(full=False)
+        # op == "build" (IndexMutation validates the op set)
+        return self._canonical_rebuild()
+
+    def append_rows(self, tokens) -> np.ndarray:
+        """Append token rows to the live window (streaming only).
+
+        Embeds the new rows at the pinned family scale, hashes them and
+        tie-stably merges them into every table; with ``window=`` set,
+        the oldest live rows are auto-evicted first.  Logged for
+        checkpoint replay.  Returns the assigned global example ids
+        (slot + ``example_offset``; slots are reused after eviction).
+        """
+        self._require_streaming("append_rows")
+        tokens = np.asarray(tokens, np.int32)
+        slots = self._apply_append(tokens, with_index=True)
+        self._mutlog.append({"op": "append", "step": self._step,
+                             "tokens": tokens.copy()})
+        return slots + self.example_offset
+
+    def evict_rows(self, ids) -> None:
+        """Evict rows by global example id (streaming only): a sentinel
+        merge pushes their slots past every table's live prefix.  Logged
+        for checkpoint replay."""
+        self._require_streaming("evict_rows")
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        self._apply_evict(ids - self.example_offset, with_index=True)
+        self._mutlog.append({"op": "evict", "step": self._step,
+                             "ids": ids.copy()})
+
+    def _apply_append(self, tokens: np.ndarray,
+                      with_index: bool) -> np.ndarray:
+        """Membership append (+ index merge when ``with_index``) —
+        shared verbatim by the live path and the restore replay, so
+        window evictions, growth and slot assignment re-derive
+        identically."""
+        if tokens.ndim != 2 or tokens.shape[1] != self.row_width:
+            raise ValueError(
+                f"append tokens must be (B, {self.row_width}), "
+                f"got {tokens.shape}")
+        b = tokens.shape[0]
+        if b < 1:
+            raise ValueError("append needs at least one row")
+        w = self.cfg.window
+        if w is not None:
+            if b > w:
+                raise ValueError(
+                    f"append batch {b} exceeds window {w}")
+            over = self._n_live + b - w
+            if over > 0:
+                live_slots = np.flatnonzero(self._live_np)
+                oldest = live_slots[np.argsort(
+                    self._arrival[live_slots], kind="stable")][:over]
+                self._apply_evict(oldest, with_index=with_index)
+        if self._n_live + b > self.capacity:
+            self._grow(_next_pow2(self._n_live + b), with_index)
+        self._free.sort()
+        slots = np.asarray(self._free[:b], np.int64)
+        del self._free[:b]
+        jslots = jnp.asarray(slots, jnp.int32)
+        rows = jnp.pad(jnp.asarray(tokens, jnp.int32),
+                       ((0, 0), (0, self.store.shape[1] - self.row_width)))
+        self.store = self.store.at[jslots].set(rows)
+        self._live_np[slots] = True
+        self._arrival[slots] = np.arange(self._next_arrival,
+                                         self._next_arrival + b)
+        self._next_arrival += b
+        self._n_live += b
+        self._sync_live_dev()
+        if with_index:
+            feats = self._embed_rows(jslots, self.params,
+                                     scale=self._feat_scale)
+            codes = hash_points(feats, self.index.projections, self.lsh,
+                                use_pallas=self.cfg.use_pallas,
+                                interpret=self.cfg.interpret)
+            self.features = self.features.at[jslots].set(feats)
+            ids_p, codes_p = _pad_mutation(slots.astype(np.int32), codes,
+                                           self.capacity)
+            self.index = mutate_index(
+                self.index,
+                IndexMutation("delta", ids=ids_p, codes=codes_p))
+            if self._refresh_thread is not None:
+                self._touched.update(int(s) for s in slots)
+        return slots
+
+    def _apply_evict(self, slots: np.ndarray, with_index: bool):
+        """Membership evict (+ sentinel merge when ``with_index``) —
+        shared by the live path, window auto-evict and restore replay."""
+        slots = np.asarray(slots, np.int64).reshape(-1)
+        if slots.size == 0:
+            return
+        if np.unique(slots).size != slots.size:
+            raise ValueError("duplicate ids in evict batch")
+        if ((slots < 0) | (slots >= self.capacity)).any() or \
+                not self._live_np[slots].all():
+            raise ValueError("evict of unknown or already-dead rows")
+        self._live_np[slots] = False
+        self._arrival[slots] = -1
+        self._free.extend(int(s) for s in slots)
+        self._n_live -= int(slots.size)
+        self._sync_live_dev()
+        if with_index:
+            size = min(_dirty_bucket(int(slots.size)), self.capacity)
+            ids_p = np.concatenate(
+                [slots, np.full((size - slots.size,), slots[0])])
+            self.index = mutate_index(
+                self.index,
+                IndexMutation("evict",
+                              ids=jnp.asarray(ids_p, jnp.int32)))
+            if self._refresh_thread is not None:
+                self._touched.update(int(s) for s in slots)
+        self._maybe_compact(with_index)
+
+    def _grow(self, new_cap: int, with_index: bool):
+        """Grow every capacity-sized buffer to ``new_cap`` (a power of
+        two) — one recompile point per doubling, never per append."""
+        pad = new_cap - self.capacity
+        self.store = jnp.pad(self.store, ((0, pad), (0, 0)))
+        self._live_np = np.concatenate(
+            [self._live_np, np.zeros((pad,), np.bool_)])
+        self._arrival = np.concatenate(
+            [self._arrival, np.full((pad,), -1, np.int64)])
+        self._free.extend(range(self.capacity, new_cap))
+        if with_index:
+            self.features = jnp.pad(self.features, ((0, pad), (0, 0)))
+            self._dirty = jnp.pad(self._dirty, (0, pad))
+            self.index = grow_index(self.index, new_cap)
+        self.capacity = new_cap
+        self._sync_live_dev()
+
+    def _maybe_compact(self, with_index: bool):
+        """Halve capacity once live occupancy drops to a quarter
+        (hysteresis: grow doubles at full, compact halves at 1/4, so
+        the two never thrash).  Live rows are packed into the prefix in
+        ascending slot order — slot ids CHANGE under compaction — and
+        the index is rebuilt canonically over the packed features."""
+        if not (self._n_live <= self.capacity // 4
+                and self.capacity > self.cfg.min_capacity):
+            return
+        new_cap = self.capacity // 2
+        while (self._n_live <= new_cap // 4
+               and new_cap > self.cfg.min_capacity):
+            new_cap //= 2
+        new_cap = max(new_cap, self.cfg.min_capacity)
+        live_slots = np.flatnonzero(self._live_np)
+        dead_slots = np.flatnonzero(~self._live_np)
+        perm = np.concatenate([live_slots, dead_slots])[:new_cap]
+        jperm = jnp.asarray(perm, jnp.int32)
+        nl = int(live_slots.size)
+        self.store = jnp.take(self.store, jperm, axis=0)
+        new_live = np.zeros((new_cap,), np.bool_)
+        new_live[:nl] = True
+        new_arrival = np.full((new_cap,), -1, np.int64)
+        new_arrival[:nl] = self._arrival[live_slots]
+        self._live_np, self._arrival = new_live, new_arrival
+        self._free = list(range(nl, new_cap))
+        self.capacity = new_cap
+        self._sync_live_dev()
+        if with_index:
+            self.features = jnp.take(self.features, jperm, axis=0)
+            self._dirty = jnp.logical_and(
+                jnp.take(self._dirty, jperm), jnp.asarray(new_live))
+            self._canonical_rebuild_index()
+
+    def _canonical_rebuild_index(self):
+        self.index = mutate_index(
+            None,
+            IndexMutation("build", key=self._build_key,
+                          x_aug=self.features, live_mask=self._live_dev),
+            self.lsh,
+            use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret)
+
+    def _canonical_rebuild(self) -> bool:
+        """``mutate(build)``: re-embed everything + fresh argsort from
+        the build key (the restore/recovery construction)."""
+        self._discard_refresh()
+        self.features = self._compute_features()
+        self._canonical_rebuild_index()
+        self._dirty = jnp.zeros((self.capacity,), jnp.bool_)
+        return True
+
+    def mutation_log(self) -> list:
+        """The explicit-mutation log as JSON-serialisable entries (what
+        the trainer checkpoints; ``load_mutation_log`` + ``restore_at``
+        replay it)."""
+        out = []
+        for e in self._mutlog:
+            if e["op"] == "append":
+                out.append({"op": "append", "step": int(e["step"]),
+                            "tokens": np.asarray(e["tokens"],
+                                                 np.int32).tolist()})
+            else:
+                out.append({"op": "evict", "step": int(e["step"]),
+                            "ids": [int(i) for i in e["ids"]]})
+        return out
+
+    def load_mutation_log(self, entries):
+        """Install a checkpointed mutation log; the next ``restore_at``
+        replays it (membership-only) before the canonical rebuild."""
+        self._require_streaming("load_mutation_log")
+        norm = []
+        for e in entries:
+            if e["op"] == "append":
+                norm.append({"op": "append", "step": int(e["step"]),
+                             "tokens": np.asarray(e["tokens"], np.int32)})
+            elif e["op"] == "evict":
+                norm.append({"op": "evict", "step": int(e["step"]),
+                             "ids": np.asarray(e["ids"], np.int64)})
+            else:
+                raise ValueError(f"unknown mutation-log op {e['op']!r}")
+        self._mutlog = norm
 
     def _query(self) -> jax.Array:
         q = self.query_fn(self.params) if self._params_aware \
@@ -894,6 +1457,10 @@ class LSHSampledPipeline:
         """Draw one batch — a single jitted on-device program; ``query``
         (already normalised) lets a sharded owner compute the shared
         global query once for all shards."""
+        if self.streaming and self._n_live == 0:
+            raise RuntimeError(
+                "cannot draw a batch from an empty streaming window "
+                "(append rows first)")
         sub = self._tick()
         if self.health.state == UNIFORM_FALLBACK:
             return self._uniform_batch(sub, self.cfg.minibatch)
@@ -905,7 +1472,7 @@ class LSHSampledPipeline:
             p_floor=self.cfg.p_floor,
             normalize=self.cfg.normalize_weights,
             use_pallas=self.cfg.use_pallas, interpret=self.cfg.interpret,
-            row_width=self.row_width)
+            row_width=self.row_width, n_live=self._n_live_dev)
         self._mark_dirty(gb.indices)
         self._accum_stats(gb)
         return {
@@ -924,6 +1491,10 @@ class LSHSampledPipeline:
         (``core.sampler.sample_gather_batched``); each chain still gets
         exact per-sample Algorithm-1 probabilities under its own query.
         """
+        if self.streaming and self._n_live == 0:
+            raise RuntimeError(
+                "cannot draw a batch from an empty streaming window "
+                "(append rows first)")
         sub = self._tick()
         if self.health.state == UNIFORM_FALLBACK:
             c, m = queries.shape[0], self.cfg.minibatch
@@ -939,7 +1510,8 @@ class LSHSampledPipeline:
             normalize=self.cfg.normalize_weights,
             use_pallas=self.cfg.use_pallas,
             interpret=self.cfg.interpret,
-            row_width=self.row_width)                # fields (C, m, ...)
+            row_width=self.row_width,
+            n_live=self._n_live_dev)                 # fields (C, m, ...)
         self._mark_dirty(gb.indices)
         self._accum_stats(gb)
         return [{
@@ -1018,21 +1590,42 @@ class ShardedLSHPipeline:
             raise ValueError(
                 f"minibatch={config.minibatch} must divide by "
                 f"n_shards={n_shards}")
+        if params is None:
+            warnings.warn(_LEGACY_HOOK_MSG, DeprecationWarning,
+                          stacklevel=2)
         self.cfg = config
         self.n = tokens.shape[0]
         self.n_shards = n_shards
         self.mesh = mesh
+        self.streaming = config.streaming
+        shard_window = None
+        if config.streaming:
+            if config.window is not None:
+                if config.window % n_shards != 0:
+                    raise ValueError(
+                        f"window={config.window} must divide by "
+                        f"n_shards={n_shards}")
+                shard_window = config.window // n_shards
+            if self.n // n_shards + 1 >= _SHARD_STRIDE:
+                raise ValueError(
+                    f"initial shard size {self.n // n_shards + 1} "
+                    f"exceeds the streaming id stride {_SHARD_STRIDE}")
         shard_cfg = dataclasses.replace(
             config, minibatch=config.minibatch // n_shards,
-            normalize_weights=False)
+            normalize_weights=False, window=shard_window)
         self.shards: List[LSHSampledPipeline] = []
         for s in range(n_shards):
             lo, hi = example_shard_bounds(self.n, s, n_shards)
+            # streaming shards address global ids by a fixed per-shard
+            # stride (ids stay disjoint as windows advance); static
+            # shards keep the contiguous initial bounds bit-compatibly.
+            off = s * _SHARD_STRIDE if config.streaming else lo
             self.shards.append(LSHSampledPipeline(
                 jax.random.fold_in(key, s), tokens[lo:hi], feature_fn,
                 query_fn, shard_cfg, feature_batch=feature_batch,
-                params=params, example_offset=lo,
-                store_device=shard_store_device(mesh, s, n_shards)))
+                params=params, example_offset=off,
+                store_device=shard_store_device(mesh, s, n_shards),
+                _warn_legacy=False))
 
     @property
     def params(self):
@@ -1054,6 +1647,82 @@ class ShardedLSHPipeline:
     def refresh(self, full: Optional[bool] = None):
         for p in self.shards:
             p.refresh(full=full)
+
+    # -- index mutations (streaming) -----------------------------------------
+
+    def mutate(self, mutation: IndexMutation):
+        """Unified mutation entry (see ``LSHSampledPipeline.mutate``):
+        ``append``/``evict`` route across shards; the refresh/build ops
+        apply to every shard."""
+        op = mutation.op
+        if op == "append":
+            if mutation.tokens is None:
+                raise ValueError("mutate(append) needs tokens=")
+            return self.append_rows(mutation.tokens)
+        if op == "evict":
+            if mutation.ids is None:
+                raise ValueError("mutate(evict) needs ids=")
+            return self.evict_rows(np.asarray(mutation.ids))
+        return [p.mutate(mutation) for p in self.shards]
+
+    def append_rows(self, tokens) -> np.ndarray:
+        """Append rows across shards (streaming): each incoming row goes
+        to the currently least-live shard (ties to the lowest shard
+        index) — deterministic greedy balancing, so per-shard windows
+        advance together.  Returns global ids in input-row order."""
+        if not self.streaming:
+            raise ValueError(
+                "append_rows requires streaming=True (or window=) in "
+                "LSHPipelineConfig")
+        tokens = np.asarray(tokens, np.int32)
+        if tokens.ndim != 2:
+            raise ValueError(f"append tokens must be 2-D, "
+                             f"got {tokens.shape}")
+        counts = [p.n_live for p in self.shards]
+        owner = np.empty((tokens.shape[0],), np.int64)
+        for i in range(tokens.shape[0]):
+            s = int(np.argmin(counts))
+            owner[i] = s
+            counts[s] += 1
+        gids = np.empty((tokens.shape[0],), np.int64)
+        for s, p in enumerate(self.shards):
+            rows = np.flatnonzero(owner == s)
+            if rows.size:
+                gids[rows] = p.append_rows(tokens[rows])
+        return gids
+
+    def evict_rows(self, ids) -> None:
+        """Evict rows by global id (streaming): ids route to their
+        owning shard by ``gid // stride``."""
+        if not self.streaming:
+            raise ValueError(
+                "evict_rows requires streaming=True (or window=) in "
+                "LSHPipelineConfig")
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        owner = ids // _SHARD_STRIDE
+        if ((owner < 0) | (owner >= self.n_shards)).any():
+            raise ValueError("evict ids outside any shard's id range")
+        for s, p in enumerate(self.shards):
+            mine = ids[owner == s]
+            if mine.size:
+                p.evict_rows(mine)
+
+    def mutation_log(self) -> dict:
+        """Per-shard mutation logs + the shard count they were routed
+        under (replay is only valid on the same ``n_shards``)."""
+        return {"n_shards": self.n_shards,
+                "shards": [p.mutation_log() for p in self.shards]}
+
+    def load_mutation_log(self, entries: dict):
+        if int(entries.get("n_shards", self.n_shards)) != self.n_shards:
+            raise ValueError(
+                f"mutation log was recorded under n_shards="
+                f"{entries.get('n_shards')} but this pipeline has "
+                f"n_shards={self.n_shards}; streaming elastic reshape "
+                f"is not supported — restore on the recorded shard "
+                f"count")
+        for p, log_s in zip(self.shards, entries["shards"]):
+            p.load_mutation_log(log_s)
 
     def set_fault_injector(self, injector, shard: Optional[int] = None):
         """Install a fault injector on one shard (or all, shard=None)."""
@@ -1124,10 +1793,19 @@ class ShardedLSHPipeline:
         # local 1/(p n_s) -> global S/(p N): each sample stands in for
         # N/S corpus examples under the batch mean.  Scaled per shard on
         # the shard's device, composed, then normalised globally — all
-        # device ops.
-        w = self._compose([
-            b["loss_weights"] * (p.n * self.n_shards / self.n)
-            for p, b in zip(self.shards, subs)])
+        # device ops.  Streaming: n_s and N are the LIVE counts at this
+        # draw (the per-shard weights already carry 1/n_live_s), so the
+        # composition stays exactly unbiased as the windows advance.
+        if self.streaming:
+            total_live = sum(p.n_live for p in self.shards)
+            w = self._compose([
+                b["loss_weights"] * (p.n_live * self.n_shards
+                                     / total_live)
+                for p, b in zip(self.shards, subs)])
+        else:
+            w = self._compose([
+                b["loss_weights"] * (p.n * self.n_shards / self.n)
+                for p, b in zip(self.shards, subs)])
         if self.cfg.normalize_weights:
             w = w / jnp.maximum(jnp.mean(w), 1e-30)
         batch["loss_weights"] = w.astype(jnp.float32)

@@ -7,10 +7,12 @@ from .optimizers import (  # noqa: F401
     Adam8bit,
     Adam8bitState,
     AdamState,
+    OptaxAdapter,
     QTensor,
     SGD,
     SGDState,
     apply_updates,
+    from_optax,
     make_optimizer,
 )
 from . import compression, schedules  # noqa: F401

@@ -25,6 +25,11 @@ from typing import Any, Callable, NamedTuple, Optional, Union
 import jax
 import jax.numpy as jnp
 
+try:  # optional — everything here works without optax installed
+    import optax as _optax
+except ImportError:  # pragma: no cover - exercised on optax-free installs
+    _optax = None
+
 Schedule = Union[float, Callable[[jax.Array], jax.Array]]
 
 
@@ -34,12 +39,15 @@ def make_optimizer(name: str, lr: Optional[Schedule] = None, **kwargs):
     Args:
       name: one of ``sgd`` (plain), ``momentum`` (SGD with heavy-ball
         momentum 0.9), ``adagrad``, ``adam``, ``adamw``, ``adam8bit``,
-        ``adafactor``.
+        ``adafactor`` — or ``optax:<name>`` to wrap any optax
+        constructor (e.g. ``optax:adam``, ``optax:lion``) behind the
+        same interface via :class:`OptaxAdapter`.
       lr: learning rate or schedule; per-name defaults when omitted
-        (3e-2 for sgd/momentum/adagrad, 3e-3 for the Adam family and
-        Adafactor).
+        (3e-2 for sgd/momentum/adagrad, 3e-3 for the Adam family,
+        Adafactor, and ``optax:*``).
       **kwargs: forwarded to the optimiser dataclass (e.g. ``b1``,
-        ``eps``, ``weight_decay``).
+        ``eps``, ``weight_decay``) or, for ``optax:*`` names, to the
+        optax constructor.
 
     Returns:
       A frozen optimiser dataclass (hashable, jit-static).  All of
@@ -49,6 +57,8 @@ def make_optimizer(name: str, lr: Optional[Schedule] = None, **kwargs):
       (see ``repro.train.trainer``).
     """
     key = name.lower()
+    if key.startswith("optax:"):
+        return _make_optax(key[len("optax:"):], lr, **kwargs)
     makers = {
         "sgd": lambda lr, **kw: SGD(lr=3e-2 if lr is None else lr, **kw),
         "momentum": lambda lr, **kw: SGD(
@@ -75,6 +85,61 @@ def _lr_at(lr: Schedule, step: jax.Array) -> jax.Array:
 
 def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+# ---------------------------------------------------------------------------
+# Optax compatibility
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(eq=False)
+class OptaxAdapter:
+    """Wrap an optax ``GradientTransformation`` behind this module's
+    interface.
+
+    The conventions already line up — ``tx.update(grads, state, params)``
+    returns additive updates — so the adapter is a passthrough.  What it
+    adds is *hashability*: optax transforms are NamedTuples of closures
+    and compare/hash by content, which breaks jit-static caching.  The
+    adapter hashes by identity (``eq=False`` keeps ``object.__hash__``),
+    so reusing one adapter instance reuses compiled trainer steps, same
+    as the built-in frozen dataclasses.
+    """
+
+    tx: Any          # optax.GradientTransformation (duck-typed)
+    name: str = "optax"
+
+    def __post_init__(self):
+        if not (hasattr(self.tx, "init") and hasattr(self.tx, "update")):
+            raise TypeError(
+                "OptaxAdapter needs an optax-style GradientTransformation "
+                f"with .init/.update, got {type(self.tx).__name__}")
+
+    def init(self, params):
+        return self.tx.init(params)
+
+    def update(self, grads, state, params=None):
+        return self.tx.update(grads, state, params)
+
+
+def from_optax(tx, name: str = "optax") -> OptaxAdapter:
+    """Adapt any optax ``GradientTransformation`` (or chain) for use
+    everywhere the built-in optimisers go — ``Trainer``, LGD sampling,
+    checkpointing (optax states are pytrees of arrays, which the
+    checkpoint format already handles)."""
+    return OptaxAdapter(tx, name)
+
+
+def _make_optax(ctor_name: str, lr: Optional[Schedule], **kwargs):
+    if _optax is None:
+        raise ImportError(
+            f"optimizer 'optax:{ctor_name}' requires optax, which is not "
+            "installed; use a built-in name instead")
+    ctor = getattr(_optax, ctor_name, None)
+    if ctor is None or not callable(ctor):
+        raise ValueError(f"optax has no optimizer constructor {ctor_name!r}")
+    lr = 3e-3 if lr is None else lr
+    return from_optax(ctor(learning_rate=lr, **kwargs),
+                      name=f"optax:{ctor_name}")
 
 
 # ---------------------------------------------------------------------------

@@ -65,12 +65,26 @@ def _sanitize(p: str) -> str:
     return re.sub(r"[^\w./-]", "_", p).replace("/", "__")
 
 
+def _json_default(o):
+    """np scalars/arrays in ``extra`` (e.g. a streaming pipeline's
+    mutation log assembled from np ints) serialise as their Python
+    equivalents instead of raising."""
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON serialisable: {type(o)!r}")
+
+
 def _manifest_digest(manifest: dict) -> str:
     """SHA-256 over the canonical JSON of everything but the checksum
     field itself — a flipped byte anywhere in the manifest (paths, crcs,
     shapes, extra) changes this digest."""
     body = {k: v for k, v in manifest.items() if k != "checksum"}
-    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"),
+                      default=_json_default)
     return hashlib.sha256(blob.encode()).hexdigest()
 
 
@@ -103,7 +117,7 @@ def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None):
     manifest["checksum"] = _manifest_digest(manifest)
     np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+        json.dump(manifest, f, default=_json_default)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)

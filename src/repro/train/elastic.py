@@ -70,6 +70,7 @@ def rebuild_sharded_pipeline(
     mesh=None,
     params: Any = None,
     feature_batch: int = 512,
+    mutation_log: Any = None,
 ):
     """Reshard-on-restore for the LGD pipeline: rebuild per-shard indexes.
 
@@ -81,6 +82,14 @@ def rebuild_sharded_pipeline(
     semantics (the pre-failure features were at most one refresh period
     fresher).  Calling this twice with the same arguments yields
     bitwise-identical indexes and batch sequences.
+
+    ``mutation_log``: a streaming pipeline's checkpointed append/evict
+    log (checkpoint ``extra["mutation_log"]``); replayed by
+    ``restore_at`` so the restored windows hold the checkpointed
+    membership.  Streaming logs record their shard routing, so they
+    restore only onto the SAME ``n_shards`` (the pipeline raises
+    otherwise); ``tokens`` must be the original construction-time
+    corpus, not the mutated window.
     """
     from repro.data.lsh_pipeline import ShardedLSHPipeline
 
@@ -89,9 +98,13 @@ def rebuild_sharded_pipeline(
     pipe = ShardedLSHPipeline(
         key, tokens, feature_fn, query_fn, config, n_shards=n_shards,
         feature_batch=feature_batch, params=params, mesh=mesh)
+    if mutation_log is not None:
+        pipe.load_mutation_log(mutation_log)
     # the constructor just built every index from the restored params
     # and build keys — bitwise what restore_at would rebuild — so only
     # the counters need rewinding (skips a second O(N) corpus embed).
+    # Shards whose replayed mutation log is non-empty rebuild anyway
+    # (restore_at forces it: replayed membership != constructor state).
     pipe.restore_at(step, rebuild=False)
     return pipe
 

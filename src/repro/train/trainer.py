@@ -274,9 +274,18 @@ class Trainer:
     def save(self):
         if not self.tcfg.ckpt_dir:
             return
+        extra = {"step": self.step}
+        if self._sampler is not None and \
+                getattr(self._sampler, "streaming", False) and \
+                hasattr(self._sampler, "mutation_log"):
+            # streaming pipelines: the explicit append/evict log rides
+            # in the manifest so a restore can replay membership and
+            # keep restored-at-step bit-determinism (lsh_pipeline
+            # module docstring, STREAMING CORPORA).
+            extra["mutation_log"] = self._sampler.mutation_log()
         self._ckpt.save(
             self.tcfg.ckpt_dir, self.step, self._state_tree(),
-            extra={"step": self.step})
+            extra=extra)
         ckpt.keep_last(self.tcfg.ckpt_dir, self.tcfg.keep_ckpts)
 
     def restore(self, step: int):
@@ -296,6 +305,11 @@ class Trainer:
             # and bit-deterministic across restores.
             if hasattr(self._sampler, "set_params"):
                 self._sampler.set_params(self.params)
+            if "mutation_log" in extra and \
+                    hasattr(self._sampler, "load_mutation_log"):
+                # restore the streaming membership history first;
+                # restore_at replays it before the canonical rebuild.
+                self._sampler.load_mutation_log(extra["mutation_log"])
             self._sampler.restore_at(self.step)
         else:
             # deterministic data resume: skip already-consumed batches

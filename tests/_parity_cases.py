@@ -37,14 +37,14 @@ def _feature_fn(tokens: jax.Array) -> jax.Array:
 
 def sample_case(multiprobe: int):
     """Inputs + outputs of ``sample`` on a dense-SRP index."""
-    from repro.core import LSHParams, build_index, sample
+    from repro.core import IndexMutation, LSHParams, mutate_index, sample
 
     kx, kq, kb, ks = jax.random.split(jax.random.PRNGKey(7), 4)
     x = jax.random.normal(kx, (512, 16))
     x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
     q = jax.random.normal(kq, (16,))
     p = LSHParams(k=6, l=12, dim=16, family="dense")
-    index = build_index(kb, x, p)
+    index = mutate_index(None, IndexMutation("build", key=kb, x_aug=x), p)
     res = sample(ks, index, x, q, p, m=64, multiprobe=multiprobe)
     return {
         "indices": res.indices, "probs": res.probs,
@@ -55,14 +55,14 @@ def sample_case(multiprobe: int):
 
 def quadratic_sample_case(multiprobe: int):
     """Same pin for the quadratic family (refactor covers it too)."""
-    from repro.core import LSHParams, build_index, sample
+    from repro.core import IndexMutation, LSHParams, mutate_index, sample
 
     kx, kq, kb, ks = jax.random.split(jax.random.PRNGKey(11), 4)
     x = jax.random.normal(kx, (256, 10))
     x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
     q = jax.random.normal(kq, (10,))
     p = LSHParams(k=4, l=8, dim=10, family="quadratic")
-    index = build_index(kb, x, p)
+    index = mutate_index(None, IndexMutation("build", key=kb, x_aug=x), p)
     res = sample(ks, index, x, q, p, m=48, multiprobe=multiprobe)
     return {
         "indices": res.indices, "probs": res.probs,
@@ -72,7 +72,8 @@ def quadratic_sample_case(multiprobe: int):
 
 def gather_case(multiprobe: int):
     """Inputs + outputs of ``sample_gather_batched`` (device-resident path)."""
-    from repro.core import LSHParams, build_index, sample_gather_batched
+    from repro.core import (IndexMutation, LSHParams, mutate_index,
+                            sample_gather_batched)
 
     kx, kq, kb, ks, kt = jax.random.split(jax.random.PRNGKey(13), 5)
     n, d, s = 384, 12, 20
@@ -81,7 +82,7 @@ def gather_case(multiprobe: int):
     queries = jax.random.normal(kq, (4, d))
     store = jax.random.randint(kt, (n, s + 1), 0, 101, dtype=jnp.int32)
     p = LSHParams(k=5, l=10, dim=d, family="dense")
-    index = build_index(kb, x, p)
+    index = mutate_index(None, IndexMutation("build", key=kb, x_aug=x), p)
     gb = sample_gather_batched(ks, index, x, queries, store, p, m=8,
                                example_offset=17, multiprobe=multiprobe)
     return {
@@ -102,9 +103,9 @@ def pipeline_case(multiprobe: int):
     qfix = jax.random.normal(kq, (8,))
 
     pipe = LSHSampledPipeline(
-        kp, tokens, _feature_fn, lambda: qfix,
+        kp, tokens, lambda _p, t: _feature_fn(t), lambda _p: qfix,
         LSHPipelineConfig(k=6, l=8, minibatch=8, refresh_every=0,
-                          multiprobe=multiprobe))
+                          multiprobe=multiprobe), params=())
     queries = jax.random.normal(jax.random.fold_in(kq, 1), (3, 8))
     outs = [pipe.next_batch_multi(queries) for _ in range(2)]
     flat = {}

@@ -14,11 +14,11 @@ import pytest
 
 from repro.core import (
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     bucket_bounds,
     bucket_bounds_batched,
     query_codes,
-    refresh_index,
     sample,
     sample_batched,
     sample_drain,
@@ -32,6 +32,11 @@ from repro.kernels.bucket_probe import (
 from repro.kernels.simhash import simhash_codes_ref
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 def _unit_rows(key, n, d):
@@ -100,8 +105,8 @@ class TestIndexFastPath:
     def test_build_index_pallas_parity(self, family):
         p = LSHParams(k=5, l=10, dim=24, family=family)
         x = _unit_rows(jax.random.PRNGKey(1), 300, 24)   # ragged N
-        ref = build_index(jax.random.PRNGKey(2), x, p, use_pallas=False)
-        fused = build_index(jax.random.PRNGKey(2), x, p, use_pallas=True,
+        ref = _build_index(jax.random.PRNGKey(2), x, p, use_pallas=False)
+        fused = _build_index(jax.random.PRNGKey(2), x, p, use_pallas=True,
                             interpret=True)
         np.testing.assert_array_equal(np.asarray(ref.sorted_codes),
                                       np.asarray(fused.sorted_codes))
@@ -114,12 +119,14 @@ class TestIndexFastPath:
         bucket *membership* (order within ties may legally differ)."""
         p = LSHParams(k=4, l=6, dim=12, family="dense")
         x0 = _unit_rows(jax.random.PRNGKey(3), 200, 12)
-        index = build_index(jax.random.PRNGKey(4), x0, p)
+        index = _build_index(jax.random.PRNGKey(4), x0, p)
         # drift the points slightly, as between periodic refreshes
         x1 = x0 + 0.05 * jax.random.normal(jax.random.PRNGKey(5), x0.shape)
         x1 = x1 / jnp.linalg.norm(x1, axis=-1, keepdims=True)
-        warm = refresh_index(None, index, x1, p, warm_start=True)
-        cold = refresh_index(None, index, x1, p, warm_start=False)
+        warm = mutate_index(index, IndexMutation(
+            "refresh", x_aug=x1, warm_start=True), p)
+        cold = mutate_index(index, IndexMutation(
+            "refresh", x_aug=x1, warm_start=False), p)
         np.testing.assert_array_equal(np.asarray(warm.sorted_codes),
                                       np.asarray(cold.sorted_codes))
         for t in range(p.l):
@@ -135,8 +142,9 @@ class TestIndexFastPath:
         (the double-buffer property: unchanged codes keep their slots)."""
         p = LSHParams(k=5, l=8, dim=10, family="sparse")
         x = _unit_rows(jax.random.PRNGKey(6), 128, 10)
-        index = build_index(jax.random.PRNGKey(7), x, p)
-        again = refresh_index(None, index, x, p, warm_start=True)
+        index = _build_index(jax.random.PRNGKey(7), x, p)
+        again = mutate_index(index, IndexMutation(
+            "refresh", x_aug=x, warm_start=True), p)
         np.testing.assert_array_equal(np.asarray(index.order),
                                       np.asarray(again.order))
         np.testing.assert_array_equal(np.asarray(index.sorted_codes),
@@ -147,7 +155,7 @@ class TestSamplerFastPath:
     def _setup(self, n=512, d=12, k=4, l=16, family="dense"):
         p = LSHParams(k=k, l=l, dim=d, family=family)
         x = _unit_rows(jax.random.PRNGKey(8), n, d)
-        index = build_index(jax.random.PRNGKey(9), x, p)
+        index = _build_index(jax.random.PRNGKey(9), x, p)
         return index, x, p
 
     @pytest.mark.parametrize("family", ["dense", "quadratic"])
@@ -235,13 +243,14 @@ class TestSamplerFastPath:
             np.int32)
         embed = jax.random.normal(jax.random.PRNGKey(20), (50, dim))
 
-        def feature_fn(chunk):            # deterministic toy embedding
+        def feature_fn(_p, chunk):        # deterministic toy embedding
             return jnp.mean(embed[chunk], axis=1)
 
         pipe = LSHSampledPipeline(
             jax.random.PRNGKey(21), tokens, jax.jit(feature_fn),
-            lambda: jnp.ones((dim,)),
-            LSHPipelineConfig(k=4, l=6, minibatch=5, refresh_every=2))
+            lambda _p: jnp.ones((dim,)),
+            LSHPipelineConfig(k=4, l=6, minibatch=5, refresh_every=2),
+            params=())
         single = pipe.next_batch()
         assert single["tokens"].shape == (5, seq - 1)
         queries = jax.random.normal(jax.random.PRNGKey(22), (3, dim))

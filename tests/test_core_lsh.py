@@ -12,7 +12,8 @@ except ImportError:  # container has no hypothesis wheel; use the shim
 from repro.core import (
     LGDProblem,
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     bucket_bounds,
     collision_probability,
     collision_probability_quadratic,
@@ -21,8 +22,6 @@ from repro.core import (
     hash_points,
     make_projections,
     query_codes,
-    refresh_index,
-    refresh_index_delta,
     regression_query,
     sample,
     sample_drain,
@@ -31,6 +30,11 @@ from repro.core.simhash import _pack_bits
 
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 def _unit_rows(key, n, d):
@@ -121,7 +125,7 @@ class TestIndex:
     def _build(self, n=256, d=10, k=4, l=8, family="dense"):
         p = LSHParams(k=k, l=l, dim=d, family=family)
         x = _unit_rows(jax.random.PRNGKey(5), n, d)
-        return build_index(jax.random.PRNGKey(6), x, p), x, p
+        return _build_index(jax.random.PRNGKey(6), x, p), x, p
 
     def test_order_is_permutation(self):
         index, _, _ = self._build()
@@ -161,16 +165,18 @@ class TestDeltaRefresh:
     def _setup(self, n=257, d=16, k=4, l=8):
         p = LSHParams(k=k, l=l, dim=d, family="dense")
         x = _unit_rows(jax.random.PRNGKey(11), n, d)
-        index = build_index(jax.random.PRNGKey(12), x, p)
+        index = _build_index(jax.random.PRNGKey(12), x, p)
         x2 = _unit_rows(jax.random.PRNGKey(13), n, d)
         return index, x, x2, p
 
     def test_all_dirty_bitwise_equals_full_warm_start(self):
         index, _, x2, p = self._setup()
-        full = refresh_index(KEY, index, x2, p, use_pallas=False)
+        full = mutate_index(index, IndexMutation("refresh", x_aug=x2),
+                            p, use_pallas=False)
         codes = hash_points(x2, index.projections, p, use_pallas=False)
-        got = refresh_index_delta(
-            index, jnp.arange(x2.shape[0], dtype=jnp.int32), codes)
+        got = mutate_index(index, IndexMutation(
+            "delta", ids=jnp.arange(x2.shape[0], dtype=jnp.int32),
+            codes=codes))
         np.testing.assert_array_equal(np.asarray(full.order),
                                       np.asarray(got.order))
         np.testing.assert_array_equal(np.asarray(full.sorted_codes),
@@ -185,10 +191,13 @@ class TestDeltaRefresh:
         dirty = jnp.concatenate([changed,
                                  jnp.array([3, 3, 17], jnp.int32)])  # pad
         x_mixed = x.at[changed].set(x2[changed])
-        want = refresh_index(KEY, index, x_mixed, p, use_pallas=False)
+        want = mutate_index(index,
+                            IndexMutation("refresh", x_aug=x_mixed),
+                            p, use_pallas=False)
         codes_d = hash_points(x_mixed[dirty], index.projections, p,
                               use_pallas=False)
-        got = refresh_index_delta(index, dirty, codes_d)
+        got = mutate_index(index, IndexMutation(
+            "delta", ids=dirty, codes=codes_d))
         np.testing.assert_array_equal(np.asarray(want.order),
                                       np.asarray(got.order))
         np.testing.assert_array_equal(np.asarray(want.sorted_codes),
@@ -201,7 +210,8 @@ class TestDeltaRefresh:
         dirty = jnp.array([5, 42, 99], jnp.int32)
         codes_d = hash_points(x[dirty], index.projections, p,
                               use_pallas=False)   # same features -> same codes
-        got = refresh_index_delta(index, dirty, codes_d)
+        got = mutate_index(index, IndexMutation(
+            "delta", ids=dirty, codes=codes_d))
         np.testing.assert_array_equal(np.asarray(index.order),
                                       np.asarray(got.order))
         np.testing.assert_array_equal(np.asarray(index.sorted_codes),
@@ -212,7 +222,8 @@ class TestDeltaRefresh:
         dirty = jnp.arange(0, 257, 3, dtype=jnp.int32)
         codes_d = hash_points(x2[dirty], index.projections, p,
                               use_pallas=False)
-        got = refresh_index_delta(index, dirty, codes_d)
+        got = mutate_index(index, IndexMutation(
+            "delta", ids=dirty, codes=codes_d))
         for t in range(p.l):
             assert sorted(np.asarray(got.order[t]).tolist()) == \
                 list(range(257))
@@ -228,7 +239,7 @@ class TestSampler:
     def _setup(self, n=512, d=12, k=4, l=16, family="dense"):
         p = LSHParams(k=k, l=l, dim=d, family=family)
         x = _unit_rows(jax.random.PRNGKey(8), n, d)
-        index = build_index(jax.random.PRNGKey(9), x, p)
+        index = _build_index(jax.random.PRNGKey(9), x, p)
         q = _unit_rows(jax.random.PRNGKey(10), 1, d)[0]
         return index, x, q, p
 
@@ -263,7 +274,7 @@ class TestSampler:
         keys = jax.random.split(jax.random.PRNGKey(15), builds)
 
         def one(key):
-            idx = build_index(key, x, p)
+            idx = _build_index(key, x, p)
             qc = query_codes(idx, q, p)
             lo, hi = bucket_bounds(idx, qc)
             in_bucket = jnp.zeros(n, bool).at[idx.order[0, :]].set(
@@ -316,7 +327,7 @@ class TestSampler:
         n, d = 8, 12
         p = LSHParams(k=3, l=4, dim=d, family="dense")
         x = jnp.tile(_unit_rows(jax.random.PRNGKey(22), 1, d), (n, 1))
-        index = build_index(jax.random.PRNGKey(23), x, p)
+        index = _build_index(jax.random.PRNGKey(23), x, p)
         res = sample_drain(jax.random.PRNGKey(24), index, x, x[0], p, m=8192)
         assert not bool(jnp.any(res.fallback))
         counts = np.bincount(np.asarray(res.indices), minlength=n)
@@ -335,7 +346,7 @@ class TestSampler:
         """Property: any (K, L, m) yields valid probs and indices."""
         p = LSHParams(k=k, l=l, dim=8, family="dense")
         x = _unit_rows(jax.random.PRNGKey(18), 64, 8)
-        index = build_index(jax.random.PRNGKey(19), x, p)
+        index = _build_index(jax.random.PRNGKey(19), x, p)
         q = _unit_rows(jax.random.PRNGKey(20), 1, 8)[0]
         res = sample(jax.random.PRNGKey(21), index, x, q, p, m=m)
         assert res.indices.shape == (m,)

@@ -11,7 +11,8 @@ from repro.core import (
     LGDProblem,
     LGDState,
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     full_loss,
     init,
     lgd_step,
@@ -27,6 +28,11 @@ from repro.optim import SGD, AdaGrad, Adam
 
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 def _regression_data(key, n=1500, d=16, pareto=False):
@@ -60,7 +66,7 @@ class TestUnbiasedness:
 
         def per_build(key):
             kb, ks = jax.random.split(key)
-            index = build_index(kb, x_aug, p)
+            index = _build_index(kb, x_aug, p)
             res = S.sample(ks, index, x_aug, q, p, m=samples_per_build)
             return E.lgd_gradient(
                 squared_loss_grad, theta, xt[res.indices], yt[res.indices],
@@ -98,7 +104,7 @@ class TestVariance:
         x, y = _regression_data(jax.random.PRNGKey(4), n, d, pareto=True)
         xt, yt, x_aug = preprocess_regression(x, y)
         p = LSHParams(k=5, l=100, dim=d + 1, family="quadratic")
-        index = build_index(jax.random.PRNGKey(5), x_aug, p)
+        index = _build_index(jax.random.PRNGKey(5), x_aug, p)
         theta = jnp.zeros(d)
         q = regression_query(theta)
 
@@ -135,7 +141,7 @@ class TestVariance:
         xt, yt, x_aug = preprocess_regression(x, y)
         theta, *_ = jnp.linalg.lstsq(xt, yt)  # warm start at the bulk fit
         p = LSHParams(k=5, l=100, dim=d + 1, family="quadratic")
-        index = build_index(jax.random.PRNGKey(9), x_aug, p)
+        index = _build_index(jax.random.PRNGKey(9), x_aug, p)
         q = regression_query(theta)
         res = S.sample(jax.random.PRNGKey(11), index, x_aug, q, p, m=2048)
         gn = jax.vmap(
@@ -164,7 +170,7 @@ class TestVariance:
         theta_opt, *_ = jnp.linalg.lstsq(xt, yt)
         theta = 0.15 * theta_opt
         p = LSHParams(k=5, l=100, dim=d + 1, family="quadratic")
-        index = build_index(jax.random.PRNGKey(1), x_aug, p)
+        index = _build_index(jax.random.PRNGKey(1), x_aug, p)
         q = regression_query(theta)
         full_grad = jnp.mean(
             jax.vmap(lambda a, b: squared_loss_grad(theta, a, b))(xt, yt), 0

@@ -33,7 +33,8 @@ import repro.core.sampler as S
 from repro.core import (
     LGDProblem,
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     compute_codes,
     exact_inclusion_probability,
     full_loss,
@@ -48,6 +49,11 @@ from repro.core.lgd import preprocess_regression_mips, squared_loss_grad
 from repro.optim import SGD
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -257,7 +263,7 @@ class TestCollisionLaw:
 
         def per_build(key):
             kb, ks = jax.random.split(key)
-            index = build_index(kb, x_aug, p)
+            index = _build_index(kb, x_aug, p)
             res = S.sample(ks, index, x_aug, q, p, m=1000)
             return (jnp.mean(1.0 / (res.probs * n)),
                     jnp.mean(res.n_probes.astype(jnp.float32)))
@@ -326,7 +332,7 @@ class TestMIPSEstimator:
 
         def per_build(key):
             kb, ks = jax.random.split(key)
-            index = build_index(kb, x_aug, p)
+            index = _build_index(kb, x_aug, p)
             res = S.sample(ks, index, x_aug, q, p, m=400)
             return E.lgd_gradient(squared_loss_grad, theta,
                                   xt[res.indices], yt[res.indices], res, n)
@@ -374,7 +380,7 @@ class TestPipelineFamilies:
                                                dtype=jnp.int32))
         qfix = jax.random.normal(kq, (4,))
 
-        def feat(tokens):
+        def feat(_p, tokens):
             t = tokens.astype(jnp.float32)
             base = jnp.stack([jnp.mean(t, 1), jnp.std(t, 1),
                               jnp.mean(jnp.sin(t), 1),
@@ -383,9 +389,9 @@ class TestPipelineFamilies:
 
         from repro.data import LSHPipelineConfig as C
         return LSHSampledPipeline(
-            kp, tokens, feat, lambda: qfix,
+            kp, tokens, feat, lambda _p: qfix,
             C(k=5, l=6, minibatch=8, refresh_every=0, family=family,
-              **cfg_kw))
+              **cfg_kw), params=())
 
     def test_mips_pipeline_dims_and_weights(self):
         pipe = self._pipe("mips")

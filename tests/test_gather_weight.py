@@ -8,7 +8,8 @@ import pytest
 
 from repro.core import (
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     sample,
     sample_batched,
     sample_gather,
@@ -17,6 +18,11 @@ from repro.core import (
 from repro.kernels.gather_weight import gather_weight, gather_weight_ref
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 def _store(n, s, seed=1):
@@ -77,7 +83,7 @@ class TestSampleGather:
         p = LSHParams(k=4, l=8, dim=d, family="dense")
         x = jax.random.normal(jax.random.PRNGKey(4), (n, d))
         x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
-        index = build_index(jax.random.PRNGKey(5), x, p)
+        index = _build_index(jax.random.PRNGKey(5), x, p)
         store = _store(n, s, seed=6)
         return index, x, p, store
 

@@ -27,7 +27,8 @@ from repro.core import (
     LSHParams,
     bucket_bounds_batched,
     bucket_bounds_multi,
-    build_index,
+    IndexMutation,
+    mutate_index,
     probe_masks,
 )
 from repro.core.lgd import preprocess_regression, squared_loss_grad
@@ -39,6 +40,11 @@ from repro.kernels.bucket_probe import (
 )
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 
 def _unit(x):
@@ -104,7 +110,7 @@ class TestMultiProbeKernel:
         """Probe 0 of the multi path == the single-probe bounds."""
         x, qs = _skewed()
         p = LSHParams(k=9, l=5, dim=x.shape[1], family="dense")
-        idx = build_index(jax.random.PRNGKey(1), x, p)
+        idx = _build_index(jax.random.PRNGKey(1), x, p)
         lo1, hi1 = bucket_bounds_batched(idx, qs, p, use_pallas=False)
         lom, him = bucket_bounds_multi(idx, qs, p, probe_masks(9, 4),
                                        use_pallas=False)
@@ -116,7 +122,7 @@ class TestMultiProbeKernel:
         from repro.core.tables import bucket_bounds, query_codes
         x, qs = _skewed(nq=4)
         p = LSHParams(k=8, l=4, dim=x.shape[1], family="dense")
-        idx = build_index(jax.random.PRNGKey(1), x, p)
+        idx = _build_index(jax.random.PRNGKey(1), x, p)
         masks = probe_masks(8, 5)
         lom, him = bucket_bounds_multi(idx, qs, p, masks, use_pallas=False)
         qc = query_codes(idx, qs, p)                      # (B, L)
@@ -134,7 +140,7 @@ class TestMultiProbeKernel:
                              n_train=200, n_test=10, d=12, noise="pareto")
         _, _, x_aug = preprocess_regression(ds.x_train, ds.y_train)
         p = LSHParams(k=6, l=4, dim=x_aug.shape[1], family="quadratic")
-        idx = build_index(jax.random.PRNGKey(1), x_aug, p)
+        idx = _build_index(jax.random.PRNGKey(1), x_aug, p)
         masks = probe_masks(6, 4)
         lom, him = bucket_bounds_multi(idx, x_aug[:3], p, masks,
                                        use_pallas=False)
@@ -148,7 +154,7 @@ class TestMultiProbeSampling:
     def test_multiprobe_zero_bit_identical(self):
         x, qs = _skewed()
         p = LSHParams(k=9, l=5, dim=x.shape[1], family="dense")
-        idx = build_index(jax.random.PRNGKey(1), x, p)
+        idx = _build_index(jax.random.PRNGKey(1), x, p)
         r0 = S.sample(jax.random.PRNGKey(3), idx, x, qs[0], p, m=128)
         r1 = S.sample(jax.random.PRNGKey(3), idx, x, qs[0], p, m=128,
                       multiprobe=0)
@@ -158,7 +164,7 @@ class TestMultiProbeSampling:
     def test_probe_code_semantics(self):
         x, qs = _skewed()
         p = LSHParams(k=16, l=3, dim=x.shape[1], family="dense")
-        idx = build_index(jax.random.PRNGKey(1), x, p)
+        idx = _build_index(jax.random.PRNGKey(1), x, p)
         r = S.sample_batched(jax.random.PRNGKey(4), idx, x, qs, p, m=64,
                              multiprobe=8)
         pc = np.asarray(r.probe_code)
@@ -173,7 +179,7 @@ class TestMultiProbeSampling:
         """The satellite regression test: multi < single, with margin."""
         x, qs = _skewed()
         p = LSHParams(k=16, l=3, dim=x.shape[1], family="dense")
-        idx = build_index(jax.random.PRNGKey(1), x, p)
+        idx = _build_index(jax.random.PRNGKey(1), x, p)
         rates = {}
         for mp in (0, 8):
             r = S.sample_batched(jax.random.PRNGKey(4), idx, x, qs, p,
@@ -241,7 +247,7 @@ class TestMultiProbeSampling:
         def mean_w(mp):
             def per_build(key):
                 kb, ks = jax.random.split(key)
-                idx = build_index(kb, x_aug, p)
+                idx = _build_index(kb, x_aug, p)
                 r = S.sample(ks, idx, x_aug, q, p, m=128, multiprobe=mp)
                 return jnp.mean(1.0 / (r.probs * n))
             keys = jax.random.split(jax.random.PRNGKey(4), 200)
@@ -277,7 +283,7 @@ class TestMultiProbeSampling:
         def rel_err(mp):
             def per_build(key):
                 kb, ks = jax.random.split(key)
-                idx = build_index(kb, x_aug, p)
+                idx = _build_index(kb, x_aug, p)
                 r = S.sample(ks, idx, x_aug, q, p, m=64, multiprobe=mp)
                 return E.lgd_gradient(squared_loss_grad, theta,
                                       xt[r.indices], yt[r.indices], r, n)
@@ -296,9 +302,9 @@ class TestMultiProbeSampling:
 
 class TestPipelineMultiprobe:
     def _pipe(self, multiprobe):
-        # legacy-closure pipeline over a skewed feature geometry: the
-        # feature hook embeds rows by their first token into a tight
-        # cluster; the query sits partially off it -> empty buckets.
+        # skewed feature geometry: the feature hook embeds rows by
+        # their first token into a tight cluster; the query sits
+        # partially off it -> empty buckets.
         n, d, seq, vocab = 192, 24, 12, 64
         c = jax.random.normal(jax.random.PRNGKey(9), (d,))
         table = jnp.asarray(c[None] + 0.55 * jax.random.normal(
@@ -311,9 +317,9 @@ class TestPipelineMultiprobe:
                                 multiprobe=multiprobe)
         return LSHSampledPipeline(
             jax.random.PRNGKey(2), tokens,
-            lambda t: table[t[:, 0]],
-            lambda: qv,
-            cfg)
+            lambda _p, t: table[t[:, 0]],
+            lambda _p: qv,
+            cfg, params=())
 
     def test_config_validation(self):
         with pytest.raises(ValueError):

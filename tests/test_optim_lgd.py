@@ -27,7 +27,8 @@ import repro.core.sampler as S
 from repro.core import (
     LGDProblem,
     LSHParams,
-    build_index,
+    IndexMutation,
+    mutate_index,
     full_loss,
     init as lgd_init,
     lgd_step,
@@ -45,6 +46,11 @@ from repro.optim import SGD, AdaGrad, Adam, make_optimizer
 from repro.train import Trainer, TrainerConfig
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _build_index(key, x_aug, p, **kw):
+    return mutate_index(
+        None, IndexMutation("build", key=key, x_aug=x_aug), p, **kw)
 
 CFG = ModelConfig(
     name="lm-optim-test", n_layers=2, d_model=32, n_heads=2, n_kv_heads=1,
@@ -177,7 +183,7 @@ class TestMomentUnbiasedness:
 
         def m1_of_draw(key):
             kb, ks = jax.random.split(key)
-            index = build_index(kb, x_aug, p)
+            index = _build_index(kb, x_aug, p)
             r = S.sample(ks, index, x_aug, q, p, m=64, multiprobe=2)
             g = E.lgd_gradient(squared_loss_grad, theta, xt[r.indices],
                                yt[r.indices], r, n)
@@ -226,3 +232,56 @@ class TestEndToEnd:
         loss1 = float(full_loss(state.theta, xt, yt, prob))
         assert np.isfinite(loss1) and loss1 < loss0, (
             f"{name}: {loss0} -> {loss1}")
+
+
+class TestOptaxAdapter:
+    """``optax:<ctor>`` routing through make_optimizer and numerical
+    parity of the adapted optax.adam against the built-in Adam (same
+    additive-updates convention, so the adapter is a passthrough)."""
+
+    optax = pytest.importorskip("optax")
+
+    def test_routing_and_errors(self):
+        from repro.optim import OptaxAdapter, from_optax
+
+        opt = make_optimizer("optax:adam", lr=1e-3)
+        assert isinstance(opt, OptaxAdapter)
+        assert opt.name == "optax:adam"
+        assert isinstance(from_optax(self.optax.sgd(1e-2)), OptaxAdapter)
+        with pytest.raises(ValueError):
+            make_optimizer("optax:sophia")
+        with pytest.raises(TypeError):
+            from_optax(object())
+
+    def test_adam_parity_with_builtin(self):
+        from repro.optim import apply_updates
+
+        params = {
+            "w": jax.random.normal(jax.random.PRNGKey(1), (8, 4)),
+            "b": jnp.zeros((4,)),
+        }
+        builtin = Adam(lr=3e-3)
+        adapted = make_optimizer("optax:adam", lr=3e-3)
+        pa, pb = params, params
+        sa, sb = builtin.init(pa), adapted.init(pb)
+        for i in range(20):
+            g = jax.tree_util.tree_map(
+                lambda p, i=i: p * 0.1 + jax.random.normal(
+                    jax.random.fold_in(KEY, i), p.shape) * 0.01, pa)
+            ua, sa = builtin.update(g, sa, pa)
+            ub, sb = adapted.update(g, sb, pb)
+            pa = apply_updates(pa, ua)
+            pb = apply_updates(pb, ub)
+        for ka in pa:
+            np.testing.assert_allclose(
+                np.asarray(pa[ka]), np.asarray(pb[ka]),
+                atol=1e-5, rtol=1e-5)
+
+    def test_trains_under_trainer(self):
+        params = init_params(jax.random.PRNGKey(2), CFG)
+        pipe = _pipeline(params)
+        tr = Trainer(CFG, params, make_optimizer("optax:adamw", 1e-3),
+                     tcfg=TrainerConfig(log_every=100), sampler=pipe)
+        out = tr.run(4)
+        assert all(np.isfinite(out["losses"]))
+        tr.finalize()

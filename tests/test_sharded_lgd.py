@@ -397,11 +397,13 @@ class TestTrainerSamplerHook:
         the value, it must not flip the hook calling convention."""
         from repro.data import LSHSampledPipeline
         cfg = _lm_cfg()
-        pipe = LSHSampledPipeline(
-            jax.random.PRNGKey(13), _tokens(n=64, seq=9),
-            lambda chunk: jnp.mean(EMBED[chunk], axis=1),   # legacy
-            lambda: jnp.ones((DIM,)),                        # legacy
-            LSHPipelineConfig(k=4, l=8, minibatch=8, refresh_every=4))
+        with pytest.warns(DeprecationWarning, match="legacy closure"):
+            pipe = LSHSampledPipeline(
+                jax.random.PRNGKey(13), _tokens(n=64, seq=9),
+                lambda chunk: jnp.mean(EMBED[chunk], axis=1),   # legacy
+                lambda: jnp.ones((DIM,)),                        # legacy
+                LSHPipelineConfig(k=4, l=8, minibatch=8,
+                                  refresh_every=4))
         tr = Trainer(cfg, init_params(KEY, cfg), Adam(lr=1e-2),
                      tcfg=TrainerConfig(log_every=100), sampler=pipe)
         out = tr.run(6)                    # crosses a refresh boundary

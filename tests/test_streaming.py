@@ -1,0 +1,484 @@
+"""Streaming corpora: the unified index-mutation API under live traffic.
+
+Pins the contracts the streaming tentpole promises:
+
+  * append/evict parity — a mutated index equals a fresh build over the
+    same membership up to the tie-stable order contract (identical
+    sorted live codes, identical per-(table, code) bucket membership);
+  * unbiasedness over the moving window — E[w·v] tracks the live-window
+    mean as rows enter and leave (every 1/(p·N) weight uses live N), in
+    the calibrated k=3/l=64 regime of test_sharded_lgd;
+  * capacity management — powers-of-2 growth and quarter-occupancy
+    compaction, with the live-prefix invariant at every step;
+  * checkpoint replay — restore_at(t) truncates + replays the mutation
+    log; two restores at the same step draw bit-identical batches,
+    including end-to-end through the Trainer's save/restore (the log
+    rides in the checkpoint manifest);
+  * the deprecation surface — legacy table entry points and legacy
+    closure hooks still work but warn.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    EMPTY_CODE,
+    IndexMutation,
+    LSHParams,
+    mutate_index,
+)
+from repro.core.tables import hash_points
+from repro.data.lsh_pipeline import (
+    _SHARD_STRIDE,
+    LSHPipelineConfig,
+    LSHSampledPipeline,
+    ShardedLSHPipeline,
+)
+from repro.train.elastic import rebuild_sharded_pipeline
+
+KEY = jax.random.PRNGKey(0)
+VOCAB, DIM = 50, 16
+EMBED = jax.random.normal(jax.random.PRNGKey(1), (VOCAB, DIM))
+PARAMS = {"embed": EMBED, "q": jnp.ones((DIM,))}
+SEQ = 9
+
+
+def _tokens(n=96, seed=2):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n, SEQ), 0, VOCAB),
+        np.int32)
+
+
+def feature_fn(params, chunk):              # toy params-aware embedding
+    return jnp.mean(params["embed"][chunk], axis=1)
+
+
+def query_fn(params):
+    return params["q"]
+
+
+def _pipe(tokens=None, seed=7, **cfg_kw):
+    cfg_kw.setdefault("streaming", True)
+    for k, v in dict(k=4, l=8, minibatch=8, refresh_every=0).items():
+        cfg_kw.setdefault(k, v)
+    cfg = LSHPipelineConfig(**cfg_kw)
+    return LSHSampledPipeline(
+        jax.random.PRNGKey(seed),
+        tokens if tokens is not None else _tokens(),
+        feature_fn, query_fn, cfg, params=PARAMS)
+
+
+def _live_sets(index, n_live):
+    """Per-table {code: frozenset(slot ids)} over the live prefix."""
+    out = []
+    sc = np.asarray(index.sorted_codes)
+    od = np.asarray(index.order)
+    for t in range(sc.shape[0]):
+        live_sc, live_od = sc[t, :n_live], od[t, :n_live]
+        out.append({int(code): frozenset(
+            live_od[live_sc == code].tolist())
+            for code in np.unique(live_sc)})
+    return out
+
+
+def _assert_live_prefix(pipe):
+    """Every table: live codes first, sentinel tail after, and the live
+    prefix is a permutation of the live slot set."""
+    sc = np.asarray(pipe.index.sorted_codes)
+    od = np.asarray(pipe.index.order)
+    live = set(np.flatnonzero(pipe._live_np).tolist())
+    n_live = pipe.n_live
+    assert len(live) == n_live
+    for t in range(sc.shape[0]):
+        dead = sc[t] == np.uint32(EMPTY_CODE)
+        assert not dead[:n_live].any()
+        assert dead[n_live:].all()
+        assert set(od[t, :n_live].tolist()) == live
+
+
+def _batch_value(tokens_2d):
+    """Deterministic per-example value computable from either a batch's
+    input tokens or a stored row's input slice."""
+    return np.asarray(
+        jnp.mean(EMBED[np.asarray(tokens_2d)], axis=(1, 2))) + 2.0
+
+
+class TestAppendEvictParity:
+    def test_append_equals_fresh_build_membership(self):
+        pipe = _pipe(_tokens(n=48))
+        extra = _tokens(n=16, seed=11)
+        gids = pipe.append_rows(extra)
+        assert gids.shape == (16,)
+        assert pipe.n_live == 64
+        _assert_live_prefix(pipe)
+        # a fresh pipeline over the concatenated corpus shares the build
+        # key (same projections) and assigns the same slots, so the
+        # merged index must carry identical bucket membership.
+        fresh = _pipe(np.concatenate([_tokens(n=48), extra]))
+        assert _live_sets(pipe.index, 64) == _live_sets(fresh.index, 64)
+
+    def test_evict_all_then_append_equals_fresh_build(self):
+        """Evicting the whole window then appending a new corpus must
+        match a fresh build over that corpus up to the tie-stable order
+        contract: identical sorted live codes, identical per-(table,
+        code) bucket membership."""
+        pipe = _pipe(_tokens(n=32))
+        pipe.evict_rows(np.arange(32, dtype=np.int64))
+        assert pipe.n_live == 0
+        fresh_tokens = _tokens(n=32, seed=23)
+        pipe.append_rows(fresh_tokens)
+        assert pipe.n_live == 32
+        _assert_live_prefix(pipe)
+        fresh = _pipe(fresh_tokens)
+        np.testing.assert_array_equal(
+            np.asarray(pipe.index.sorted_codes)[:, :32],
+            np.asarray(fresh.index.sorted_codes)[:, :32])
+        # evict-all freed slots 0..31 in order, so the append reuses
+        # them in order — slot ids line up with the fresh build's.
+        assert _live_sets(pipe.index, 32) == _live_sets(fresh.index, 32)
+        np.testing.assert_array_equal(
+            np.asarray(pipe.store)[:32], np.asarray(fresh.store)[:32])
+
+    def test_append_then_evict_restores_bucket_membership(self):
+        pipe = _pipe(_tokens(n=48))
+        before = _live_sets(pipe.index, 48)
+        gids = pipe.append_rows(_tokens(n=8, seed=13))
+        pipe.evict_rows(gids)
+        assert pipe.n_live == 48
+        assert _live_sets(pipe.index, 48) == before
+        _assert_live_prefix(pipe)
+
+    def test_window_auto_evicts_oldest(self):
+        pipe = _pipe(_tokens(n=24), window=24)
+        pipe.append_rows(_tokens(n=6, seed=17))
+        assert pipe.n_live == 24
+        # the 6 oldest arrivals left the window (their slots are
+        # reused by the appended rows, so check arrival order)
+        assert pipe._arrival[pipe._live_np].min() == 6
+        _assert_live_prefix(pipe)
+
+
+class TestCapacity:
+    def test_grow_doubles_capacity(self):
+        pipe = _pipe(_tokens(n=60), min_capacity=64)
+        assert pipe.capacity == 64
+        pipe.append_rows(_tokens(n=8, seed=19))
+        assert pipe.capacity == 128 and pipe.n_live == 68
+        _assert_live_prefix(pipe)
+
+    def test_compaction_shrinks_capacity(self):
+        pipe = _pipe(_tokens(n=60), min_capacity=16)
+        assert pipe.capacity == 64
+        pipe.evict_rows(np.arange(52, dtype=np.int64))
+        assert pipe.n_live == 8
+        assert pipe.capacity == 16          # 8 <= 32//4 → halve to 16
+        _assert_live_prefix(pipe)
+        # draws still work after the slot remap
+        b = pipe.next_batch()
+        assert b["tokens"].shape == (8, SEQ - 1)
+
+
+class TestUnbiasedOverWindow:
+    def test_weighted_mean_tracks_moving_window(self):
+        """E[w·v] == mean(v) over the LIVE window as it slides: every
+        1/(p·N) weight must use the live N.  Calibrated k=3/l=64 regime
+        (see test_sharded_lgd.test_sharded_estimator_unbiased)."""
+        pipe = _pipe(_tokens(n=64, seed=3), k=3, l=64, minibatch=16,
+                     normalize_weights=False, window=64)
+        for rnd in range(3):
+            pipe.append_rows(_tokens(n=8, seed=100 + rnd))  # slides by 8
+            live = np.flatnonzero(pipe._live_np)
+            truth = float(np.mean(_batch_value(
+                np.asarray(pipe.store)[live][:, :SEQ - 1])))
+            es = []
+            for _ in range(150):
+                b = pipe.next_batch()
+                w = np.asarray(b["loss_weights"], np.float64)
+                es.append(np.mean(w * _batch_value(b["tokens"])))
+            est = float(np.mean(es))
+            assert abs(est - truth) / truth < 0.10, (rnd, est, truth)
+
+
+class TestRestoreReplay:
+    def test_restored_pipelines_draw_bit_identical_batches(self):
+        """THE acceptance pin: restore-at-step-t is bit-deterministic
+        for a streaming pipeline — the mutation log (JSON round-
+        tripped, as checkpointed) replays to identical membership,
+        identical index, identical batch draws."""
+        import json
+
+        pipe = _pipe(_tokens(n=48), window=48, refresh_every=3)
+        for _ in range(2):
+            pipe.next_batch()
+        pipe.append_rows(_tokens(n=6, seed=31))
+        for _ in range(3):
+            pipe.next_batch()
+        gids = pipe.append_rows(_tokens(n=2, seed=37))
+        pipe.evict_rows(gids[:1])
+        t = pipe._step
+        log = json.loads(json.dumps(pipe.mutation_log()))
+        live_before = pipe._live_np.copy()
+
+        pipe.restore_at(t)
+        np.testing.assert_array_equal(pipe._live_np, live_before)
+        expect = [np.asarray(pipe.next_batch()["example_ids"])
+                  for _ in range(4)]
+
+        other = _pipe(_tokens(n=48), window=48, refresh_every=3)
+        other.load_mutation_log(log)
+        other.restore_at(t)
+        np.testing.assert_array_equal(other._live_np, live_before)
+        np.testing.assert_array_equal(
+            np.asarray(other.index.sorted_codes),
+            np.asarray(pipe.index.sorted_codes))
+        for a in expect:
+            np.testing.assert_array_equal(
+                a, np.asarray(other.next_batch()["example_ids"]))
+
+    def test_restore_is_idempotent_and_truncates_log(self):
+        pipe = _pipe(_tokens(n=32), window=32)
+        pipe._step = 5
+        pipe.append_rows(_tokens(n=4, seed=41))
+        pipe._step = 9
+        pipe.append_rows(_tokens(n=4, seed=43))
+        pipe.restore_at(7)                   # drops the step-9 append
+        assert len(pipe.mutation_log()) == 1
+        first = np.asarray(pipe.index.sorted_codes).copy()
+        live = pipe._live_np.copy()
+        pipe.restore_at(7)
+        np.testing.assert_array_equal(
+            first, np.asarray(pipe.index.sorted_codes))
+        np.testing.assert_array_equal(live, pipe._live_np)
+
+    def test_trainer_checkpoint_carries_mutation_log(self, tmp_path):
+        """End-to-end through Trainer.save/restore: the append/evict
+        log rides in the checkpoint manifest, and two trainers restored
+        from the same checkpoint draw bit-identical batches."""
+        from repro.models import ModelConfig, init_params
+        from repro.optim import Adam
+        from repro.train import Trainer, TrainerConfig
+
+        cfg = ModelConfig(
+            name="tiny", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+            d_ff=32, vocab=VOCAB, chunk=16, loss_chunk=16,
+            dtype="float32", rope_theta=10000.0, lgd_enabled=True)
+        params = init_params(KEY, cfg)
+
+        def ffn(p, chunk):
+            return jnp.mean(
+                p["embed_group"]["embed"].astype(jnp.float32)[chunk],
+                axis=1)
+
+        def qfn(p):
+            return jnp.mean(
+                p["embed_group"]["lm_head"].astype(jnp.float32), axis=1)
+
+        def mk():
+            pipe = LSHSampledPipeline(
+                jax.random.PRNGKey(3), _tokens(n=32), ffn, qfn,
+                LSHPipelineConfig(k=4, l=6, minibatch=8,
+                                  refresh_every=0, window=32),
+                params=params)
+            tr = Trainer(cfg, params, Adam(lr=1e-2),
+                         tcfg=TrainerConfig(log_every=100,
+                                            ckpt_dir=str(tmp_path)),
+                         sampler=pipe)
+            return tr, pipe
+
+        tr, pipe = mk()
+        tr.run(3)
+        pipe.append_rows(_tokens(n=4, seed=47))
+        tr.run(2)
+        tr.save()
+        tr.finalize()
+
+        tr_a, pipe_a = mk()                  # auto-resumes the newest
+        tr_b, pipe_b = mk()
+        assert tr_a.step == tr_b.step == tr.step
+        assert len(pipe_a.mutation_log()) == 1
+        assert pipe_a.n_live == 32           # window held at 32
+        for _ in range(3):
+            np.testing.assert_array_equal(
+                np.asarray(pipe_a.next_batch()["example_ids"]),
+                np.asarray(pipe_b.next_batch()["example_ids"]))
+
+
+class TestShardedStreaming:
+    def _pipe(self, n=64, n_shards=2, window=None, **kw):
+        for key, v in dict(k=4, l=8, minibatch=16,
+                           refresh_every=0).items():
+            kw.setdefault(key, v)
+        cfg = LSHPipelineConfig(streaming=True, window=window, **kw)
+        return ShardedLSHPipeline(
+            jax.random.PRNGKey(7), _tokens(n=n), feature_fn, query_fn,
+            cfg, n_shards=n_shards, params=PARAMS)
+
+    def test_append_routes_to_least_live_shard(self):
+        pipe = self._pipe()
+        gids = pipe.append_rows(_tokens(n=4, seed=53))
+        shards = np.asarray(gids) // _SHARD_STRIDE
+        assert sorted(shards.tolist()) == [0, 0, 1, 1]
+        assert [p.n_live for p in pipe.shards] == [34, 34]
+
+    def test_evict_routes_by_stride(self):
+        pipe = self._pipe()
+        gids = pipe.append_rows(_tokens(n=4, seed=59))
+        pipe.evict_rows(gids)
+        assert [p.n_live for p in pipe.shards] == [32, 32]
+        with pytest.raises(ValueError):
+            pipe.evict_rows(np.asarray([10 * _SHARD_STRIDE]))
+
+    def test_window_must_divide_by_shards(self):
+        with pytest.raises(ValueError, match="window"):
+            self._pipe(window=65)
+
+    def test_mutation_log_restores_via_elastic_rebuild(self):
+        pipe = self._pipe(window=64)
+        for _ in range(2):
+            pipe.next_batch()
+        pipe.append_rows(_tokens(n=6, seed=61))
+        step = pipe.shards[0]._step
+        log = pipe.mutation_log()
+        pipe.restore_at(step)                # canonical reference state
+        expect = [np.asarray(pipe.next_batch()["example_ids"])
+                  for _ in range(3)]
+        cfg = LSHPipelineConfig(k=4, l=8, minibatch=16, refresh_every=0,
+                                window=64)
+        restored = rebuild_sharded_pipeline(
+            jax.random.PRNGKey(7), _tokens(n=64), feature_fn, query_fn,
+            cfg, step=step, n_shards=2, params=PARAMS, mutation_log=log)
+        for a in expect:
+            np.testing.assert_array_equal(
+                a, np.asarray(restored.next_batch()["example_ids"]))
+
+    def test_log_rejects_shard_count_mismatch(self):
+        pipe = self._pipe()
+        log = pipe.mutation_log()
+        other = self._pipe(n_shards=4, n=64)
+        with pytest.raises(ValueError, match="n_shards"):
+            other.load_mutation_log(log)
+
+    def test_weight_composition_uses_live_counts(self):
+        """The sharded composer must weight each shard's draws by its
+        LIVE count — w·(n_live_s·S/total_live) — not the static row
+        count it was built with.  After evicting from one shard only
+        (24 vs 32 live), the composed estimate is compared against a
+        first-principles reference: per-shard batches drawn from the
+        SAME shard objects (same projections, so the finite-L
+        calibration bias cancels) composed by hand with the live-count
+        formula.  A composer still using static counts would inflate
+        shard 0 by 32/24 and miss by ~13%, far outside the noise
+        band.  Truth-relative accuracy is pinned only loosely: at
+        per-shard N≈24-32 the analytic cp^K collision model carries a
+        finite-L calibration offset that is unrelated to streaming
+        (the streaming path is bit-identical to the dense sharded
+        path over the same membership)."""
+        pipe = self._pipe(k=3, l=64, normalize_weights=False)
+        gid0 = [int(pipe.shards[0].example_offset + s)
+                for s in np.flatnonzero(pipe.shards[0]._live_np)[:8]]
+        pipe.evict_rows(np.asarray(gid0, np.int64))
+        counts = [p.n_live for p in pipe.shards]
+        assert counts == [24, 32]
+        total = sum(counts)
+        rows = np.concatenate([
+            np.asarray(p.store)[np.flatnonzero(p._live_np)][:, :SEQ - 1]
+            for p in pipe.shards])
+        truth = float(np.mean(_batch_value(rows)))
+        comp, ref = [], []
+        for _ in range(200):
+            b = pipe.next_batch()
+            w = np.asarray(b["loss_weights"], np.float64)
+            comp.append(np.mean(w * _batch_value(b["tokens"])))
+            parts = []
+            for p in pipe.shards:
+                sb = p.next_batch()
+                sw = np.asarray(sb["loss_weights"], np.float64)
+                sw = sw * (p.n_live * pipe.n_shards / total)
+                parts.append(sw * _batch_value(sb["tokens"]))
+            ref.append(np.mean(np.concatenate(parts)))
+        comp, ref = np.asarray(comp), np.asarray(ref)
+        est, est_ref = float(comp.mean()), float(ref.mean())
+        sem = float(np.hypot(comp.std(ddof=1), ref.std(ddof=1))
+                    / np.sqrt(len(comp)))
+        assert abs(est - est_ref) < 5.0 * sem, (est, est_ref, sem)
+        # loose truth sanity: the finite-L calibration offset at this
+        # toy geometry stays well under 30%.
+        assert abs(est - truth) / truth < 0.30, (est, truth)
+
+
+class TestDeprecationSurface:
+    def test_tables_wrappers_warn_and_match_mutate_index(self):
+        from repro.core import build_index, refresh_index, \
+            refresh_index_delta
+
+        p = LSHParams(k=4, l=6, dim=8, family="dense")
+        x = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+        with pytest.warns(DeprecationWarning, match="build_index"):
+            old = build_index(jax.random.PRNGKey(3), x, p)
+        new = mutate_index(
+            None, IndexMutation("build", key=jax.random.PRNGKey(3),
+                                x_aug=x), p)
+        np.testing.assert_array_equal(np.asarray(old.sorted_codes),
+                                      np.asarray(new.sorted_codes))
+        x2 = x + 0.01
+        with pytest.warns(DeprecationWarning, match="refresh_index"):
+            oldr = refresh_index(None, old, x2, p)
+        newr = mutate_index(new, IndexMutation("refresh", x_aug=x2), p)
+        np.testing.assert_array_equal(np.asarray(oldr.order),
+                                      np.asarray(newr.order))
+        ids = jnp.arange(4, dtype=jnp.int32)
+        codes = hash_points(x2[:4], old.projections, p)
+        with pytest.warns(DeprecationWarning,
+                          match="refresh_index_delta"):
+            oldd = refresh_index_delta(old, ids, codes)
+        newd = mutate_index(new, IndexMutation("delta", ids=ids,
+                                               codes=codes))
+        np.testing.assert_array_equal(np.asarray(oldd.order),
+                                      np.asarray(newd.order))
+
+    def test_legacy_closure_hooks_warn_at_construction(self):
+        with pytest.warns(DeprecationWarning, match="legacy closure"):
+            LSHSampledPipeline(
+                jax.random.PRNGKey(5), _tokens(n=24),
+                lambda t: jnp.mean(EMBED[t], axis=1),
+                lambda: jnp.ones((DIM,)),
+                LSHPipelineConfig(k=4, l=6, minibatch=8,
+                                  refresh_every=0))
+
+    def test_sharded_legacy_hooks_warn_once(self):
+        with pytest.warns(DeprecationWarning, match="legacy closure") \
+                as rec:
+            ShardedLSHPipeline(
+                jax.random.PRNGKey(5), _tokens(n=24),
+                lambda t: jnp.mean(EMBED[t], axis=1),
+                lambda: jnp.ones((DIM,)),
+                LSHPipelineConfig(k=4, l=6, minibatch=8,
+                                  refresh_every=0), n_shards=2)
+        dep = [w for w in rec
+               if issubclass(w.category, DeprecationWarning)]
+        assert len(dep) == 1
+
+    def test_mutation_api_requires_streaming(self):
+        pipe = LSHSampledPipeline(
+            jax.random.PRNGKey(5), _tokens(n=24), feature_fn, query_fn,
+            LSHPipelineConfig(k=4, l=6, minibatch=8, refresh_every=0),
+            params=PARAMS)
+        with pytest.raises(ValueError, match="streaming"):
+            pipe.append_rows(_tokens(n=2))
+        with pytest.raises(ValueError, match="streaming"):
+            pipe.evict_rows(np.asarray([0]))
+
+    def test_mutate_entry_point_routes_all_ops(self):
+        pipe = _pipe(_tokens(n=32))
+        gids = pipe.mutate(IndexMutation("append",
+                                         tokens=_tokens(n=2, seed=71)))
+        assert gids.shape == (2,)
+        pipe.mutate(IndexMutation("evict", ids=gids))
+        assert pipe.n_live == 32
+        pipe.mutate(IndexMutation("refresh"))
+        pipe.mutate(IndexMutation("delta"))
+        pipe.mutate(IndexMutation("build"))
+        _assert_live_prefix(pipe)

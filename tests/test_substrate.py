@@ -198,18 +198,19 @@ class TestLSHPipeline:
         corpus = make_token_corpus(3, 512, 16, cfg.vocab, hard_frac=0.15)
         params = init_params(KEY, cfg)
 
-        def feature_fn(tokens):
-            h = forward(params, cfg, {"tokens": tokens})
+        def feature_fn(p, tokens):
+            h = forward(p, cfg, {"tokens": tokens})
             return jnp.mean(h.astype(jnp.float32), axis=1)
 
-        def query_fn():
-            w = params["embed_group"]["lm_head"].astype(jnp.float32)
+        def query_fn(p):
+            w = p["embed_group"]["lm_head"].astype(jnp.float32)
             return jnp.mean(w, axis=1)
 
         pipe = LSHSampledPipeline(
             jax.random.PRNGKey(5), corpus.tokens, jax.jit(feature_fn),
             query_fn, LSHPipelineConfig(k=5, l=10, minibatch=16,
-                                        refresh_every=50))
+                                        refresh_every=50),
+            params=params)
         return cfg, corpus, params, pipe
 
     def test_batches_well_formed(self):
@@ -226,7 +227,7 @@ class TestLSHPipeline:
         cfg, corpus, params, pipe = self._setup()
         before = np.asarray(pipe.index.sorted_codes).copy()
         old_fn = pipe.feature_fn
-        pipe.feature_fn = lambda t: old_fn(t) + jax.random.normal(
+        pipe.feature_fn = lambda p, t: old_fn(p, t) + jax.random.normal(
             jax.random.PRNGKey(9), (1, cfg.d_model))  # simulate drift
         pipe.refresh()
         after = np.asarray(pipe.index.sorted_codes)
