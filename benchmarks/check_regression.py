@@ -60,6 +60,19 @@ Robustness (``robustness.json``):
                     ladder must report ``recovered: true`` — a run that
                     ends stuck in a degraded state fails the gate.
 
+Multihost (``multihost.json``):
+  deployment tax    mean us(2-process jax.distributed step) / mean
+                    us(one-process 2-shard step), same worker stack —
+                    the cost of going multi-host (barriers + param
+                    averaging + core contention) must stay within
+                    ``--multihost-tolerance`` (default 0.5: subprocess
+                    timings are the noisiest in the suite) of the
+                    committed baseline ratio.
+  reform            the host-kill drill must report ``reformed: true``
+                    with a finite reform-time-to-first-step — a
+                    survivor that never reaches a post-reform step
+                    fails the gate.
+
 Optimizers (``optimizers.json``):
   adam step         us(lgd-adam step) / us(uniform-adam step), same
                     run, with the LGD pipeline running multiprobe=2 —
@@ -113,6 +126,7 @@ DEFAULT_REFRESH = os.path.join(HERE, "results", "refresh_cost.json")
 DEFAULT_TRAIN = os.path.join(HERE, "results", "train_step.json")
 DEFAULT_OPTIM = os.path.join(HERE, "results", "optimizers.json")
 DEFAULT_ROBUSTNESS = os.path.join(HERE, "results", "robustness.json")
+DEFAULT_MULTIHOST = os.path.join(HERE, "results", "multihost.json")
 DEFAULT_FAMILIES = os.path.join(HERE, "results", "families.json")
 DEFAULT_STREAMING = os.path.join(HERE, "results", "streaming.json")
 
@@ -289,6 +303,42 @@ def compare_robustness(baseline: dict, fresh: dict,
     return failures
 
 
+def compare_multihost(baseline: dict, fresh: dict,
+                      tolerance: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "batch", "n_corpus", "nprocs",
+                            "sync_every"), "multihost")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+
+    got = fresh["step_us"]["two_proc_over_one_proc"]
+    base = baseline["step_us"]["two_proc_over_one_proc"]
+    limit = max(base, 1.0) * (1.0 + tolerance)
+    ok = got <= limit
+    print(f"multihost deployment tax: baseline {base:.3f}  fresh "
+          f"{got:.3f}  limit {limit:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"multi-host deployment tax regressed: 2proc/1proc "
+            f"{got:.3f} > {limit:.3f} (baseline {base:.3f} "
+            f"+{tolerance:.0%})")
+
+    reform = fresh["reform"]
+    ok = bool(reform["reformed"]) and \
+        reform.get("to_first_step_s") is not None
+    print(f"multihost reform: baseline "
+          f"{baseline['reform']['to_first_step_s']:.2f}s  fresh "
+          f"{reform.get('to_first_step_s')}s  "
+          f"reformed={reform['reformed']}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            "host-kill drill did not reform: the survivor never "
+            "reached a post-reform step (see multihost.json reform)")
+    return failures
+
+
 def compare_optimizers(baseline: dict, fresh: dict, step_cap: float,
                        var_cap: float, fallback_cap: float) -> list:
     failures = _comparable(baseline, fresh,
@@ -385,7 +435,8 @@ def compare_families(baseline: dict, fresh: dict, step_cap: float,
 
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
              optim_base: dict, families_base: dict,
-             robustness_base: dict, streaming_base: dict, args) -> int:
+             robustness_base: dict, streaming_base: dict,
+             multihost_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -474,6 +525,20 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_streaming(streaming_base, stream_slow,
                                           args.streaming_cap)))
 
+    mh_slow = json.loads(json.dumps(multihost_base))
+    mh_slow["step_us"]["two_proc_over_one_proc"] *= 2.0
+    print("-- selftest 14: injected 2x multi-host deployment-tax "
+          "slowdown --")
+    results.append(bool(compare_multihost(multihost_base, mh_slow,
+                                          args.multihost_tolerance)))
+
+    mh_stuck = json.loads(json.dumps(multihost_base))
+    mh_stuck["reform"]["reformed"] = False
+    mh_stuck["reform"]["to_first_step_s"] = None
+    print("-- selftest 15: injected lost host-kill reform --")
+    results.append(bool(compare_multihost(multihost_base, mh_stuck,
+                                          args.multihost_tolerance)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -508,6 +573,10 @@ def main() -> int:
                     help="committed robustness baseline JSON")
     ap.add_argument("--fresh-robustness", default=DEFAULT_ROBUSTNESS,
                     help="freshly measured robustness JSON")
+    ap.add_argument("--baseline-multihost", default=DEFAULT_MULTIHOST,
+                    help="committed multihost baseline JSON")
+    ap.add_argument("--fresh-multihost", default=DEFAULT_MULTIHOST,
+                    help="freshly measured multihost JSON")
     ap.add_argument("--baseline-streaming", default=DEFAULT_STREAMING,
                     help="committed streaming baseline JSON")
     ap.add_argument("--fresh-streaming", default=DEFAULT_STREAMING,
@@ -543,6 +612,9 @@ def main() -> int:
     ap.add_argument("--robustness-degraded-cap", type=float, default=1.1,
                     help="absolute cap on degraded-mode (stale-index / "
                          "uniform-fallback) over healthy step-time ratio")
+    ap.add_argument("--multihost-tolerance", type=float, default=0.5,
+                    help="allowed 2proc/1proc deployment-tax drift over "
+                         "the committed baseline ratio")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
@@ -561,10 +633,12 @@ def main() -> int:
         robustness_base = json.load(f)
     with open(args.baseline_streaming) as f:
         streaming_base = json.load(f)
+    with open(args.baseline_multihost) as f:
+        multihost_base = json.load(f)
     if args.selftest:
         return selftest(baseline, refresh_base, train_base, optim_base,
                         families_base, robustness_base, streaming_base,
-                        args)
+                        multihost_base, args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -580,6 +654,8 @@ def main() -> int:
         robustness_fresh = json.load(f)
     with open(args.fresh_streaming) as f:
         streaming_fresh = json.load(f)
+    with open(args.fresh_multihost) as f:
+        multihost_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
@@ -596,6 +672,8 @@ def main() -> int:
                                    args.robustness_degraded_cap)
     failures += compare_streaming(streaming_base, streaming_fresh,
                                   args.streaming_cap)
+    failures += compare_multihost(multihost_base, multihost_fresh,
+                                  args.multihost_tolerance)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

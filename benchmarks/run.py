@@ -18,6 +18,10 @@
                            stale-index vs uniform-fallback Trainer step
                            time, plus recovery latency after an injected
                            refresh-failure burst
+  tab_multihost            multi-host deployment: real 2-process
+                           jax.distributed step time vs a one-process
+                           2-shard baseline, plus reform-time-to-
+                           first-step after a host kill
   tab_optimizers           adaptive optimisers (momentum/AdaGrad/Adam)
                            under LGD: per-optimizer step time + estimator
                            variance, and multi-probe vs single-probe
@@ -808,6 +812,130 @@ def tab_robustness(quick: bool = False):
     return out
 
 
+def tab_multihost(quick: bool = False):
+    """Multi-host deployment cost + reform latency (one table).
+
+    Two gated quantities for the elastic multi-process story:
+      * 2-process step time — MEAN Trainer-step wall time of a real
+        2-process ``jax.distributed`` CPU run (each process owns one
+        corpus shard; barrier + parameter average every ``sync_every``
+        steps) vs the SAME 2-shard problem in one process.  The mean —
+        not p10 — because the sync barrier fires every ``sync_every``
+        steps and its amortised cost IS the deployment tax being gated.
+      * reform-time-to-first-step — in a host-kill drill, wall time
+        from the survivor starting its reform (newest-verified
+        checkpoint restore + pipeline rebuild on the surviving shard
+        count) to completing its first post-reform trainer step.
+
+    Both processes time the identical deterministic worker stack
+    (``repro.dist.multihost_worker``), so the 2-proc/1-proc ratio is a
+    same-stack comparison; per-step stamps come from the worker's
+    result JSON (first ``warmup`` deltas dropped — jit compile).
+    """
+    import socket
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.dist.multihost_worker import (
+        LR, PARAM_KEY_SEED, build_pipeline, model_cfg)
+    from repro.testing import ProcKill
+
+    steps = 20 if quick else 40
+    warmup = 4
+    sync_every = 5
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__),
+                                       "..", "src"))
+
+    def free_port():
+        s = socket.socket()
+        s.bind(("127.0.0.1", 0))
+        port = s.getsockname()[1]
+        s.close()
+        return port
+
+    def run_pair(d, n_steps, ckpt_every, rank1_extra=()):
+        coord = f"127.0.0.1:{free_port()}"
+        common = [sys.executable, "-m", "repro.dist.multihost_worker",
+                  "--nprocs", "2", "--coordinator", coord,
+                  "--ckpt-dir", os.path.join(d, "ckpt"),
+                  "--steps", str(n_steps),
+                  "--sync-every", str(sync_every),
+                  "--ckpt-every", str(ckpt_every)]
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        env["PYTHONPATH"] = os.pathsep.join(
+            [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+        procs = [subprocess.Popen(
+            common + ["--rank", str(r),
+                      "--result", os.path.join(d, f"r{r}.json")]
+            + (list(rank1_extra) if r == 1 else []),
+            env=env, stdout=subprocess.DEVNULL,
+            stderr=subprocess.DEVNULL) for r in (0, 1)]
+        rcs = [p.wait(timeout=600) for p in procs]
+        path = os.path.join(d, "r0.json")
+        r0 = json.load(open(path)) if os.path.exists(path) else None
+        return rcs, r0
+
+    # -- 2-process step time (clean run, checkpointing off) -----------
+    with tempfile.TemporaryDirectory() as d:
+        rcs, r0 = run_pair(d, steps + warmup, ckpt_every=10 ** 9)
+    if rcs != [0, 0] or r0 is None:
+        raise RuntimeError(
+            f"tab_multihost clean 2-process run failed: exit codes {rcs}")
+    deltas = np.diff(r0["timings"]["step_stamps"])[warmup - 1:]
+    us_2p = float(np.mean(deltas)) * 1e6
+
+    # -- single-process 2-shard baseline (same stack, in process) -----
+    cfg = model_cfg()
+    params = init_params(jax.random.PRNGKey(PARAM_KEY_SEED), cfg)
+    pipe = build_pipeline(params, n_shards=2)
+    tr = Trainer(cfg, params, Adam(lr=LR),
+                 tcfg=TrainerConfig(log_every=10_000), sampler=pipe)
+    tr.run(warmup)
+    dts = []
+    for _ in range(steps):
+        t0 = time.perf_counter()
+        tr.run(1)
+        dts.append(time.perf_counter() - t0)
+    tr.finalize()
+    us_1p = float(np.mean(dts)) * 1e6
+
+    # -- reform latency (host-kill drill) -----------------------------
+    with tempfile.TemporaryDirectory() as d:
+        rcs, r0k = run_pair(d, 25, ckpt_every=10,
+                            rank1_extra=("--kill-at", "12"))
+    if rcs != [0, ProcKill.EXIT_CODE] or r0k is None:
+        raise RuntimeError(
+            f"tab_multihost kill drill failed: exit codes {rcs}")
+    reformed = r0k["cluster"]["state"] == "reformed"
+    reform_s = r0k["timings"].get("reform_to_first_step_s")
+
+    ratio = us_2p / max(us_1p, 1e-9)
+    _row("tab_multihost_one_proc", us_1p, "2 shards, one process")
+    _row("tab_multihost_two_proc", us_2p, f"{ratio:.2f}x one-process")
+    _row("tab_multihost_reform", 0.0,
+         f"{reform_s:.2f}s to first post-reform step" if reformed
+         and reform_s is not None else "NOT REFORMED")
+    out = {
+        "backend": jax.default_backend(),
+        "quick": quick, "batch": 16, "n_corpus": 256,
+        "steps_timed": steps, "warmup": warmup, "nprocs": 2,
+        "sync_every": sync_every,
+        "step_us": {"one_proc_two_shard": us_1p, "two_proc": us_2p,
+                    "two_proc_over_one_proc": ratio},
+        "reform": {
+            "reformed": reformed,
+            "restore_step": r0k.get("restore_step"),
+            "reform_shards": r0k.get("reform_shards"),
+            "to_first_step_s": reform_s,
+        },
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "multihost.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def tab_optimizers(quick: bool = False):
     """Adaptive optimisers under LGD + multi-probe querying (one table).
 
@@ -1174,6 +1302,7 @@ TABLES = {
     "fig5_lm_epochwise": lambda quick: fig5_lm_epochwise(),
     "tab_train_step": tab_train_step,
     "tab_robustness": tab_robustness,
+    "tab_multihost": tab_multihost,
     "tab_optimizers": tab_optimizers,
     "tab_families": tab_families,
     "thm2_variance": lambda quick: thm2_variance(),
@@ -1193,7 +1322,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     quick_aware = {"tab_sampling_cost", "tab_refresh_cost",
                    "tab_streaming", "tab_train_step", "tab_robustness",
-                   "tab_optimizers", "tab_families"}
+                   "tab_multihost", "tab_optimizers", "tab_families"}
     if args.quick:
         ignored = [n for n in names if n not in quick_aware]
         if ignored:

@@ -7,9 +7,13 @@ from .synthetic import (  # noqa: F401
     uniform_batches,
 )
 from .health import (  # noqa: F401
+    CLUSTER_DEGRADED,
+    CLUSTER_HEALTHY,
+    CLUSTER_REFORMED,
     HEALTHY,
     STALE_INDEX,
     UNIFORM_FALLBACK,
+    ClusterHealthMonitor,
     HealthConfig,
     HealthMonitor,
 )

@@ -43,6 +43,13 @@ HEALTHY = "healthy"
 STALE_INDEX = "stale-index"
 UNIFORM_FALLBACK = "uniform-fallback"
 
+# cluster-level ladder (multi-host deployments; see
+# repro.dist.multihost and docs/ARCHITECTURE.md "Multi-host
+# deployment & failure model")
+CLUSTER_HEALTHY = "healthy"
+CLUSTER_DEGRADED = "missing-host-degraded"
+CLUSTER_REFORMED = "reformed"
+
 
 @dataclasses.dataclass
 class HealthConfig:
@@ -171,4 +178,89 @@ class HealthMonitor:
             "refresh_failures": self.refresh_failures,
             "recoveries": self.recoveries,
             "transitions": list(self.transitions),
+        }
+
+
+class ClusterHealthMonitor:
+    """Cluster-level extension of the ladder for multi-host LGD.
+
+    One level above ``HealthMonitor``: where the per-pipeline ladder
+    tracks a single index's refresh health, this tracks the MEMBERSHIP
+    of the training cluster itself:
+
+        healthy ──host loss detected─────────▶ missing-host-degraded
+        missing-host-degraded ──reform done──▶ reformed
+        reformed ──host loss detected────────▶ missing-host-degraded
+
+    MISSING-HOST-DEGRADED: a peer stopped heartbeating (or never
+    cleared its collective barrier within the bounded retries).  The
+    survivors keep training: each adopts the lost host's corpus shard
+    (``ShardedLSHPipeline.adopt_shards``), and because the shard bounds
+    and shard count are unchanged the composed w = S/(p·N) weights stay
+    exactly unbiased mid-incident — only wall-clock per step and
+    mid-incident bit-determinism are sacrificed.
+
+    REFORMED: the survivors restored the newest verified checkpoint and
+    rebuilt the pipeline with the surviving shard count
+    (``rebuild_sharded_pipeline``) — a fully deterministic state again,
+    bit-identical to a fresh restore on the same mesh.  Operationally
+    equivalent to healthy, kept distinct so an audit of ``transitions``
+    shows the membership history at a glance.
+
+    Like ``HealthMonitor`` this is pure bookkeeping: the CLUSTER
+    (``repro.dist.multihost.ElasticCluster``) owns detection and the
+    reform sequence; this object only decides the state, so the ladder
+    is testable without processes or JAX anywhere.  ``transitions``
+    records state edges as ``(step, from, to, reason)``; ``events``
+    records non-edge incidents (shard adoptions, membership changes).
+    """
+
+    def __init__(self):
+        self.state = CLUSTER_HEALTHY
+        self.lost_hosts: List[int] = []    # lifetime lost ranks
+        self.reforms = 0                   # lifetime completed reforms
+        self.transitions: List[Tuple[int, str, str, str]] = []
+        self.events: List[Tuple[int, str, str]] = []
+
+    def _move(self, step: int, to: str, reason: str):
+        if to == self.state:
+            return
+        self.transitions.append((step, self.state, to, reason))
+        self.state = to
+
+    # -- signals -------------------------------------------------------------
+
+    def note_host_lost(self, step: int, ranks, reason: str = ""):
+        ranks = sorted(int(r) for r in ranks)
+        self.lost_hosts.extend(ranks)
+        detail = f"lost host(s) {ranks}" + (f": {reason}" if reason else "")
+        self.events.append((step, "host-lost", detail))
+        self._move(step, CLUSTER_DEGRADED, detail)
+
+    def note_adopted(self, step: int, shard: int, by_rank: int):
+        """A surviving rank took over a lost host's corpus shard (the
+        mid-incident unbiasedness move — not a state edge)."""
+        self.events.append(
+            (step, "shard-adopted",
+             f"shard {shard} adopted by rank {by_rank}"))
+
+    def note_reformed(self, step: int, n_shards: int):
+        self.reforms += 1
+        self._move(step, CLUSTER_REFORMED,
+                   f"reformed on {n_shards} shard(s) from verified "
+                   f"checkpoint at step {step}")
+
+    # -- queries -------------------------------------------------------------
+
+    @property
+    def degraded(self) -> bool:
+        return self.state == CLUSTER_DEGRADED
+
+    def summary(self) -> dict:
+        return {
+            "state": self.state,
+            "lost_hosts": list(self.lost_hosts),
+            "reforms": self.reforms,
+            "transitions": list(self.transitions),
+            "events": list(self.events),
         }

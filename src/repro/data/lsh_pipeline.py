@@ -155,7 +155,7 @@ import threading
 import time
 import warnings
 import zlib
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -1567,10 +1567,28 @@ class ShardedLSHPipeline:
       n_shards: number of per-shard indexes (one per DP group at scale).
       mesh: optional ``jax.sharding.Mesh`` enabling the zero-copy
         sharded batch composition.
+      owned_shards: the subset of shard ids THIS process builds and
+        draws from (default: all — the single-controller mode).  In the
+        multi-controller deployment (``repro.dist.multihost``) process
+        r passes ``owned_shards=[r]``: only its own shard's store is
+        embedded/hashed/resident here, and ``next_batch`` returns just
+        the owned sub-batches — the LOCAL slice of the global batch.
+        The emitted weights keep the GLOBAL w = S/(p·N) composition
+        (``n_shards`` and the shard bounds are corpus-global), so each
+        process's batch is an unbiased estimator of its shards' portion
+        and the DP mean across processes of the full corpus.  Partial
+        ownership is incompatible with ``streaming`` (remote live
+        counts are unknowable locally) and with ``normalize_weights``
+        (mean-1 normalisation is a global-batch statistic) — both
+        raise.  ``adopt_shards`` extends ownership at runtime (host-
+        loss recovery).
 
-    Determinism: as ``LSHSampledPipeline``, per shard; ``restore_at``
-    rewinds every shard, and a restore onto a DIFFERENT ``n_shards``
-    (elastic reshape) goes through
+    Determinism: as ``LSHSampledPipeline``, per shard — shard s's draw
+    stream depends only on ``fold_in(key, s)`` and the params history,
+    NOT on which process owns it, so per-process draws compose bitwise
+    into the single-controller batch.  ``restore_at`` rewinds every
+    owned shard, and a restore onto a DIFFERENT ``n_shards`` (elastic
+    reshape) goes through
     ``repro.train.elastic.rebuild_sharded_pipeline``.
     """
 
@@ -1585,6 +1603,7 @@ class ShardedLSHPipeline:
         feature_batch: int = 512,
         params: Any = None,
         mesh=None,
+        owned_shards: Optional[Sequence[int]] = None,
     ):
         if config.minibatch % n_shards != 0:
             raise ValueError(
@@ -1593,11 +1612,43 @@ class ShardedLSHPipeline:
         if params is None:
             warnings.warn(_LEGACY_HOOK_MSG, DeprecationWarning,
                           stacklevel=2)
+        if owned_shards is None:
+            owned = list(range(n_shards))
+        else:
+            owned = sorted({int(s) for s in owned_shards})
+            if not owned:
+                raise ValueError("owned_shards must not be empty")
+            bad = [s for s in owned if not 0 <= s < n_shards]
+            if bad:
+                raise ValueError(
+                    f"owned_shards {bad} not in [0, {n_shards})")
+        partial = len(owned) < n_shards
+        if partial and config.streaming:
+            raise ValueError(
+                "owned_shards with streaming=True is unsupported: the "
+                "sharded weight composition needs every shard's LIVE "
+                "count, which a partial owner cannot observe — run "
+                "streaming pipelines with full ownership per process "
+                "group (n_shards == len(owned_shards))")
+        if partial and config.normalize_weights:
+            raise ValueError(
+                "owned_shards with normalize_weights=True is "
+                "unsupported: mean-1 normalisation is a statistic of "
+                "the GLOBAL batch, which a partial owner never sees — "
+                "normalise after the cross-process composition instead")
         self.cfg = config
         self.n = tokens.shape[0]
         self.n_shards = n_shards
+        self.owned = owned
         self.mesh = mesh
         self.streaming = config.streaming
+        # adopt_shards rebuilds missing shards from the construction
+        # corpus: keep the ingredients (references, not copies).
+        self._key = key
+        self._tokens = tokens
+        self._feature_fn = feature_fn
+        self._query_fn = query_fn
+        self._feature_batch = feature_batch
         shard_window = None
         if config.streaming:
             if config.window is not None:
@@ -1610,22 +1661,65 @@ class ShardedLSHPipeline:
                 raise ValueError(
                     f"initial shard size {self.n // n_shards + 1} "
                     f"exceeds the streaming id stride {_SHARD_STRIDE}")
-        shard_cfg = dataclasses.replace(
+        self._shard_cfg = dataclasses.replace(
             config, minibatch=config.minibatch // n_shards,
             normalize_weights=False, window=shard_window)
-        self.shards: List[LSHSampledPipeline] = []
-        for s in range(n_shards):
-            lo, hi = example_shard_bounds(self.n, s, n_shards)
-            # streaming shards address global ids by a fixed per-shard
-            # stride (ids stay disjoint as windows advance); static
-            # shards keep the contiguous initial bounds bit-compatibly.
-            off = s * _SHARD_STRIDE if config.streaming else lo
-            self.shards.append(LSHSampledPipeline(
-                jax.random.fold_in(key, s), tokens[lo:hi], feature_fn,
-                query_fn, shard_cfg, feature_batch=feature_batch,
-                params=params, example_offset=off,
-                store_device=shard_store_device(mesh, s, n_shards),
-                _warn_legacy=False))
+        self.shards: List[LSHSampledPipeline] = [
+            self._make_shard(s, params) for s in self.owned]
+
+    def _make_shard(self, s: int, params: Any) -> "LSHSampledPipeline":
+        """Build shard ``s``'s pipeline — keyed by ``fold_in(key, s)``
+        over its contiguous corpus slice, identically on any owner."""
+        lo, hi = example_shard_bounds(self.n, s, self.n_shards)
+        # streaming shards address global ids by a fixed per-shard
+        # stride (ids stay disjoint as windows advance); static
+        # shards keep the contiguous initial bounds bit-compatibly.
+        off = s * _SHARD_STRIDE if self.cfg.streaming else lo
+        return LSHSampledPipeline(
+            jax.random.fold_in(self._key, s), self._tokens[lo:hi],
+            self._feature_fn, self._query_fn, self._shard_cfg,
+            feature_batch=self._feature_batch, params=params,
+            example_offset=off,
+            store_device=shard_store_device(self.mesh, s, self.n_shards),
+            _warn_legacy=False)
+
+    def adopt_shards(self, shard_ids: Sequence[int], step: int,
+                     params: Any = None):
+        """Take ownership of additional shards (host-loss recovery).
+
+        The multi-controller incident path: a peer process died, so the
+        survivor adopts its shard(s) — builds the missing per-shard
+        pipelines from the construction corpus slice with the same
+        ``fold_in(key, s)`` key streams, embedded from ``params``
+        (default: current params), and rewinds them to ``step``.
+
+        UNBIASEDNESS: ``n_shards`` and the shard bounds are unchanged —
+        only ownership moved — so the composed weights keep the exact
+        global w = S/(p·N) form and E[1/(pN)] stays 1 mid-incident
+        (Algorithm 1's probabilities are exact w.r.t. the indexed
+        vectors, whatever those vectors are).  DETERMINISM: the adopted
+        index is embedded from the CURRENT params, not the lost host's
+        refresh history (gone with the host), so mid-incident draws are
+        NOT bit-reproducible; the full reform
+        (``rebuild_sharded_pipeline`` from a verified checkpoint)
+        restores the determinism contract.
+        """
+        if self.streaming:
+            raise ValueError(
+                "adopt_shards requires a static corpus (streaming "
+                "pipelines run fully-owned per process group)")
+        params = self.params if params is None else params
+        for s in sorted({int(x) for x in shard_ids}):
+            if s in self.owned:
+                raise ValueError(f"shard {s} is already owned")
+            if not 0 <= s < self.n_shards:
+                raise ValueError(
+                    f"shard {s} not in [0, {self.n_shards})")
+            p = self._make_shard(s, params)
+            p.restore_at(step, rebuild=False)
+            pos = int(np.searchsorted(np.asarray(self.owned), s))
+            self.owned.insert(pos, s)
+            self.shards.insert(pos, p)
 
     @property
     def params(self):
@@ -1725,8 +1819,16 @@ class ShardedLSHPipeline:
             p.load_mutation_log(log_s)
 
     def set_fault_injector(self, injector, shard: Optional[int] = None):
-        """Install a fault injector on one shard (or all, shard=None)."""
-        targets = self.shards if shard is None else [self.shards[shard]]
+        """Install a fault injector on one shard — a GLOBAL shard id,
+        which must be owned here — or on all owned shards (None)."""
+        if shard is None:
+            targets = self.shards
+        else:
+            if shard not in self.owned:
+                raise ValueError(
+                    f"shard {shard} is not owned here (owned: "
+                    f"{self.owned})")
+            targets = [self.shards[self.owned.index(shard)]]
         for p in targets:
             p.set_fault_injector(injector)
 
@@ -1754,8 +1856,8 @@ class ShardedLSHPipeline:
             "refresh_failures": sum(s["refresh_failures"] for s in per),
             "recoveries": sum(s["recoveries"] for s in per),
             "transitions": [
-                (shard_idx,) + tuple(t)
-                for shard_idx, s in enumerate(per)
+                (shard_id,) + tuple(t)
+                for shard_id, s in zip(self.owned, per)
                 for t in s["transitions"]],
         }
 
@@ -1775,14 +1877,19 @@ class ShardedLSHPipeline:
         }
 
     def _compose(self, parts: list) -> jax.Array:
+        # the zero-copy mesh composition lays out the FULL global batch;
+        # a partial owner's batch is its local slice — plain concat.
         if self.mesh is not None and isinstance(self.mesh,
-                                                jax.sharding.Mesh):
+                                                jax.sharding.Mesh) \
+                and len(self.owned) == self.n_shards:
             return compose_sharded_batch(parts, self.mesh)
         return jnp.concatenate(parts)
 
     def next_batch(self) -> Dict[str, jax.Array]:
         # the global query is shard-independent: compute + normalise it
-        # once and share it across all S per-shard sample calls.
+        # once and share it across all owned per-shard sample calls
+        # (bitwise the same value on every process — query_fn sees only
+        # the replicated params, never the shard).
         q = self.shards[0]._query()
         subs = [p.next_batch(query=q) for p in self.shards]
         m_s = self.cfg.minibatch // self.n_shards
@@ -1810,7 +1917,7 @@ class ShardedLSHPipeline:
             w = w / jnp.maximum(jnp.mean(w), 1e-30)
         batch["loss_weights"] = w.astype(jnp.float32)
         batch["shard_ids"] = self._compose([
-            jnp.full((m_s,), s, jnp.int32) for s in range(self.n_shards)])
+            jnp.full((m_s,), s, jnp.int32) for s in self.owned])
         return batch
 
 

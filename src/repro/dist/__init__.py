@@ -1,8 +1,19 @@
 from .sharding import (  # noqa: F401
     batch_sharding,
     current_mesh,
+    host_local_mesh,
     logical,
     param_spec,
     tree_param_shardings,
     use_mesh,
+)
+from .multihost import (  # noqa: F401
+    BarrierTimeout,
+    ClusterError,
+    ElasticCluster,
+    FileCoord,
+    HostLossDetected,
+    MultihostConfig,
+    backoff_delay,
+    shard_adoption_map,
 )

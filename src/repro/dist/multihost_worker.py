@@ -1,0 +1,408 @@
+"""One process of a multi-host elastic LGD run (+ the replay harness).
+
+Runnable worker for the multi-controller deployment: process r owns
+corpus shard r (``ShardedLSHPipeline(..., owned_shards=[r])``),
+hashes/refreshes locally, and crosses the interconnect only for the
+barrier-guarded parameter average every ``sync_every`` steps.  The
+full elastic story, end to end in one process's life:
+
+  1. HEALTHY — train on the local shard's draws; heartbeat each step;
+     at sync boundaries pass ``sync_barrier`` then average params
+     across processes (``process_allgather`` → host mean → fresh
+     process-LOCAL arrays, so the params never stay committed to a
+     mesh that includes peers that may die).
+  2. INCIDENT — a sync barrier exhausts its retries; the step hook
+     classifies the failure (stale heartbeats name the dead) and
+     raises ``HostLossDetected``, unwinding ``Trainer.run`` at a clean
+     step boundary.
+  3. DEGRADED — the survivor ADOPTS the lost shards
+     (``adopt_shards``: same shard count and bounds, so batch weights
+     keep the exact w = S/(p·N) form and E[mean w] = 1 mid-incident)
+     and keeps training process-locally.
+  4. REFORM — restore the newest verified checkpoint
+     (``restore_latest_valid_on_mesh``) and rebuild the pipeline with
+     the surviving shard count (``rebuild_sharded_pipeline``,
+     n_shards = survivors); the post-reform batch stream is
+     bit-identical to a fresh restore of the same checkpoint
+     (``replay_post_reform`` below recomputes the digest to prove it).
+  5. DETACH — results flushed, ``finalize_and_exit`` hard-exits (the
+     distributed runtime's shutdown barrier can never pass once a peer
+     is dead).
+
+The tiny model/corpus mirror ``tools/chaos.py`` so a 2-process CPU run
+finishes in CI seconds.  Faults are the deterministic injectors from
+``repro.testing`` (``ProcKill``/``ProcHang``/``DropBarrier``), armed
+per-rank from the command line.
+
+Usage (one line per process, shared coordinator address):
+
+    PYTHONPATH=src python -m repro.dist.multihost_worker \\
+        --rank 0 --nprocs 2 --coordinator 127.0.0.1:9876 \\
+        --ckpt-dir /tmp/mh/ckpt --result /tmp/mh/r0.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from .multihost import (
+    BarrierTimeout,
+    ElasticCluster,
+    HostLossDetected,
+    JaxCoord,
+    MultihostConfig,
+    NullCoord,
+    finalize_and_exit,
+    initialize,
+)
+
+# deterministic tiny-stack constants, shared by the worker AND the
+# replay harness — the reform digest is only meaningful because both
+# rebuild from the identical (key, corpus, config) triple.
+PIPE_KEY_SEED = 12
+PARAM_KEY_SEED = 0
+CORPUS = dict(seed=11, n_examples=256, seq_len=16, hard_frac=0.15)
+LR = 1e-2
+
+
+def model_cfg():
+    from repro.models import ModelConfig
+    return ModelConfig(
+        name="multihost-worker", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=64, chunk=16, loss_chunk=16,
+        dtype="float32", rope_theta=10000.0, lgd_enabled=True)
+
+
+def pipe_cfg():
+    from repro.data import LSHPipelineConfig
+    # synchronous refresh: the elastic protocol is the thing under
+    # test, and async refresh threads would outlive an os._exit drill.
+    # RAW w = S/(p·N) weights (no mean-1 normalisation): a partial
+    # owner never sees the global batch, and the unbiasedness check
+    # E[mean w] = 1 is only meaningful on unnormalised weights.
+    return LSHPipelineConfig(k=5, l=10, minibatch=16, refresh_every=10,
+                             refresh_async=False, refresh_backoff=0.0,
+                             normalize_weights=False)
+
+
+def build_pipeline(params, n_shards: int,
+                   owned_shards: Optional[List[int]] = None):
+    """The deterministic worker pipeline (any shard layout): same key,
+    corpus and config on every process, so shard s's draw stream is
+    identical whichever process owns it."""
+    import jax
+    from repro.data import (
+        ShardedLSHPipeline, lm_head_query_fn, make_token_corpus,
+        mean_pool_feature_fn)
+    cfg = model_cfg()
+    corpus = make_token_corpus(CORPUS["seed"], CORPUS["n_examples"],
+                               CORPUS["seq_len"], cfg.vocab,
+                               hard_frac=CORPUS["hard_frac"])
+    return ShardedLSHPipeline(
+        jax.random.PRNGKey(PIPE_KEY_SEED), corpus.tokens,
+        mean_pool_feature_fn(cfg), lm_head_query_fn(), pipe_cfg(),
+        n_shards=n_shards, params=params, owned_shards=owned_shards)
+
+
+class RecordBatches:
+    """Sampler proxy recording every draw's (example_ids, loss_weights)
+    — the raw material for the unbiasedness check (mean weight per
+    batch) and the bit-determinism digest.  Full sampler surface
+    delegates to the wrapped pipeline."""
+
+    def __init__(self, inner):
+        self._inner = inner
+        self.records: List[tuple] = []     # (ids bytes, weights bytes)
+        self.weight_means: List[float] = []
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def next_batch(self, *args, **kwargs):
+        b = self._inner.next_batch(*args, **kwargs)
+        ids = np.asarray(b["example_ids"], np.int64)
+        w = np.asarray(b["loss_weights"], np.float32)
+        self.records.append((ids.tobytes(), w.tobytes()))
+        self.weight_means.append(float(w.mean()))
+        return b
+
+
+def batch_digest(records) -> str:
+    """Order-sensitive digest over recorded draws: two streams agree
+    iff every batch's ids AND weights agree bitwise, in order."""
+    h = hashlib.sha256()
+    for ids_bytes, w_bytes in records:
+        h.update(ids_bytes)
+        h.update(w_bytes)
+    return h.hexdigest()
+
+
+def _average_params(params):
+    """Barrier-guarded cross-process parameter average (local-SGD
+    sync).  The result is materialised as fresh process-LOCAL arrays:
+    leaving params committed to a global (all-process) sharding would
+    poison every later LOCAL computation once a peer dies."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import multihost_utils
+    gathered = multihost_utils.process_allgather(params)
+    return jax.tree.map(
+        lambda g: jnp.asarray(np.asarray(g).mean(axis=0)), gathered)
+
+
+def _state_template(cfg, params):
+    from repro.optim import Adam
+    return {"params": params, "opt_state": Adam(lr=LR).init(params)}
+
+
+def replay_post_reform(ckpt_dir: str, restore_step: int, n_steps: int,
+                       n_shards: int = 1) -> Dict[str, Any]:
+    """Fresh restore of the reform checkpoint → digest of its stream.
+
+    The determinism oracle for the acceptance test: rebuild EXACTLY
+    what the survivor rebuilt (same checkpoint step, same shard count,
+    same deterministic stack), run the same number of steps, and
+    return the digest — bit-equality against the survivor's
+    ``post_digest`` proves the reformed stream is a pure function of
+    (checkpoint, shard count), not of the incident history.  Restores
+    READ-ONLY at ``restore_step`` (no ``discard_after`` — the
+    survivor's own post-reform checkpoints must outlive the replay).
+    """
+    import jax
+    from repro.data import make_token_corpus, mean_pool_feature_fn, \
+        lm_head_query_fn
+    from repro.models import ModelConfig, init_params  # noqa: F401
+    from repro.optim import Adam
+    from repro.train import Trainer, TrainerConfig, checkpoint as ckpt
+    from repro.train.elastic import rebuild_sharded_pipeline
+
+    cfg = model_cfg()
+    params0 = init_params(jax.random.PRNGKey(PARAM_KEY_SEED), cfg)
+    state, extra = ckpt.restore(ckpt_dir, restore_step,
+                                _state_template(cfg, params0))
+    corpus = make_token_corpus(CORPUS["seed"], CORPUS["n_examples"],
+                               CORPUS["seq_len"], cfg.vocab,
+                               hard_frac=CORPUS["hard_frac"])
+    pipe = rebuild_sharded_pipeline(
+        jax.random.PRNGKey(PIPE_KEY_SEED), corpus.tokens,
+        mean_pool_feature_fn(cfg), lm_head_query_fn(), pipe_cfg(),
+        extra.get("step", restore_step), n_shards=n_shards,
+        params=state["params"])
+    rec = RecordBatches(pipe)
+    tr = Trainer(cfg, state["params"], Adam(lr=LR),
+                 tcfg=TrainerConfig(ckpt_dir=None, log_every=1000),
+                 resume=False, sampler=rec)
+    tr.opt_state = state["opt_state"]
+    tr.step = extra.get("step", restore_step)
+    out = tr.run(n_steps)
+    tr.finalize()
+    return {
+        "digest": batch_digest(rec.records),
+        "losses": out["losses"],
+        "restore_step": tr.step - len(out["losses"]),
+        "weight_means": rec.weight_means,
+    }
+
+
+def make_step_hook(cluster: ElasticCluster, sync_every: int):
+    """The trainer attachment point: heartbeat every step; at sync
+    boundaries, barrier then average params.  Raises
+    ``HostLossDetected`` out of the trainer when the barrier exhausts
+    its retries — the worker's incident handler takes over."""
+
+    def hook(tr):
+        step = tr.step
+        cluster.heartbeat(step)
+        if step % sync_every != 0:
+            return
+        if len(cluster.alive) <= 1:
+            return                      # nothing to sync with
+        try:
+            cluster.sync_barrier(f"s{step}")
+        except BarrierTimeout:
+            raise HostLossDetected(step, cluster.classify_failure(step))
+        avg = _average_params(tr.params)
+        tr.params = avg
+        tr.sampler.set_params(avg)
+
+    return hook
+
+
+def run_worker(args) -> int:
+    mcfg = MultihostConfig(
+        rank=args.rank, num_processes=args.nprocs,
+        coordinator=args.coordinator,
+        heartbeat_timeout_s=args.heartbeat_timeout,
+        barrier_timeout_s=args.barrier_timeout,
+        barrier_retries=args.barrier_retries,
+        barrier_backoff_s=args.barrier_backoff,
+        sync_every=args.sync_every)
+    initialize(mcfg)                    # before any backend touch
+
+    import jax
+    from repro.models import init_params
+    from repro.optim import Adam
+    from repro.testing import ProcHang, ProcKill
+    from repro.train import Trainer, TrainerConfig, checkpoint as ckpt
+    from repro.train.elastic import (
+        rebuild_sharded_pipeline, restore_latest_valid_on_mesh)
+
+    coord = JaxCoord() if mcfg.num_processes > 1 else NullCoord()
+    cluster = ElasticCluster(mcfg, coord)
+    if args.kill_at is not None:
+        cluster.set_fault_injector(ProcKill(at_step=args.kill_at))
+    elif args.hang_at is not None:
+        cluster.set_fault_injector(
+            ProcHang(at_step=args.hang_at, seconds=args.hang_seconds))
+
+    # per-step wall clocks (one stamp per completed step, sync cost
+    # included at sync boundaries) — raw material for tab_multihost's
+    # 2-process-vs-1-process step-time comparison.
+    step_stamps: List[float] = []
+    timings: Dict[str, Any] = {"step_stamps": step_stamps}
+
+    cfg = model_cfg()
+    params = init_params(jax.random.PRNGKey(PARAM_KEY_SEED), cfg)
+    pipe = build_pipeline(params, n_shards=args.nprocs,
+                          owned_shards=[args.rank])
+    rec = RecordBatches(pipe)
+    # checkpoints: rank 0 writes (one writer — no cross-host fs races);
+    # every rank knows the path for the reform restore.
+    elastic_hook = make_step_hook(cluster, mcfg.sync_every)
+
+    def timed_hook(tr_):
+        elastic_hook(tr_)               # may raise HostLossDetected
+        step_stamps.append(time.perf_counter())
+
+    tcfg = TrainerConfig(
+        ckpt_dir=args.ckpt_dir if args.rank == 0 else None,
+        ckpt_every=args.ckpt_every, log_every=1000,
+        step_hook=timed_hook)
+    tr = Trainer(cfg, params, Adam(lr=LR), tcfg=tcfg, resume=False,
+                 sampler=rec)
+
+    result: Dict[str, Any] = {"rank": args.rank, "incident": None}
+    incident = None
+    try:
+        out = tr.run(args.steps)
+        result["losses_pre"] = out["losses"]
+    except HostLossDetected as e:
+        incident = e
+
+    if incident is not None:
+        result["incident"] = {"step": incident.step,
+                              "dead": incident.dead}
+        result["pre_steps"] = tr.step   # run() unwound; no losses list
+        # -- DEGRADED: adopt the lost shards, keep training locally ---
+        adopt = cluster.shards_to_adopt(args.nprocs)
+        pipe.adopt_shards(adopt, step=tr.step)
+        cluster.note_adopted(tr.step, adopt)
+        # the raise unwound run() AFTER its prefetch draw: the old
+        # shards' counters sit one draw ahead of tr.step.  Realign the
+        # whole pipeline (cheap — counters only, no rebuild).
+        pipe.restore_at(tr.step, rebuild=False)
+        n_before = len(rec.records)
+        out_deg = tr.run(args.degraded_steps)
+        result["losses_degraded"] = out_deg["losses"]
+        result["degraded_weight_means"] = rec.weight_means[n_before:]
+        tr.finalize()
+
+        # -- REFORM: newest verified checkpoint, surviving shards -----
+        n_surv = len(cluster.alive)
+        t_reform0 = time.perf_counter()
+        step_r, state, extra = restore_latest_valid_on_mesh(
+            args.ckpt_dir, _state_template(cfg, params), mesh=None)
+        from repro.data import make_token_corpus, \
+            mean_pool_feature_fn, lm_head_query_fn
+        corpus = make_token_corpus(
+            CORPUS["seed"], CORPUS["n_examples"], CORPUS["seq_len"],
+            cfg.vocab, hard_frac=CORPUS["hard_frac"])
+        pipe2 = rebuild_sharded_pipeline(
+            jax.random.PRNGKey(PIPE_KEY_SEED), corpus.tokens,
+            mean_pool_feature_fn(cfg), lm_head_query_fn(), pipe_cfg(),
+            extra.get("step", step_r), n_shards=n_surv,
+            params=state["params"])
+        rec2 = RecordBatches(pipe2)
+
+        def mark_first_post_step(tr_):
+            # reform-time-to-first-step: restore + rebuild + the first
+            # post-reform trainer step, one number (tab_multihost).
+            timings.setdefault(
+                "reform_to_first_step_s",
+                time.perf_counter() - t_reform0)
+
+        tr2 = Trainer(cfg, state["params"], Adam(lr=LR),
+                      tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir,
+                                         ckpt_every=args.ckpt_every,
+                                         log_every=1000,
+                                         step_hook=mark_first_post_step),
+                      resume=False, sampler=rec2)
+        tr2.opt_state = state["opt_state"]
+        tr2.step = extra.get("step", step_r)
+        # the incident timeline past the restore point is abandoned —
+        # the reformed run's own writes are authoritative.
+        ckpt.discard_after(args.ckpt_dir, tr2.step)
+        cluster.note_reformed(tr2.step, n_surv)
+        result["restore_step"] = tr2.step
+        result["reform_shards"] = n_surv
+        out_post = tr2.run(args.post_steps)
+        tr2.finalize()
+        result["losses_post"] = out_post["losses"]
+        result["post_digest"] = batch_digest(rec2.records)
+        result["post_draws"] = len(rec2.records)
+    else:
+        tr.finalize()
+        result["final_step"] = tr.step
+        result["weight_means"] = rec.weight_means
+        result["digest"] = batch_digest(rec.records)
+
+    result["cluster"] = cluster.summary()
+    result["timings"] = timings
+    if args.result:
+        os.makedirs(os.path.dirname(args.result) or ".", exist_ok=True)
+        tmp = args.result + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(result, f)
+        os.replace(tmp, args.result)
+    finalize_and_exit(cluster, 0)
+
+
+def build_arg_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--rank", type=int, required=True)
+    ap.add_argument("--nprocs", type=int, required=True)
+    ap.add_argument("--coordinator", default="127.0.0.1:9876")
+    ap.add_argument("--ckpt-dir", required=True,
+                    help="shared checkpoint dir (rank 0 writes)")
+    ap.add_argument("--result", default="",
+                    help="write this rank's result JSON here")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--sync-every", type=int, default=5)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--degraded-steps", type=int, default=6)
+    ap.add_argument("--post-steps", type=int, default=10)
+    ap.add_argument("--heartbeat-timeout", type=float, default=3.0)
+    ap.add_argument("--barrier-timeout", type=float, default=2.0)
+    ap.add_argument("--barrier-retries", type=int, default=1)
+    ap.add_argument("--barrier-backoff", type=float, default=0.1)
+    ap.add_argument("--kill-at", type=int, default=None,
+                    help="hard-exit THIS rank at this step (ProcKill)")
+    ap.add_argument("--hang-at", type=int, default=None,
+                    help="stall THIS rank at this step (ProcHang)")
+    ap.add_argument("--hang-seconds", type=float, default=8.0)
+    return ap
+
+
+def main(argv=None) -> int:
+    return run_worker(build_arg_parser().parse_args(argv))
+
+
+if __name__ == "__main__":
+    main()

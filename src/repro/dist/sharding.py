@@ -196,6 +196,25 @@ def batch_sharding(mesh):
     return NamedSharding(mesh, P(_data_axes(mesh)))
 
 
+def host_local_mesh(axis_names=("data", "model")):
+    """Mesh over THIS process's addressable devices — the surviving
+    mesh of a multi-controller deployment after peers are gone.
+
+    The elastic reform path (``repro.dist.multihost``) restores the
+    newest verified checkpoint onto whatever devices the survivor still
+    addresses; a global mesh would hang on dead hosts' devices, so the
+    reform must shard over ``jax.local_devices()`` only.  Returns None
+    when a single local device leaves nothing to shard over (callers
+    pass ``mesh=None`` downstream — the unsharded path).
+    """
+    devs = jax.local_devices()
+    if len(devs) < 2:
+        return None
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs).reshape(len(devs), 1), axis_names)
+
+
 # ---------------------------------------------------------------------------
 # device-resident example stores (LGD shard-by-example)
 # ---------------------------------------------------------------------------

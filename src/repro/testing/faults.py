@@ -22,6 +22,15 @@ docs/ARCHITECTURE.md:
   checkpoint rollback.  Injection rides in BATCH DATA, not in the loss
   function, so the jitted step is untouched (no recompiles, no
   step-conditional tracing).
+* PROCESS faults (``ProcKill``, ``ProcHang``, ``DropBarrier``) hook
+  the elastic cluster's ``set_fault_injector`` port
+  (``repro.dist.multihost.ElasticCluster``) and fire on its
+  ``cluster_step`` / ``sync_barrier`` events — exercising host-loss
+  detection (stale heartbeats), barrier retry/backoff, and the
+  missing-host-degraded → reformed ladder.  ``ProcKill`` is the one
+  deliberately NON-recoverable injector: it hard-exits the process the
+  way a dead host disappears (no atexit, no flush), and the SURVIVORS'
+  recovery is what the chaos test proves.
 """
 
 from __future__ import annotations
@@ -149,6 +158,69 @@ class NanLossWeights:
     def restore_at(self, step: int, **kwargs):
         self._inner.restore_at(step, **kwargs)
         self._draws = step             # batch k <-> step k realignment
+
+
+# -- process-level faults (multi-host elastic protocol) ----------------------
+# Fired by ``ElasticCluster``: ``cluster_step`` (``step=, rank=``) on
+# every heartbeat call, ``sync_barrier`` (``name=, attempt=, rank=``)
+# before every barrier arrival.
+
+
+class ProcKill(FaultInjector):
+    """Hard-exit the process at step ``at_step`` — a host loss.
+
+    ``os._exit`` (not ``sys.exit``): a dead host does not run atexit
+    hooks, flush buffers, or arrive at the distributed runtime's
+    shutdown barrier — and neither does this injector.  Exit code 17
+    marks the death as injected for the harness.
+    """
+
+    EXIT_CODE = 17
+
+    def __init__(self, at_step: int):
+        self.at_step = at_step
+
+    def fire(self, event: str, **info):
+        if event == "cluster_step" and info.get("step") == self.at_step:
+            os._exit(self.EXIT_CODE)
+
+
+class ProcHang(FaultInjector):
+    """Stall the process for ``seconds`` at step ``at_step`` — a slow /
+    GC-paused / partitioned host.  Shorter than the cluster's total
+    barrier grace it costs one retry; longer, the host is declared lost
+    even though it still lives (the ladder's slow == failed policy)."""
+
+    def __init__(self, at_step: int, seconds: float):
+        self.at_step = at_step
+        self.seconds = seconds
+        self.fired = 0
+
+    def fire(self, event: str, **info):
+        if event == "cluster_step" and info.get("step") == self.at_step:
+            self.fired += 1
+            time.sleep(self.seconds)
+
+
+class DropBarrier(FaultInjector):
+    """Fail this rank's first ``count`` arrivals at sync barriers whose
+    name contains ``match`` — a dropped collective (lost packet, stuck
+    NCCL ring).  The cluster counts the failed attempt and retries with
+    backoff, so ``count <= barrier_retries`` heals transparently."""
+
+    def __init__(self, match: str = "", count: int = 1):
+        self.match = match
+        self.count = count
+        self.fired = 0
+
+    def fire(self, event: str, **info):
+        if event != "sync_barrier" or self.fired >= self.count:
+            return
+        if self.match in str(info.get("name", "")):
+            self.fired += 1
+            raise FaultError(
+                f"injected dropped barrier {info.get('name')!r} "
+                f"(attempt {info.get('attempt')})")
 
 
 # -- checkpoint corrupters ---------------------------------------------------

@@ -71,6 +71,7 @@ def rebuild_sharded_pipeline(
     params: Any = None,
     feature_batch: int = 512,
     mutation_log: Any = None,
+    owned_shards=None,
 ):
     """Reshard-on-restore for the LGD pipeline: rebuild per-shard indexes.
 
@@ -87,17 +88,44 @@ def rebuild_sharded_pipeline(
     log (checkpoint ``extra["mutation_log"]``); replayed by
     ``restore_at`` so the restored windows hold the checkpointed
     membership.  Streaming logs record their shard routing, so they
-    restore only onto the SAME ``n_shards`` (the pipeline raises
-    otherwise); ``tokens`` must be the original construction-time
-    corpus, not the mutated window.
+    restore only onto the SAME ``n_shards`` — checked EARLY here, see
+    below; ``tokens`` must be the original construction-time corpus,
+    not the mutated window.
+
+    ``owned_shards``: restrict the rebuild to a subset of shard ids
+    (multi-controller restore: each process rebuilds only the shards it
+    owns — see ``ShardedLSHPipeline``; static corpora only — the
+    sharded streaming weight composition needs every shard's live
+    count).  A host-loss reform on a STREAMING run therefore keeps the
+    recorded ``n_shards`` with one process owning all of them
+    (``owned_shards=None``); a static-corpus reform is free to
+    re-partition (``n_shards=<survivors>``) instead.
     """
     from repro.data.lsh_pipeline import ShardedLSHPipeline
 
     if n_shards is None:
         n_shards = data_axis_size(mesh) if mesh is not None else 1
+    if isinstance(mutation_log, dict) and "n_shards" in mutation_log:
+        logged = int(mutation_log["n_shards"])
+        if logged != n_shards:
+            # fail BEFORE the O(N) shard builds, with the remediation:
+            # logged append/evict entries are routed by the recorded
+            # shard bounds (global ids encode their owning shard, and
+            # window eviction order is shard-local), so replaying them
+            # under different bounds would silently change the restored
+            # membership — there is no canonical re-routing.
+            raise ValueError(
+                f"streaming mutation log was recorded under n_shards="
+                f"{logged} but this rebuild targets n_shards="
+                f"{n_shards}: logged append/evict entries only replay "
+                f"on the recorded shard layout.  Restore with "
+                f"n_shards={logged} (one surviving process owns every "
+                f"recorded shard), or rebuild the window from the "
+                f"upstream source instead of the log.")
     pipe = ShardedLSHPipeline(
         key, tokens, feature_fn, query_fn, config, n_shards=n_shards,
-        feature_batch=feature_batch, params=params, mesh=mesh)
+        feature_batch=feature_batch, params=params, mesh=mesh,
+        owned_shards=owned_shards)
     if mutation_log is not None:
         pipe.load_mutation_log(mutation_log)
     # the constructor just built every index from the restored params
@@ -112,13 +140,47 @@ def rebuild_sharded_pipeline(
 def rescale_plan(old_devices: int, new_devices: int,
                  global_batch: int) -> dict:
     """Policy for elastic rescale: keep the GLOBAL batch fixed so the
-    optimisation trajectory is unchanged; per-device batch adjusts."""
-    assert global_batch % new_devices == 0 or new_devices % 2 == 0
-    return {
+    optimisation trajectory is unchanged; per-device batch and gradient
+    accumulation adjust.
+
+    Invariants (asserted):
+      * ``per_device_batch_new * new_devices * grad_accum_steps ==
+        global_batch`` — the plan is exactly consistent with the fixed
+        global batch (no silent rounding);
+      * ``per_device_batch_new <= per_device_batch_old`` — accumulation
+        GROWS when devices shrink, so a scale-DOWN never asks a device
+        for more memory than it already proved it has.  Scale-up needs
+        no accumulation (``grad_accum_steps == 1``).
+
+    Raises ``ValueError`` when ``global_batch`` does not divide over
+    ``new_devices`` — SPMD devices step in lockstep on equal slices, so
+    an indivisible batch cannot be kept fixed; the caller must pick a
+    dividing device count or change the batch explicitly.
+    """
+    if old_devices <= 0 or new_devices <= 0:
+        raise ValueError(
+            f"device counts must be positive, got old={old_devices} "
+            f"new={new_devices}")
+    if global_batch % new_devices != 0:
+        raise ValueError(
+            f"global_batch={global_batch} does not divide over "
+            f"new_devices={new_devices}; elastic rescale keeps the "
+            f"global batch fixed, so restore on a device count that "
+            f"divides it (or change the batch explicitly)")
+    micro = global_batch // new_devices       # rows/device per optimiser step
+    per_old = max(global_batch // old_devices, 1)
+    # smallest accumulation depth that (a) caps the per-device batch at
+    # the old one and (b) divides the per-device rows exactly.
+    target = -(-micro // per_old)
+    accum = next(a for a in range(target, micro + 1) if micro % a == 0)
+    plan = {
         "old_devices": old_devices,
         "new_devices": new_devices,
         "global_batch": global_batch,
-        "per_device_batch_old": global_batch // max(old_devices, 1),
-        "per_device_batch_new": max(global_batch // new_devices, 1),
-        "grad_accum_steps": max(1, new_devices // global_batch),
+        "per_device_batch_old": per_old,
+        "per_device_batch_new": micro // accum,
+        "grad_accum_steps": accum,
     }
+    assert (plan["per_device_batch_new"] * new_devices
+            * plan["grad_accum_steps"] == global_batch), plan
+    return plan

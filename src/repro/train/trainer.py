@@ -113,6 +113,15 @@ class TrainerConfig:
     # lifetime cap on rollbacks (a persistent NaN source must not pin
     # the run in a restore loop forever).
     max_rollbacks: int = 3
+    # called with the Trainer after every COMPLETED step (post-update,
+    # post-checkpoint) — the multi-host deployment's attachment point
+    # for heartbeats, membership barriers and cross-process parameter
+    # averaging (repro.dist.multihost).  The hook may mutate
+    # ``trainer.params`` (push the result via ``trainer.sampler
+    # .set_params`` too) and may raise to unwind ``run()`` at a clean
+    # step boundary: params/opt_state/step are consistent, and a later
+    # ``restore_at`` realigns the data stream.
+    step_hook: Optional[Callable] = None
 
 
 class Trainer:
@@ -356,6 +365,12 @@ class Trainer:
     # -- loop ----------------------------------------------------------------
 
     @property
+    def sampler(self):
+        """The LGD sampler this trainer drives (None in batches mode) —
+        exposed for step hooks that mutate params and must push them."""
+        return self._sampler
+
+    @property
     def sampler_overhead(self) -> float:
         """Fraction of loop wall time spent blocked on batch draws."""
         return self.data_seconds / max(self.loop_seconds, 1e-12)
@@ -470,6 +485,10 @@ class Trainer:
             if self.tcfg.ckpt_dir and \
                     self.step % self.tcfg.ckpt_every == 0:
                 self.save()
+            if self.tcfg.step_hook is not None:
+                # cluster attachment point — may mutate params or raise
+                # (e.g. HostLossDetected) at this clean step boundary.
+                self.tcfg.step_hook(self)
             if next_batch is None:
                 break
         self.loop_seconds += time.time() - t_loop

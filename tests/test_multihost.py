@@ -1,0 +1,581 @@
+"""Multi-host elastic LGD: membership protocol, shard adoption, reform.
+
+Three layers, cheapest first:
+
+* PROTOCOL — ``backoff_delay`` determinism, ``shard_adoption_map``,
+  ``FileCoord`` barriers/KV, and ``ElasticCluster``'s ladder driven
+  in-process over a shared-directory transport (threads as "hosts",
+  injected clocks for staleness — no jax.distributed anywhere).
+* PIPELINE — ``owned_shards`` partial ownership composes bitwise into
+  the full-ownership batch stream, ``adopt_shards`` mid-incident
+  equals full ownership bitwise (which carries the E[1/(pN)] = 1
+  unbiasedness over from the proven full pipeline), and the
+  reshard-vs-mutation-log guard.
+* ACCEPTANCE — a real 2-process ``jax.distributed`` CPU run
+  (``repro.dist.multihost_worker``) where one process is hard-killed
+  mid-training: the survivor must walk healthy → missing-host-degraded
+  → reformed, and its post-reform stream must be bit-identical to a
+  fresh restore of the same checkpoint.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (
+    CLUSTER_DEGRADED,
+    CLUSTER_HEALTHY,
+    CLUSTER_REFORMED,
+    ClusterHealthMonitor,
+    LSHPipelineConfig,
+    ShardedLSHPipeline,
+)
+from repro.dist.multihost import (
+    BarrierTimeout,
+    ElasticCluster,
+    FileCoord,
+    HostLossDetected,
+    MultihostConfig,
+    backoff_delay,
+    shard_adoption_map,
+)
+from repro.testing import DropBarrier, FaultError, ProcKill
+from repro.train import Trainer, TrainerConfig
+from repro.train.elastic import rebuild_sharded_pipeline
+
+KEY = jax.random.PRNGKey(0)
+VOCAB, DIM = 50, 16
+EMBED = jax.random.normal(jax.random.PRNGKey(1), (VOCAB, DIM))
+PARAMS = {"embed": EMBED, "q": jnp.ones((DIM,))}
+
+
+def _tokens(n=96, seq=9, seed=3):
+    return np.asarray(
+        jax.random.randint(jax.random.PRNGKey(seed), (n, seq), 0, VOCAB),
+        np.int32)
+
+
+def feature_fn(params, chunk):
+    return jnp.mean(params["embed"][chunk], axis=1)
+
+
+def query_fn(params):
+    return params["q"]
+
+
+def _pipe(n_shards=2, owned_shards=None, tokens=None, **kw):
+    kw.setdefault("refresh_every", 6)
+    kw.setdefault("k", 4)
+    kw.setdefault("l", 8)
+    cfg = LSHPipelineConfig(minibatch=16, normalize_weights=False, **kw)
+    return ShardedLSHPipeline(
+        jax.random.PRNGKey(7),
+        tokens if tokens is not None else _tokens(),
+        feature_fn, query_fn, cfg, n_shards=n_shards, params=PARAMS,
+        owned_shards=owned_shards)
+
+
+# ---------------------------------------------------------------------------
+# protocol primitives
+# ---------------------------------------------------------------------------
+
+
+class TestBackoffDelay:
+    def test_deterministic_and_rank_free(self):
+        # the jitter is a pure function of (tag, attempt) — every rank
+        # computes the identical sleep, keeping retry attempts aligned
+        # across the cluster with zero coordination.
+        assert backoff_delay("sync", 3, 0.5) == backoff_delay(
+            "sync", 3, 0.5)
+        assert backoff_delay("sync", 1, 0.5) != backoff_delay(
+            "other", 1, 0.5)
+
+    def test_exponential_envelope(self):
+        for a in (1, 2, 3, 4):
+            d = backoff_delay("x", a, 0.25)
+            lo = 0.25 * 2 ** (a - 1)
+            assert lo <= d <= 1.5 * lo
+
+    def test_degenerate_inputs(self):
+        assert backoff_delay("x", 0, 1.0) == 0.0
+        assert backoff_delay("x", 3, 0.0) == 0.0
+
+
+class TestShardAdoptionMap:
+    def test_identity_when_all_alive(self):
+        assert shard_adoption_map(4, [0, 1, 2, 3]) == {
+            0: 0, 1: 1, 2: 2, 3: 3}
+
+    def test_orphans_round_robin_over_survivors(self):
+        m = shard_adoption_map(4, [0, 2])
+        assert m[0] == 0 and m[2] == 2
+        assert sorted([m[1], m[3]]) == [0, 2]   # spread, not piled
+
+    def test_deterministic_and_total(self):
+        # every process must compute the identical map from the
+        # identical membership view — including input-order invariance.
+        assert shard_adoption_map(5, [3, 1]) == shard_adoption_map(
+            5, [1, 3, 3])
+        m = shard_adoption_map(5, [1, 3])
+        assert set(m) == set(range(5))
+        assert set(m.values()) <= {1, 3}
+
+    def test_no_survivors_raises(self):
+        with pytest.raises(ValueError):
+            shard_adoption_map(4, [])
+
+
+class TestFileCoord:
+    def test_kv_roundtrip_and_prefix(self, tmp_path):
+        c = FileCoord(str(tmp_path), rank=0, num_processes=1)
+        c.kv_set("hb/g0/r0", "a")
+        c.kv_set("hb/g0/r1", "b")
+        c.kv_set("hb/g1/r0", "c")
+        got = c.kv_dir("hb/g0/")
+        assert got == {"hb/g0/r0": "a", "hb/g0/r1": "b"}
+        c.kv_set("hb/g0/r0", "a2")          # overwrite
+        assert c.kv_dir("hb/g0/")["hb/g0/r0"] == "a2"
+
+    def test_barrier_passes_when_all_arrive(self, tmp_path):
+        coords = [FileCoord(str(tmp_path), r, 3) for r in range(3)]
+        errs = []
+
+        def arrive(c):
+            try:
+                c.barrier("b1", timeout_s=5.0)
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=arrive, args=(c,)) for c in coords]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+
+    def test_barrier_timeout_names_missing_ranks(self, tmp_path):
+        c = FileCoord(str(tmp_path), rank=0, num_processes=2)
+        with pytest.raises(BarrierTimeout, match=r"missing ranks \[1\]"):
+            c.barrier("b2", timeout_s=0.2)
+
+
+# ---------------------------------------------------------------------------
+# cluster ladder (in-process, FileCoord transport, injected clocks)
+# ---------------------------------------------------------------------------
+
+
+def _cluster(tmp_path, rank, nprocs, clock=None, sleep=None, **kw):
+    kw.setdefault("barrier_timeout_s", 0.3)
+    kw.setdefault("barrier_retries", 1)
+    kw.setdefault("barrier_backoff_s", 0.0)
+    kw.setdefault("heartbeat_timeout_s", 5.0)
+    cfg = MultihostConfig(rank=rank, num_processes=nprocs, **kw)
+    coord = FileCoord(str(tmp_path), rank, nprocs)
+    return ElasticCluster(cfg, coord, clock=clock or time.time,
+                          sleep=sleep or (lambda s: None))
+
+
+class TestElasticCluster:
+    def test_heartbeat_staleness_detects_dead(self, tmp_path):
+        now = [100.0]
+        a = _cluster(tmp_path, 0, 2, clock=lambda: now[0])
+        b = _cluster(tmp_path, 1, 2, clock=lambda: now[0])
+        a.heartbeat(1)
+        b.heartbeat(1)
+        assert a.dead_peers() == []
+        now[0] += 10.0                      # b stops beating
+        a.heartbeat(2)
+        assert a.dead_peers() == [1]
+
+    def test_sync_barrier_both_arrive(self, tmp_path):
+        a = _cluster(tmp_path, 0, 2, barrier_timeout_s=5.0)
+        b = _cluster(tmp_path, 1, 2, barrier_timeout_s=5.0)
+        errs = []
+
+        def go(c):
+            try:
+                c.sync_barrier("s5")
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=go, args=(c,)) for c in (a, b)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+
+    def test_dropped_barrier_heals_within_retries(self, tmp_path):
+        # DropBarrier fails rank 0's FIRST arrival; the retry (attempt
+        # 2, same id on both ranks) must clear — a transient dropped
+        # collective costs one barrier window, not the host.  Real
+        # sleeps: the faulting rank must burn the window its peer is
+        # stuck waiting in, or the attempt counters desync for good.
+        a = _cluster(tmp_path, 0, 2, barrier_timeout_s=0.5,
+                     sleep=time.sleep)
+        b = _cluster(tmp_path, 1, 2, barrier_timeout_s=0.5,
+                     sleep=time.sleep)
+        fault = DropBarrier(match="s7", count=1)
+        a.set_fault_injector(fault)
+        errs = []
+
+        def go(c):
+            try:
+                c.sync_barrier("s7")
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=go, args=(c,)) for c in (a, b)]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        assert fault.fired == 1
+
+    def test_exhausted_retries_raise_barrier_timeout(self, tmp_path):
+        a = _cluster(tmp_path, 0, 2)
+        with pytest.raises(BarrierTimeout, match="after 2 attempt"):
+            a.sync_barrier("s9")            # rank 1 never arrives
+
+    def test_classify_failure_walks_the_ladder(self, tmp_path):
+        now = [100.0]
+        a = _cluster(tmp_path, 0, 2, clock=lambda: now[0])
+        b = _cluster(tmp_path, 1, 2, clock=lambda: now[0])
+        a.heartbeat(1)
+        b.heartbeat(1)
+        now[0] += 10.0                      # b dies
+        a.heartbeat(15)
+        with pytest.raises(BarrierTimeout):
+            a.sync_barrier("s15")
+        dead = a.classify_failure(15)
+        assert dead == [1]
+        assert a.alive == {0}
+        assert a.generation == 1            # stale beats can't leak in
+        assert a.health.state == CLUSTER_DEGRADED
+        assert not a.intact
+        # deterministic adoption: shard 1 lands on the only survivor
+        assert a.shards_to_adopt(2) == [1]
+        # a cluster of one barriers trivially from here on
+        a.sync_barrier("s20")
+        a.note_reformed(20, 1)
+        assert a.health.state == CLUSTER_REFORMED
+        assert a.summary()["reforms"] == 1
+
+    def test_alive_but_stuck_peer_is_declared_lost(self, tmp_path):
+        # every peer still beats, yet the barrier cannot clear past its
+        # bounded retries: slow == failed (the ladder's grace is the
+        # retry budget, not forever).
+        a = _cluster(tmp_path, 0, 2)
+        b = _cluster(tmp_path, 1, 2)
+        a.heartbeat(5)
+        b.heartbeat(5)                      # b beats but never arrives
+        with pytest.raises(BarrierTimeout):
+            a.sync_barrier("s5")
+        dead = a.classify_failure(5)
+        assert dead == [1]
+        reason = a.health.transitions[-1][3]
+        assert "retries exhausted" in reason
+
+    def test_prockill_fires_on_cluster_step_event(self):
+        fault = ProcKill(at_step=7)
+        fired = []
+        fault_os_exit = os._exit
+        try:
+            os._exit = lambda code: fired.append(code)
+            fault.fire("cluster_step", step=6)
+            assert fired == []
+            fault.fire("cluster_step", step=7)
+            assert fired == [ProcKill.EXIT_CODE]
+        finally:
+            os._exit = fault_os_exit
+
+
+class TestClusterHealthMonitor:
+    def test_ladder_and_audit_trail(self):
+        m = ClusterHealthMonitor()
+        assert m.state == CLUSTER_HEALTHY and not m.degraded
+        m.note_host_lost(15, [1], "stale heartbeat")
+        assert m.state == CLUSTER_DEGRADED and m.degraded
+        assert m.lost_hosts == [1]
+        m.note_adopted(15, 1, by_rank=0)
+        m.note_reformed(20, 1)
+        assert m.state == CLUSTER_REFORMED and m.reforms == 1
+        s = m.summary()
+        assert [t[1:3] for t in s["transitions"]] == [
+            (CLUSTER_HEALTHY, CLUSTER_DEGRADED),
+            (CLUSTER_DEGRADED, CLUSTER_REFORMED)]
+        kinds = [e[1] for e in s["events"]]
+        assert kinds == ["host-lost", "shard-adopted"]
+
+
+# ---------------------------------------------------------------------------
+# partial ownership + adoption (the unbiasedness carrier)
+# ---------------------------------------------------------------------------
+
+
+def _cat(batches, key):
+    return np.concatenate([np.asarray(b[key]) for b in batches])
+
+
+class TestOwnedShards:
+    def test_per_process_draws_compose_bitwise(self):
+        """Process r's sub-batch (owned_shards=[r]) equals rows
+        [r·m/S, (r+1)·m/S) of the single-controller global batch,
+        bitwise, draw after draw — shard s's stream depends only on
+        fold_in(key, s), never on which process owns it."""
+        full = _pipe(n_shards=2)
+        p0 = _pipe(n_shards=2, owned_shards=[0])
+        p1 = _pipe(n_shards=2, owned_shards=[1])
+        for _ in range(8):
+            g = full.next_batch()
+            parts = [p0.next_batch(), p1.next_batch()]
+            for k in ("tokens", "targets", "loss_weights",
+                      "example_ids"):
+                np.testing.assert_array_equal(
+                    np.asarray(g[k]), _cat(parts, k), err_msg=k)
+
+    def test_partial_owner_validation(self):
+        with pytest.raises(ValueError, match="owned_shards must not"):
+            _pipe(n_shards=2, owned_shards=[])
+        with pytest.raises(ValueError, match=r"not in \[0, 2\)"):
+            _pipe(n_shards=2, owned_shards=[2])
+        with pytest.raises(ValueError, match="normalize_weights"):
+            ShardedLSHPipeline(
+                jax.random.PRNGKey(7), _tokens(), feature_fn, query_fn,
+                LSHPipelineConfig(k=4, l=8, minibatch=16,
+                                  refresh_every=6),
+                n_shards=2, params=PARAMS, owned_shards=[0])
+        with pytest.raises(ValueError, match="streaming"):
+            _pipe(n_shards=2, owned_shards=[0], window=48,
+                  refresh_every=0)
+
+    def test_fault_injector_uses_global_shard_ids(self):
+        p1 = _pipe(n_shards=2, owned_shards=[1])
+        with pytest.raises(ValueError, match="not owned here"):
+            p1.set_fault_injector(DropBarrier(), shard=0)
+        p1.set_fault_injector(DropBarrier(), shard=1)   # global id 1
+
+
+class TestAdoptShards:
+    def test_adoption_equals_full_ownership_bitwise(self):
+        """Survivor flow: own shard 0, train k draws, adopt shard 1 at
+        step k — every later draw must equal the full-ownership
+        pipeline's, bitwise.  This transfers E[1/(pN)] = 1 to the
+        adopted stream: the weights are byte-identical to the full
+        pipeline's, whose unbiasedness is pinned by
+        tests/test_sharded_lgd.py::test_sharded_estimator_unbiased."""
+        k = 5
+        full = _pipe(n_shards=2)
+        part = _pipe(n_shards=2, owned_shards=[0])
+        for _ in range(k):
+            full.next_batch()
+            part.next_batch()
+        part.adopt_shards([1], step=k)
+        assert part.owned == [0, 1]
+        for _ in range(6):
+            g = full.next_batch()
+            a = part.next_batch()
+            for key in ("tokens", "targets", "loss_weights",
+                        "example_ids"):
+                np.testing.assert_array_equal(
+                    np.asarray(g[key]), np.asarray(a[key]), err_msg=key)
+
+    def test_adopted_weights_unbiased(self):
+        """E[1/(pN)] = 1 on the adopted (full-ownership-by-one-owner)
+        stream, measured in the calibrated k=3, l=64 regime.  The
+        expectation in Theorem 1 is over HASH DRAWS, so the average
+        runs over index builds (pipeline keys) as well as draws —
+        any single build carries an O(10%) finite-L offset (the same
+        calibration note as test_sharded_lgd)."""
+        tokens = _tokens(n=96, seed=3)
+        v = np.asarray(
+            jnp.mean(EMBED[tokens[:, :-1]], axis=(1, 2))) + 2.0
+        truth = float(v.mean())
+        es, ws = [], []
+        for seed in range(8):
+            pipe = ShardedLSHPipeline(
+                jax.random.PRNGKey(seed), tokens, feature_fn, query_fn,
+                LSHPipelineConfig(k=3, l=64, minibatch=16,
+                                  refresh_every=0,
+                                  normalize_weights=False),
+                n_shards=2, params=PARAMS, owned_shards=[0])
+            pipe.adopt_shards([1], step=0)   # survivor owns everything
+            for _ in range(30):
+                b = pipe.next_batch()
+                w = np.asarray(b["loss_weights"], np.float64)
+                es.append(np.mean(w * v[np.asarray(b["example_ids"])]))
+                ws.append(w.mean())
+        assert abs(np.mean(es) - truth) / truth < 0.05, (
+            np.mean(es), truth)
+        assert abs(np.mean(ws) - 1.0) < 0.05, np.mean(ws)
+
+    def test_adoption_errors(self):
+        part = _pipe(n_shards=2, owned_shards=[0])
+        with pytest.raises(ValueError, match="already owned"):
+            part.adopt_shards([0], step=0)
+        with pytest.raises(ValueError, match=r"not in \[0, 2\)"):
+            part.adopt_shards([2], step=0)
+        stream = _pipe(n_shards=2, window=48, refresh_every=0)
+        with pytest.raises(ValueError, match="static corpus"):
+            stream.adopt_shards([1], step=0)
+
+
+class TestReshardMutationLog:
+    def test_shard_count_mismatch_is_actionable(self):
+        # checked EARLY — before any O(N) shard build — so the message
+        # must carry the remediation (restore on the recorded count).
+        with pytest.raises(ValueError, match="recorded shard layout"):
+            rebuild_sharded_pipeline(
+                jax.random.PRNGKey(7), _tokens(), feature_fn, query_fn,
+                LSHPipelineConfig(k=4, l=8, minibatch=16,
+                                  refresh_every=0,
+                                  normalize_weights=False, window=48),
+                step=4, n_shards=1,
+                mutation_log={"n_shards": 2, "shards": [[], []]},
+                params=PARAMS)
+
+    def test_recorded_shard_count_replays(self):
+        pipe = rebuild_sharded_pipeline(
+            jax.random.PRNGKey(7), _tokens(), feature_fn, query_fn,
+            LSHPipelineConfig(k=4, l=8, minibatch=16, refresh_every=0,
+                              normalize_weights=False, window=48),
+            step=0, n_shards=2,
+            mutation_log={"n_shards": 2, "shards": [[], []]},
+            params=PARAMS)
+        assert pipe.n_shards == 2
+        pipe.next_batch()                   # draws fine post-replay
+
+
+# ---------------------------------------------------------------------------
+# trainer step hook (the cluster attachment point)
+# ---------------------------------------------------------------------------
+
+
+def _lm_cfg():
+    from repro.models import ModelConfig
+    return ModelConfig(
+        name="hook-test", n_layers=2, d_model=32, n_heads=4,
+        n_kv_heads=2, d_ff=64, vocab=VOCAB, chunk=8, loss_chunk=8,
+        dtype="float32", rope_theta=10000.0, lgd_enabled=True)
+
+
+class TestStepHook:
+    def _stack(self, hook=None):
+        from repro.data import lm_head_query_fn, mean_pool_feature_fn
+        from repro.models import init_params
+        from repro.optim import Adam
+        cfg = _lm_cfg()
+        params = init_params(KEY, cfg)
+        pipe = ShardedLSHPipeline(
+            jax.random.PRNGKey(7), _tokens(seq=9),
+            mean_pool_feature_fn(cfg), lm_head_query_fn(),
+            LSHPipelineConfig(k=4, l=8, minibatch=16, refresh_every=6,
+                              normalize_weights=False),
+            n_shards=2, params=params)
+        tr = Trainer(cfg, params, Adam(lr=1e-2),
+                     tcfg=TrainerConfig(log_every=100, step_hook=hook),
+                     resume=False, sampler=pipe)
+        return tr, pipe
+
+    def test_hook_called_each_completed_step(self):
+        seen = []
+        tr, _ = self._stack(hook=lambda t: seen.append(t.step))
+        tr.run(5)
+        assert seen == [1, 2, 3, 4, 5]
+
+    def test_raising_hook_unwinds_then_realigned_run_matches(self):
+        """The incident pattern: a hook raise unwinds run() at a clean
+        step boundary; after ``restore_at(step, rebuild=False)``
+        realigns the prefetch-desynced counters, the continued run is
+        bitwise the uninterrupted run."""
+        tr_a, _ = self._stack()
+        losses_a = tr_a.run(10)["losses"]
+
+        def hook(t):
+            if t.step == 6:
+                raise HostLossDetected(6, [1])
+
+        tr_b, pipe_b = self._stack(hook=hook)
+        with pytest.raises(HostLossDetected):
+            tr_b.run(10)
+        assert tr_b.step == 6               # clean boundary
+        # the unwound run() had already prefetched batch 6 — realign
+        pipe_b.restore_at(tr_b.step, rebuild=False)
+        tr_b.tcfg.step_hook = None
+        losses_b = tr_b.run(4)["losses"]
+        np.testing.assert_allclose(
+            losses_a, list(losses_a[:6]) + losses_b, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: real 2-process jax.distributed run, one host killed
+# ---------------------------------------------------------------------------
+
+
+def _free_port():
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+class TestTwoProcessHostLoss:
+    def test_survivor_reforms_bit_deterministically(self, tmp_path):
+        """Kill rank 1 mid-training.  Rank 0 must: detect the loss and
+        go missing-host-degraded; adopt shard 1 (weights stay the
+        exact composed w = S/(p·N) form); reform from the newest
+        VERIFIED checkpoint on n_shards=1; and draw a post-reform
+        stream bit-identical to a fresh restore of that checkpoint in
+        THIS process."""
+        env = dict(os.environ)
+        env["JAX_PLATFORMS"] = "cpu"
+        env["PYTHONPATH"] = os.pathsep.join(
+            [os.path.join(os.path.dirname(__file__), "..", "src")]
+            + env.get("PYTHONPATH", "").split(os.pathsep))
+        ckpt_dir = str(tmp_path / "ckpt")
+        coord = f"127.0.0.1:{_free_port()}"
+        common = [sys.executable, "-m", "repro.dist.multihost_worker",
+                  "--nprocs", "2", "--coordinator", coord,
+                  "--ckpt-dir", ckpt_dir, "--steps", "20",
+                  "--sync-every", "5", "--ckpt-every", "10",
+                  "--degraded-steps", "4", "--post-steps", "6"]
+        procs = [subprocess.Popen(
+            common + ["--rank", str(r),
+                      "--result", str(tmp_path / f"r{r}.json")]
+            + (["--kill-at", "12"] if r == 1 else []),
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True) for r in (0, 1)]
+        outs = [p.communicate(timeout=560)[0] for p in procs]
+        assert procs[1].returncode == ProcKill.EXIT_CODE, outs[1]
+        assert procs[0].returncode == 0, outs[0]
+
+        r0 = json.load(open(tmp_path / "r0.json"))
+        # the ladder, in order, with the audit trail
+        assert r0["incident"]["dead"] == [1]
+        assert r0["cluster"]["state"] == CLUSTER_REFORMED
+        states = [t[2] for t in r0["cluster"]["transitions"]]
+        assert states == [CLUSTER_DEGRADED, CLUSTER_REFORMED]
+        assert ["shard 1 adopted by rank 0" in e[2]
+                for e in r0["cluster"]["events"]].count(True) == 1
+        # degraded draws: full-ownership composed weights, finite and
+        # positive (their exact E[1/(pN)] = 1 law is pinned in-process
+        # by TestAdoptShards, where averaging over builds is feasible)
+        dm = np.asarray(r0["degraded_weight_means"])
+        assert dm.shape == (4,) and np.isfinite(dm).all() and (
+            dm > 0).all()
+        # reform: newest verified checkpoint, surviving shard count
+        assert r0["reform_shards"] == 1
+        assert r0["restore_step"] <= r0["incident"]["step"] + 4
+        # bit-determinism across the incident: fresh restore replays
+        # the survivor's post-reform stream exactly
+        from repro.dist.multihost_worker import replay_post_reform
+        rep = replay_post_reform(ckpt_dir, r0["restore_step"],
+                                 len(r0["losses_post"]), n_shards=1)
+        assert rep["digest"] == r0["post_digest"]
+        np.testing.assert_allclose(rep["losses"], r0["losses_post"],
+                                   rtol=0, atol=0)

@@ -130,9 +130,36 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros(4)})
 
-    def test_rescale_plan(self):
-        plan = rescale_plan(256, 512, 256)
-        assert plan["per_device_batch_new"] == 1
+    def test_rescale_plan_scale_down_grows_accumulation(self):
+        # half the devices: same global batch via 2x accumulation, and
+        # the per-device batch never exceeds what a device already ran.
+        plan = rescale_plan(8, 4, 64)
+        assert plan["per_device_batch_new"] == 8
+        assert plan["grad_accum_steps"] == 2
+        assert (plan["per_device_batch_new"] * 4
+                * plan["grad_accum_steps"]) == 64
+        assert plan["per_device_batch_new"] <= plan[
+            "per_device_batch_old"]
+
+    def test_rescale_plan_scale_up_no_accumulation(self):
+        plan = rescale_plan(4, 8, 64)
+        assert plan["grad_accum_steps"] == 1
+        assert plan["per_device_batch_new"] == 8
+
+    def test_rescale_plan_rejects_indivisible_batch(self):
+        # more devices than batch rows cannot keep the global batch
+        # fixed — must be an explicit error, not a silent resize.
+        with pytest.raises(ValueError, match="does not divide"):
+            rescale_plan(256, 512, 256)
+
+    def test_rescale_plan_consistency_sweep(self):
+        for old in (1, 2, 3, 4, 8):
+            for new in (1, 2, 4, 8):
+                plan = rescale_plan(old, new, 64)
+                assert (plan["per_device_batch_new"] * new
+                        * plan["grad_accum_steps"]) == 64, plan
+                if new >= old:
+                    assert plan["grad_accum_steps"] == 1, plan
 
 
 # ---------------------------------------------------------------------------

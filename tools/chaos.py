@@ -10,15 +10,29 @@ means the stack healed; exit 1 prints which guarantee broke.
 Usage:
     PYTHONPATH=src python tools/chaos.py --fault refresh-raise
     PYTHONPATH=src python tools/chaos.py --fault all --steps 60
+    PYTHONPATH=src python tools/chaos.py --drill host-loss
 
 Faults: refresh-raise | refresh-hang | ckpt-truncate | nan-grad |
         none | all
+
+The ``host-loss`` drill is the multi-process one: it spawns a real
+2-process ``jax.distributed`` run (``repro.dist.multihost_worker``),
+hard-kills one process mid-training, and checks the survivor walked
+the whole elastic ladder — adopted the dead host's shard, reformed
+from the newest verified checkpoint, and produced a post-reform batch
+stream BIT-IDENTICAL to a fresh restore of the same checkpoint.  It
+is excluded from ``--fault all`` (it costs minutes, and CI runs it in
+its own job).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import logging
+import os
+import socket
+import subprocess
 import sys
 import tempfile
 
@@ -129,16 +143,101 @@ def drill(fault: str, steps: int) -> dict:
         return report
 
 
+def _free_port() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    return port
+
+
+def drill_host_loss(steps: int, verbose: bool = False) -> dict:
+    """The multi-process drill: 2 real OS processes, one dies.
+
+    Spawns two ``multihost_worker`` processes over a local
+    ``jax.distributed`` coordinator, arms ``ProcKill`` on rank 1, and
+    verifies the survival contract end to end:
+
+      * rank 1 exits with the injected death code (it really died);
+      * rank 0 detected the loss, adopted shard 1, ran degraded, and
+        REFORMED from the newest verified checkpoint on 1 shard;
+      * the post-reform stream digest matches a fresh restore of the
+        same checkpoint in THIS process (``replay_post_reform``) —
+        bit-determinism across the incident.
+    """
+    from repro.dist.multihost_worker import replay_post_reform
+    from repro.testing import ProcKill
+
+    steps = max(steps, 25)               # room for ckpt + sync + kill
+    with tempfile.TemporaryDirectory() as d:
+        coord = f"127.0.0.1:{_free_port()}"
+        common = [sys.executable, "-m", "repro.dist.multihost_worker",
+                  "--nprocs", "2", "--coordinator", coord,
+                  "--ckpt-dir", os.path.join(d, "ckpt"),
+                  "--steps", str(steps), "--sync-every", "5",
+                  "--ckpt-every", "10"]
+        env = dict(os.environ, JAX_PLATFORMS="cpu")
+        procs = [subprocess.Popen(
+            common + ["--rank", str(r),
+                      "--result", os.path.join(d, f"r{r}.json")]
+            + (["--kill-at", "12"] if r == 1 else []),
+            env=env,
+            stdout=None if verbose else subprocess.DEVNULL,
+            stderr=None if verbose else subprocess.DEVNULL,
+        ) for r in (0, 1)]
+        rcs = [p.wait(timeout=600) for p in procs]
+
+        report = {"fault": "host-loss", "steps": steps,
+                  "exit_codes": rcs, "survived": False}
+        res_path = os.path.join(d, "r0.json")
+        if rcs[0] != 0 or rcs[1] != ProcKill.EXIT_CODE or \
+                not os.path.exists(res_path):
+            return report
+        r0 = json.load(open(res_path))
+        report.update(
+            incident=r0.get("incident"),
+            restore_step=r0.get("restore_step"),
+            reform_shards=r0.get("reform_shards"),
+            health=r0["cluster"]["state"],
+            transitions=r0["cluster"]["transitions"],
+        )
+        rep = replay_post_reform(
+            os.path.join(d, "ckpt"), r0["restore_step"],
+            len(r0["losses_post"]), n_shards=r0["reform_shards"])
+        report["digest_match"] = rep["digest"] == r0["post_digest"]
+        report["survived"] = (
+            r0.get("incident") is not None
+            and r0["cluster"]["state"] == "reformed"
+            and r0["reform_shards"] == 1
+            and report["digest_match"]
+            and all(np.isfinite(r0["losses_post"])))
+        return report
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--fault", default="all",
                     choices=FAULTS + ("all",))
+    ap.add_argument("--drill", default=None, choices=("host-loss",),
+                    help="multi-process drill (separate from --fault)")
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("-v", "--verbose", action="store_true",
                     help="show the health log as faults fire")
     args = ap.parse_args(argv)
     if not args.verbose:
         logging.disable(logging.WARNING)
+
+    if args.drill == "host-loss":
+        r = drill_host_loss(args.steps, verbose=args.verbose)
+        verdict = "SURVIVED" if r["survived"] else "DIED"
+        print(f"[{verdict}] host-loss exit_codes={r['exit_codes']} "
+              f"incident={r.get('incident')} "
+              f"reform_shards={r.get('reform_shards')} "
+              f"digest_match={r.get('digest_match')} "
+              f"health={r.get('health')}")
+        for t in r.get("transitions", []):
+            print(f"    transition: {t}")
+        return 0 if r["survived"] else 1
 
     faults = list(FAULTS) if args.fault == "all" else [args.fault]
     failed = []
