@@ -8,9 +8,12 @@ gradients/parameters cross the interconnect.  This module owns the
 ROBUSTNESS layer that makes that deployment survive a lost host:
 
 * HEARTBEATS — every process publishes ``hb/g<generation>/r<rank>``
-  beats (step + wall time) through the coordination service's KV store
-  (or a shared filesystem, ``FileCoord``).  Liveness is a pure function
-  of the last beat's age, so detection needs no extra RPCs.
+  beats through the coordination service's KV store (or a shared
+  filesystem, ``FileCoord``).  Staleness is judged OBSERVER-SIDE: each
+  process stamps, on its OWN clock, the moment it sees a peer's beat
+  counter advance, and a peer is dead when no NEW beat has been seen
+  for ``heartbeat_timeout_s``.  Peer wall timestamps are never compared
+  across hosts, so NTP skew can neither fake nor mask a host loss.
 * BARRIER-GUARDED COLLECTIVES — cross-process collectives (parameter
   averaging, gradient all-reduce) are only ever entered behind a passed
   ``sync_barrier``: a barrier with a dead peer FAILS FAST with
@@ -21,7 +24,10 @@ ROBUSTNESS layer that makes that deployment survive a lost host:
   retries (``backoff_delay``), so a HUNG-but-alive host (dropped
   collective, GC pause) gets bounded grace before being treated as
   lost — per the ladder, a host slow past the retry budget IS a failed
-  host.
+  host.  After a loss the ``jax.distributed`` world STILL CONTAINS the
+  dead rank, so backend collectives are off the table for the rest of
+  the process's life; degraded survivors all-gather through the
+  coordination plane instead (``ElasticCluster.exchange_blobs``).
 * MEMBERSHIP GENERATIONS — every detected loss bumps ``generation``;
   heartbeat keys are generation-scoped so a re-formed cluster never
   reads a dead generation's beats.
@@ -61,6 +67,7 @@ deployment & failure model" for the full sequence diagram.
 
 from __future__ import annotations
 
+import base64
 import dataclasses
 import json
 import os
@@ -240,9 +247,13 @@ class FileCoord:
     an arrival marker per rank under ``root/barriers/<name>/`` polled
     until every expected rank has arrived.  Used by the in-process unit
     tests (threads share one tmpdir) and usable as a real transport on
-    any shared filesystem — liveness semantics are identical: a dead
-    rank simply never writes its arrival marker, and the poll raises
-    ``BarrierTimeout``.
+    any shared filesystem.  Liveness matches ``JaxCoord``, including
+    the poisoning of timed-out ids: a rank that times out drops a
+    ``FAILED`` tombstone into the barrier dir, so a slow rank arriving
+    LATE at an abandoned attempt fails like its peers did instead of
+    passing instantly on their stale markers (which would leave it
+    believing a sync succeeded that everyone else gave up on —
+    divergent membership views).
     """
 
     def __init__(self, root: str, rank: int, num_processes: int,
@@ -284,14 +295,31 @@ class FileCoord:
             else sorted(int(r) for r in ranks)
         d = os.path.join(self.root, "barriers", name.replace("/", "__"))
         os.makedirs(d, exist_ok=True)
+        poison = os.path.join(d, "FAILED")
+        if os.path.exists(poison):
+            # a peer already timed this id out and moved on — a late
+            # arrival must fail too (JaxCoord poisons timed-out ids).
+            raise BarrierTimeout(
+                f"barrier {name!r} was poisoned by a peer's timeout")
         with open(os.path.join(d, f"r{self.rank}"), "w") as f:
             f.write("1")
         deadline = time.monotonic() + timeout_s
         while True:
+            if os.path.exists(poison):
+                raise BarrierTimeout(
+                    f"barrier {name!r} was poisoned by a peer's "
+                    f"timeout")
             if all(os.path.exists(os.path.join(d, f"r{r}"))
                    for r in ranks):
                 return
             if time.monotonic() >= deadline:
+                # tombstone FIRST, then raise: whoever arrives after
+                # this instant sees a failed attempt, not our stale
+                # arrival markers.
+                tmp = os.path.join(d, f".failed.r{self.rank}")
+                with open(tmp, "w") as f:
+                    f.write(f"r{self.rank}")
+                os.replace(tmp, poison)
                 missing = [r for r in ranks if not os.path.exists(
                     os.path.join(d, f"r{r}"))]
                 raise BarrierTimeout(
@@ -330,6 +358,14 @@ class ElasticCluster:
         self.health = ClusterHealthMonitor()
         self.fault_injector = None
         self._beat = 0
+        # rank -> (last beat counter seen, OBSERVER clock when it was
+        # first seen) — staleness never reads a peer's wall timestamp.
+        self._last_seen: Dict[int, tuple] = {}
+        # generation-LOCAL counters: survivors unwind an incident at
+        # divergent trainer steps, so sync cadence and barrier names
+        # must come from state every survivor resets together.
+        self._steps_in_gen = 0
+        self.sync_seq = 0
         self._clock = clock
         self._sleep = sleep
 
@@ -347,8 +383,10 @@ class ElasticCluster:
     # -- heartbeats ----------------------------------------------------------
 
     def heartbeat(self, step: int):
-        """Publish this process's beat (generation-scoped)."""
+        """Publish this process's beat (generation-scoped) and refresh
+        the observer-side view of every peer's."""
         self._fault("cluster_step", step=step, rank=self.rank)
+        self._steps_in_gen += 1
         if step % max(self.cfg.heartbeat_every, 1) != 0:
             return
         self._beat += 1
@@ -356,6 +394,7 @@ class ElasticCluster:
             f"hb/g{self.generation}/r{self.rank}",
             json.dumps({"beat": self._beat, "step": int(step),
                         "t": self._clock()}))
+        self.observe_peers()
 
     def peer_beats(self) -> Dict[int, dict]:
         """Latest published beat per rank in the current generation."""
@@ -369,16 +408,34 @@ class ElasticCluster:
                 continue
         return out
 
-    def dead_peers(self) -> List[int]:
-        """Alive-set ranks whose beat is stale (or absent entirely)."""
-        now = self._clock()
+    def observe_peers(self) -> Dict[int, dict]:
+        """Refresh the observer-side receive stamps: a peer's staleness
+        clock resets only when its BEAT COUNTER advances, timed on THIS
+        process's clock.  Peer wall timestamps are never compared across
+        hosts — clock skew of any size can neither fake a host loss nor
+        mask one."""
         beats = self.peer_beats()
+        now = self._clock()
+        for r, b in beats.items():
+            beat = int(b.get("beat", 0))
+            prev = self._last_seen.get(r)
+            if prev is None or beat > prev[0]:
+                self._last_seen[r] = (beat, now)
+        return beats
+
+    def dead_peers(self) -> List[int]:
+        """Alive-set ranks with no fresh beat: never observed in this
+        generation, or whose beat counter has not advanced within
+        ``heartbeat_timeout_s`` of observer-local time."""
+        self.observe_peers()
+        now = self._clock()
         dead = []
         for r in sorted(self.alive):
             if r == self.rank:
                 continue
-            b = beats.get(r)
-            if b is None or now - b["t"] > self.cfg.heartbeat_timeout_s:
+            seen = self._last_seen.get(r)
+            if seen is None or \
+                    now - seen[1] > self.cfg.heartbeat_timeout_s:
                 dead.append(r)
         return dead
 
@@ -426,6 +483,57 @@ class ElasticCluster:
             f"sync barrier {name!r} failed after {attempts} "
             f"attempt(s): {last}")
 
+    def at_sync_boundary(self) -> bool:
+        """True when the GENERATION-LOCAL step counter crosses a
+        ``sync_every`` boundary.  Survivors unwind an incident at
+        divergent trainer steps; counting hook steps within the
+        generation (reset together by ``classify_failure``) keeps their
+        cadence aligned so they keep meeting at the same barriers."""
+        return (self._steps_in_gen > 0 and
+                self._steps_in_gen % max(self.cfg.sync_every, 1) == 0)
+
+    def next_sync_tag(self) -> str:
+        """Survivor-agreed name for the next parameter sync: a
+        per-generation sequence number, NOT the local trainer step —
+        post-incident trainer steps diverge across survivors, and
+        step-named barriers would time each other out and cascade into
+        repeated false host-loss classifications."""
+        self.sync_seq += 1
+        return f"q{self.sync_seq}"
+
+    def exchange_blobs(self, tag: str, payload: bytes
+                       ) -> Dict[int, bytes]:
+        """All-gather raw bytes across the CURRENT alive set through
+        the coordination KV store (publish → survivor barrier → read).
+
+        This is the degraded-mode collective: after a host loss the
+        ``jax.distributed`` world still contains the dead rank, so any
+        backend collective (``process_allgather`` & co.) would hang
+        forever; the surviving subset exchanges through the
+        coordination plane instead.  Keys are generation- and
+        tag-scoped, so epochs never mix and a tag is never reused
+        within one.  Raises ``BarrierTimeout`` if a survivor dies
+        mid-exchange and ``ClusterError`` if a blob is missing after
+        the barrier passed."""
+        prefix = f"xg/g{self.generation}/{tag}/"
+        self.coord.kv_set(prefix + f"r{self.rank}",
+                          base64.b64encode(payload).decode("ascii"))
+        self.sync_barrier(f"xg-{tag}")
+        out: Dict[int, bytes] = {}
+        for key, val in self.coord.kv_dir(prefix).items():
+            try:
+                r = int(key.rsplit("r", 1)[-1])
+            except ValueError:
+                continue
+            if r in self.alive:
+                out[r] = base64.b64decode(val)
+        missing = sorted(set(self.alive) - set(out))
+        if missing:
+            raise ClusterError(
+                f"exchange {tag!r}: blobs missing from ranks "
+                f"{missing} after the barrier passed")
+        return out
+
     # -- membership ----------------------------------------------------------
 
     def classify_failure(self, step: int) -> List[int]:
@@ -443,6 +551,12 @@ class ElasticCluster:
         for r in dead:
             self.alive.discard(r)
         self.generation += 1
+        # generation-local state restarts with the epoch: stale stamps
+        # must not outlive the membership view they described, and the
+        # survivors' sync cadence/naming re-aligns from zero.
+        self._last_seen.clear()
+        self._steps_in_gen = 0
+        self.sync_seq = 0
         self.health.note_host_lost(step, dead, reason)
         return dead
 
@@ -476,6 +590,60 @@ class ElasticCluster:
             "alive": sorted(self.alive),
             **self.health.summary(),
         }
+
+
+def claim_reform_writer(ckpt_dir: str, generation: int, rank: int,
+                        alive: Sequence[int]) -> bool:
+    """Single-writer election + generation fence for the reform path.
+
+    Exactly ONE survivor may write checkpoints (and ``discard_after``)
+    into the shared directory after a reform; concurrent writers would
+    race tmp+rename saves and each other's ``discard_after``,
+    corrupting the checkpoint history.  The writer is the LOWEST
+    surviving rank — deterministically computable from the membership
+    view, no election traffic.
+
+    That alone is not enough under a symmetric split-brain (the
+    slow-is-failed policy makes both sides of a partition declare each
+    other dead, so BOTH become the minimum of their own alive set), so
+    the claim is additionally fenced through an atomically-renamed
+    marker in the checkpoint dir: a HIGHER generation beats a lower
+    one (a stale writer from an older epoch is rejected), and ties
+    break toward the lower rank.  The fence is best-effort — rename
+    races have a window on real shared filesystems — but a losing or
+    stale claimant that observes the fence abstains instead of
+    writing.
+    """
+    alive = sorted(set(int(r) for r in alive))
+    if not alive or int(rank) != alive[0]:
+        return False
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, "reform_writer.json")
+    mine = {"generation": int(generation), "rank": int(rank)}
+
+    def read():
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except (OSError, json.JSONDecodeError, ValueError):
+            return None
+
+    def priority(claim):                  # higher tuple wins the fence
+        return (claim["generation"], -claim["rank"])
+
+    for _ in range(3):
+        cur = read()
+        if cur is not None:
+            if priority(cur) > priority(mine):
+                return False
+            if cur == mine:
+                return True
+        fd, tmp = tempfile.mkstemp(dir=ckpt_dir)
+        with os.fdopen(fd, "w") as f:
+            json.dump(mine, f)
+        os.replace(tmp, path)
+        time.sleep(0.05)                  # let a racing rename land
+    return read() == mine
 
 
 def finalize_and_exit(cluster: Optional[ElasticCluster], code: int = 0):

@@ -15,16 +15,23 @@ full elastic story, end to end in one process's life:
      classifies the failure (stale heartbeats name the dead) and
      raises ``HostLossDetected``, unwinding ``Trainer.run`` at a clean
      step boundary.
-  3. DEGRADED — the survivor ADOPTS the lost shards
+  3. DEGRADED — the survivors ADOPT the lost shards
      (``adopt_shards``: same shard count and bounds, so batch weights
      keep the exact w = S/(p·N) form and E[mean w] = 1 mid-incident)
-     and keeps training process-locally.
+     and keep training; with more than one survivor the parameter
+     sync continues over the coordination KV store
+     (``exchange_blobs`` — the jax.distributed world still contains
+     the dead rank, so backend collectives would hang forever), at a
+     cadence/naming keyed by generation-local counters so survivors
+     that unwound at divergent steps still meet.
   4. REFORM — restore the newest verified checkpoint
      (``restore_latest_valid_on_mesh``) and rebuild the pipeline with
      the surviving shard count (``rebuild_sharded_pipeline``,
-     n_shards = survivors); the post-reform batch stream is
-     bit-identical to a fresh restore of the same checkpoint
-     (``replay_post_reform`` below recomputes the digest to prove it).
+     n_shards = survivors); ONE fenced writer (the lowest surviving
+     rank, ``claim_reform_writer``) owns the shared checkpoint dir
+     from here; the post-reform batch stream is bit-identical to a
+     fresh restore of the same checkpoint (``replay_post_reform``
+     below recomputes the digest to prove it).
   5. DETACH — results flushed, ``finalize_and_exit`` hard-exits (the
      distributed runtime's shutdown barrier can never pass once a peer
      is dead).
@@ -59,6 +66,7 @@ from .multihost import (
     JaxCoord,
     MultihostConfig,
     NullCoord,
+    claim_reform_writer,
     finalize_and_exit,
     initialize,
 )
@@ -144,17 +152,42 @@ def batch_digest(records) -> str:
     return h.hexdigest()
 
 
-def _average_params(params):
-    """Barrier-guarded cross-process parameter average (local-SGD
-    sync).  The result is materialised as fresh process-LOCAL arrays:
-    leaving params committed to a global (all-process) sharding would
-    poison every later LOCAL computation once a peer dies."""
+def _average_params(params, cluster: ElasticCluster):
+    """Cross-process parameter average over the CURRENT alive set
+    (local-SGD sync).
+
+    Intact cluster: ``process_allgather`` over the full
+    ``jax.distributed`` world — the fast path, on the interconnect.
+    Degraded cluster (survivors after a host loss): the distributed
+    world STILL CONTAINS the dead rank, so any backend collective
+    would hang forever regardless of the survivor barrier passing —
+    the surviving subset all-gathers through the coordination KV
+    store instead (``exchange_blobs``, keyed by generation and sync
+    sequence number).  Either way the result is materialised as fresh
+    process-LOCAL arrays: leaving params committed to a global
+    (all-process) sharding would poison every later LOCAL computation
+    once a peer dies."""
+    import io
     import jax
     import jax.numpy as jnp
-    from jax.experimental import multihost_utils
-    gathered = multihost_utils.process_allgather(params)
-    return jax.tree.map(
-        lambda g: jnp.asarray(np.asarray(g).mean(axis=0)), gathered)
+    if cluster.intact:
+        from jax.experimental import multihost_utils
+        gathered = multihost_utils.process_allgather(params)
+        return jax.tree.map(
+            lambda g: jnp.asarray(np.asarray(g).mean(axis=0)), gathered)
+    leaves, treedef = jax.tree.flatten(params)
+    buf = io.BytesIO()
+    np.savez(buf, *[np.asarray(x) for x in leaves])
+    blobs = cluster.exchange_blobs(
+        f"avg{cluster.sync_seq}", buf.getvalue())
+    acc = None
+    for _, raw in sorted(blobs.items()):
+        with np.load(io.BytesIO(raw)) as z:
+            peer = [z[f"arr_{i}"] for i in range(len(leaves))]
+        acc = peer if acc is None else \
+            [a + p for a, p in zip(acc, peer)]
+    return jax.tree.unflatten(
+        treedef, [jnp.asarray(a / len(blobs)) for a in acc])
 
 
 def _state_template(cfg, params):
@@ -211,24 +244,32 @@ def replay_post_reform(ckpt_dir: str, restore_step: int, n_steps: int,
     }
 
 
-def make_step_hook(cluster: ElasticCluster, sync_every: int):
+def make_step_hook(cluster: ElasticCluster):
     """The trainer attachment point: heartbeat every step; at sync
-    boundaries, barrier then average params.  Raises
+    boundaries (``cluster.at_sync_boundary``, generation-local
+    cadence), barrier then average params over the alive set.  Raises
     ``HostLossDetected`` out of the trainer when the barrier exhausts
     its retries — the worker's incident handler takes over."""
 
     def hook(tr):
         step = tr.step
         cluster.heartbeat(step)
-        if step % sync_every != 0:
+        # boundary + barrier name both come from generation-LOCAL
+        # counters, not tr.step: survivors unwind an incident at
+        # divergent steps, and step-named barriers would time each
+        # other out in a cascade of false host-loss classifications.
+        if not cluster.at_sync_boundary():
             return
         if len(cluster.alive) <= 1:
             return                      # nothing to sync with
         try:
-            cluster.sync_barrier(f"s{step}")
+            cluster.sync_barrier(cluster.next_sync_tag())
+            # the average itself may barrier again (degraded KV
+            # exchange) — a survivor dying mid-exchange classifies
+            # like any other loss instead of leaking BarrierTimeout.
+            avg = _average_params(tr.params, cluster)
         except BarrierTimeout:
             raise HostLossDetected(step, cluster.classify_failure(step))
-        avg = _average_params(tr.params)
         tr.params = avg
         tr.sampler.set_params(avg)
 
@@ -275,7 +316,7 @@ def run_worker(args) -> int:
     rec = RecordBatches(pipe)
     # checkpoints: rank 0 writes (one writer — no cross-host fs races);
     # every rank knows the path for the reform restore.
-    elastic_hook = make_step_hook(cluster, mcfg.sync_every)
+    elastic_hook = make_step_hook(cluster)
 
     def timed_hook(tr_):
         elastic_hook(tr_)               # may raise HostLossDetected
@@ -316,6 +357,13 @@ def run_worker(args) -> int:
 
         # -- REFORM: newest verified checkpoint, surviving shards -----
         n_surv = len(cluster.alive)
+        # single writer: the lowest surviving rank claims the shared
+        # dir through the generation fence; every other survivor (or a
+        # split-brain loser) restores READ-ONLY — concurrent writers
+        # would race each other's saves and discard_after and corrupt
+        # the checkpoint history.
+        writer = claim_reform_writer(
+            args.ckpt_dir, cluster.generation, args.rank, cluster.alive)
         t_reform0 = time.perf_counter()
         step_r, state, extra = restore_latest_valid_on_mesh(
             args.ckpt_dir, _state_template(cfg, params), mesh=None)
@@ -339,19 +387,24 @@ def run_worker(args) -> int:
                 time.perf_counter() - t_reform0)
 
         tr2 = Trainer(cfg, state["params"], Adam(lr=LR),
-                      tcfg=TrainerConfig(ckpt_dir=args.ckpt_dir,
-                                         ckpt_every=args.ckpt_every,
-                                         log_every=1000,
-                                         step_hook=mark_first_post_step),
+                      tcfg=TrainerConfig(
+                          ckpt_dir=args.ckpt_dir if writer else None,
+                          ckpt_every=args.ckpt_every,
+                          log_every=1000,
+                          step_hook=mark_first_post_step),
                       resume=False, sampler=rec2)
         tr2.opt_state = state["opt_state"]
         tr2.step = extra.get("step", step_r)
-        # the incident timeline past the restore point is abandoned —
-        # the reformed run's own writes are authoritative.
-        ckpt.discard_after(args.ckpt_dir, tr2.step)
+        if writer:
+            # the incident timeline past the restore point is
+            # abandoned — the reformed run's own writes are
+            # authoritative.  Writer-only: a racing discard here is
+            # exactly the corruption the fence exists to prevent.
+            ckpt.discard_after(args.ckpt_dir, tr2.step)
         cluster.note_reformed(tr2.step, n_surv)
         result["restore_step"] = tr2.step
         result["reform_shards"] = n_surv
+        result["reform_writer"] = writer
         out_post = tr2.run(args.post_steps)
         tr2.finalize()
         result["losses_post"] = out_post["losses"]
@@ -380,7 +433,8 @@ def build_arg_parser() -> argparse.ArgumentParser:
     ap.add_argument("--nprocs", type=int, required=True)
     ap.add_argument("--coordinator", default="127.0.0.1:9876")
     ap.add_argument("--ckpt-dir", required=True,
-                    help="shared checkpoint dir (rank 0 writes)")
+                    help="shared checkpoint dir (rank 0 writes pre-"
+                         "incident; the fenced lowest survivor after)")
     ap.add_argument("--result", default="",
                     help="write this rank's result JSON here")
     ap.add_argument("--steps", type=int, default=30)

@@ -46,6 +46,7 @@ from repro.dist.multihost import (
     HostLossDetected,
     MultihostConfig,
     backoff_delay,
+    claim_reform_writer,
     shard_adoption_map,
 )
 from repro.testing import DropBarrier, FaultError, ProcKill
@@ -165,6 +166,23 @@ class TestFileCoord:
         with pytest.raises(BarrierTimeout, match=r"missing ranks \[1\]"):
             c.barrier("b2", timeout_s=0.2)
 
+    def test_timed_out_barrier_is_poisoned_for_late_arrivals(
+            self, tmp_path):
+        # JaxCoord semantics: a timed-out barrier id is poisoned.  A
+        # slow rank arriving LATE at the abandoned id must fail like
+        # its peers did — passing instantly on their stale arrival
+        # markers would leave it believing a sync succeeded that
+        # everyone else gave up on (divergent membership views).
+        a = FileCoord(str(tmp_path), rank=0, num_processes=2)
+        b = FileCoord(str(tmp_path), rank=1, num_processes=2)
+        with pytest.raises(BarrierTimeout, match="missing ranks"):
+            a.barrier("p1", timeout_s=0.2)      # b never arrives
+        with pytest.raises(BarrierTimeout, match="poisoned"):
+            b.barrier("p1", timeout_s=0.2)      # late arrival fails
+        # a fresh id (the retry's attempt suffix) is unaffected
+        a2 = FileCoord(str(tmp_path), rank=0, num_processes=1)
+        a2.barrier("p2", timeout_s=0.2)
+
 
 # ---------------------------------------------------------------------------
 # cluster ladder (in-process, FileCoord transport, injected clocks)
@@ -247,12 +265,16 @@ class TestElasticCluster:
         b = _cluster(tmp_path, 1, 2, clock=lambda: now[0])
         a.heartbeat(1)
         b.heartbeat(1)
+        a.heartbeat(2)          # a observes b's beat while it's fresh
         now[0] += 10.0                      # b dies
         a.heartbeat(15)
         with pytest.raises(BarrierTimeout):
             a.sync_barrier("s15")
         dead = a.classify_failure(15)
         assert dead == [1]
+        # the stale beat IDENTIFIED the dead rank (not the
+        # everyone-is-lost fallback)
+        assert "stale heartbeat" in a.health.transitions[-1][3]
         assert a.alive == {0}
         assert a.generation == 1            # stale beats can't leak in
         assert a.health.state == CLUSTER_DEGRADED
@@ -279,6 +301,97 @@ class TestElasticCluster:
         assert dead == [1]
         reason = a.health.transitions[-1][3]
         assert "retries exhausted" in reason
+
+    def test_clock_skew_never_fakes_or_masks_a_host_loss(self, tmp_path):
+        # b's wall clock runs 50s behind a's (NTP skew far beyond the
+        # 5s heartbeat timeout) yet its beats keep ADVANCING — it must
+        # stay alive: staleness is timed on the OBSERVER's clock from
+        # the moment a NEW beat counter is seen, never by comparing
+        # embedded peer wall timestamps.
+        now_a = [100.0]
+        now_b = [50.0]
+        a = _cluster(tmp_path, 0, 2, clock=lambda: now_a[0])
+        b = _cluster(tmp_path, 1, 2, clock=lambda: now_b[0])
+        for step in range(1, 5):
+            a.heartbeat(step)
+            b.heartbeat(step)
+            assert a.dead_peers() == []
+            assert b.dead_peers() == []
+            now_a[0] += 1.0
+            now_b[0] += 1.0
+        # ...and the skew does not MASK a real death either: b stops
+        # beating, and 10 observer-seconds later it is stale.
+        now_a[0] += 10.0
+        now_b[0] += 10.0
+        a.heartbeat(9)
+        assert a.dead_peers() == [1]
+
+    def test_post_incident_sync_cadence_is_generation_local(
+            self, tmp_path):
+        # Survivors unwind an incident at DIVERGENT trainer steps; the
+        # sync boundaries and barrier names they compute afterwards
+        # must come from generation-local counters (reset together by
+        # classify_failure) or they time each other out at differently
+        # named barriers.  Two incident walks with different local
+        # step histories must emit the identical post-incident tag
+        # sequence.
+        def walk(root, pre_steps):
+            now = [100.0]
+            a = _cluster(root, 0, 2, clock=lambda: now[0],
+                         sync_every=5)
+            b = _cluster(root, 1, 2, clock=lambda: now[0],
+                         sync_every=5)
+            for s in range(1, pre_steps + 1):
+                a.heartbeat(s)
+                b.heartbeat(s)
+            now[0] += 10.0                  # b dies
+            a.heartbeat(pre_steps + 1)
+            a.classify_failure(pre_steps + 1)
+            tags = []
+            for s in range(pre_steps + 2, pre_steps + 14):
+                a.heartbeat(s)
+                if a.at_sync_boundary():
+                    tags.append((a.generation, a.next_sync_tag()))
+            return tags
+
+        t20 = walk(tmp_path / "w20", pre_steps=20)
+        t23 = walk(tmp_path / "w23", pre_steps=23)
+        assert t20 and t20 == t23
+
+    def test_exchange_blobs_over_surviving_subset(self, tmp_path):
+        # the degraded-mode collective: ranks {0, 2} of a 3-process
+        # cluster (rank 1 dead) all-gather raw bytes through the KV
+        # store + a barrier over the ALIVE SET ONLY — the dead rank
+        # is neither waited on nor read back.
+        a = _cluster(tmp_path, 0, 3, barrier_timeout_s=5.0)
+        c = _cluster(tmp_path, 2, 3, barrier_timeout_s=5.0)
+        for cl in (a, c):
+            cl.alive = {0, 2}
+            cl.generation = 1
+        out, errs = {}, []
+
+        def go(cl, payload):
+            try:
+                out[cl.rank] = cl.exchange_blobs("avg1", payload)
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=go, args=(a, b"pay-0")),
+              threading.Thread(target=go, args=(c, b"pay-2"))]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        want = {0: b"pay-0", 2: b"pay-2"}
+        assert out == {0: want, 2: want}
+
+    def test_exchange_blobs_missing_survivor_times_out(self, tmp_path):
+        # a survivor dying MID-EXCHANGE surfaces as BarrierTimeout —
+        # the caller classifies it like any other loss; it never
+        # silently averages over a partial set.
+        a = _cluster(tmp_path, 0, 3)
+        a.alive = {0, 2}
+        with pytest.raises(BarrierTimeout):
+            a.exchange_blobs("avg1", b"pay-0")
 
     def test_prockill_fires_on_cluster_step_event(self):
         fault = ProcKill(at_step=7)
@@ -310,6 +423,75 @@ class TestClusterHealthMonitor:
             (CLUSTER_DEGRADED, CLUSTER_REFORMED)]
         kinds = [e[1] for e in s["events"]]
         assert kinds == ["host-lost", "shard-adopted"]
+
+
+class TestClaimReformWriter:
+    def test_lowest_survivor_claims_and_peers_abstain(self, tmp_path):
+        d = str(tmp_path / "ckpt")
+        # min(alive) claims; a non-minimum rank never even writes
+        assert claim_reform_writer(d, 1, rank=3, alive=[2, 3]) is False
+        assert claim_reform_writer(d, 1, rank=2, alive=[2, 3]) is True
+        # idempotent re-claim by the holder
+        assert claim_reform_writer(d, 1, rank=2, alive=[2, 3]) is True
+
+    def test_split_brain_tie_breaks_toward_lower_rank(self, tmp_path):
+        # symmetric 2-process split-brain: each side declares the
+        # other dead, so BOTH are min of their own alive set and both
+        # reach the fence at the same generation — the lower rank must
+        # win and the higher one must abstain, whichever order the
+        # claims land in.
+        d = str(tmp_path / "ckpt")
+        assert claim_reform_writer(d, 1, rank=1, alive=[1]) is True
+        assert claim_reform_writer(d, 1, rank=0, alive=[0]) is True
+        assert claim_reform_writer(d, 1, rank=1, alive=[1]) is False
+
+    def test_stale_generation_is_fenced_out(self, tmp_path):
+        # a writer from an OLDER membership epoch (e.g. a partitioned
+        # host that reformed against a stale view, then thawed) is
+        # rejected by the newer claim.
+        d = str(tmp_path / "ckpt")
+        assert claim_reform_writer(d, 2, rank=1, alive=[1]) is True
+        assert claim_reform_writer(d, 1, rank=0, alive=[0]) is False
+
+
+class TestDegradedParamAverage:
+    def test_survivor_subset_average_never_enters_backend_collective(
+            self, tmp_path):
+        """The HIGH-severity host-loss hang: with >= 3 processes the
+        degraded survivors' sync barrier passes over the alive subset,
+        but any full-world collective (process_allgather) would then
+        hang forever on the dead rank.  The degraded branch must
+        average over the KV transport only — this runs it with NO
+        jax.distributed runtime at all, which doubles as proof that no
+        backend collective is entered."""
+        from repro.dist.multihost_worker import _average_params
+        a = _cluster(tmp_path, 0, 3, barrier_timeout_s=5.0)
+        c = _cluster(tmp_path, 2, 3, barrier_timeout_s=5.0)
+        for cl in (a, c):
+            cl.alive = {0, 2}               # rank 1 is dead
+            cl.generation = 1
+            cl.sync_seq = 4                 # same sync tag on both
+            assert not cl.intact
+        pa = {"w": jnp.arange(4.0), "b": {"x": jnp.ones((2, 3)) * 4.0}}
+        pc = {"w": jnp.arange(4.0) * 3.0, "b": {"x": jnp.zeros((2, 3))}}
+        out, errs = {}, []
+
+        def go(cl, params):
+            try:
+                out[cl.rank] = _average_params(params, cl)
+            except Exception as e:          # pragma: no cover
+                errs.append(e)
+
+        ts = [threading.Thread(target=go, args=(a, pa)),
+              threading.Thread(target=go, args=(c, pc))]
+        [t.start() for t in ts]
+        [t.join() for t in ts]
+        assert not errs
+        for r in (0, 2):
+            np.testing.assert_allclose(
+                np.asarray(out[r]["w"]), np.arange(4.0) * 2.0)
+            np.testing.assert_allclose(
+                np.asarray(out[r]["b"]["x"]), np.full((2, 3), 2.0))
 
 
 # ---------------------------------------------------------------------------
@@ -568,8 +750,10 @@ class TestTwoProcessHostLoss:
         dm = np.asarray(r0["degraded_weight_means"])
         assert dm.shape == (4,) and np.isfinite(dm).all() and (
             dm > 0).all()
-        # reform: newest verified checkpoint, surviving shard count
+        # reform: newest verified checkpoint, surviving shard count,
+        # and the survivor (lowest alive rank) holds the writer fence
         assert r0["reform_shards"] == 1
+        assert r0["reform_writer"] is True
         assert r0["restore_step"] <= r0["incident"]["step"] + 4
         # bit-determinism across the incident: fresh restore replays
         # the survivor's post-reform stream exactly
