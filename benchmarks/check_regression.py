@@ -99,6 +99,13 @@ Families (``families.json``):
                     ``--families-var-cap`` (default 1.0: hashing
                     un-normalised data, the asymmetric family must
                     still deliver the adaptive-sampling variance win).
+  banded calib      E[1/(pN)] of the norm-ranged ``mips_banded`` family
+                    on the log-normal heavy-tail corpus — ABSOLUTE gate
+                    on the fresh run: must sit within
+                    ``--banded-calibration`` (default 0.1) of 1.
+  banded variance   Tr Cov(banded) < Tr Cov(plain mips), same heavy-
+                    tailed corpus and run — the variance win norm-
+                    ranging exists for.
 
 ``--selftest`` proves the gate can actually fail before it is trusted:
 it injects a slowdown into every gated quantity and asserts each
@@ -398,7 +405,7 @@ def compare_optimizers(baseline: dict, fresh: dict, step_cap: float,
 
 
 def compare_families(baseline: dict, fresh: dict, step_cap: float,
-                     var_cap: float) -> list:
+                     var_cap: float, banded_tol: float) -> list:
     failures = _comparable(baseline, fresh,
                            ("quick", "n_points", "d", "k", "l", "draws",
                             "builds"),
@@ -430,6 +437,40 @@ def compare_families(baseline: dict, fresh: dict, step_cap: float,
             f"un-normalised skewed corpus: ratio {got:.3f} >= "
             f"{var_cap:.3f} (the no-normalisation variance win is the "
             "point of the asymmetric family)")
+
+    # heavy-tail calibration gates: ABSOLUTE on the fresh run (the
+    # identity E[1/(pN)] = 1 does not drift with machine speed)
+    ht = fresh.get("heavy_tail")
+    if ht is None:
+        failures.append(
+            "families fresh JSON lacks the heavy_tail block — "
+            "regenerate with benchmarks/run.py tab_families")
+        return failures
+    base_ht = baseline.get("heavy_tail", {})
+    got = ht["inv_p"]["mips_banded"]
+    ok = abs(got - 1.0) <= banded_tol
+    print(f"families banded E[1/(pN)]: baseline "
+          f"{base_ht.get('inv_p', {}).get('mips_banded', float('nan')):.3f}"
+          f"  fresh {got:.3f}  band 1±{banded_tol:.2f}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"norm-ranged MIPS miscalibrated on the log-normal corpus: "
+            f"E[1/(pN)] = {got:.3f} outside ["
+            f"{1 - banded_tol:.2f}, {1 + banded_tol:.2f}] (the composed "
+            "per-band inclusion probabilities must stay exact)")
+    got_b = ht["trcov"]["mips_banded"]
+    got_p = ht["trcov"]["mips"]
+    ok = got_b < got_p
+    print(f"families banded Tr Cov vs plain mips: baseline "
+          f"{base_ht.get('trcov', {}).get('banded_vs_plain', float('nan')):.3f}"
+          f"  fresh {got_b / max(got_p, 1e-30):.3f}  cap 1.000  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"norm-ranged MIPS estimator variance not below plain mips "
+            f"on the heavy-tailed corpus: Tr Cov banded {got_b:.4f} >= "
+            f"plain {got_p:.4f} (banding exists to win exactly here)")
     return failures
 
 
@@ -491,7 +532,8 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_optimizers(optim_base, fb_bad,
                                            *optim_args)))
 
-    fam_args = (args.families_step_cap, args.families_var_cap)
+    fam_args = (args.families_step_cap, args.families_var_cap,
+                args.banded_calibration)
     fam_slow = json.loads(json.dumps(families_base))
     fam_slow["step_us"]["mips_vs_srp"] *= 2.0
     print("-- selftest 9: injected 2x MIPS sampling-step slowdown --")
@@ -538,6 +580,21 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     print("-- selftest 15: injected lost host-kill reform --")
     results.append(bool(compare_multihost(multihost_base, mh_stuck,
                                           args.multihost_tolerance)))
+
+    fam_cal = json.loads(json.dumps(families_base))
+    fam_cal["heavy_tail"]["inv_p"]["mips_banded"] = \
+        1.0 + args.banded_calibration * 1.5
+    print("-- selftest 16: injected banded E[1/(pN)] miscalibration --")
+    results.append(bool(compare_families(families_base, fam_cal,
+                                         *fam_args)))
+
+    fam_tr = json.loads(json.dumps(families_base))
+    fam_tr["heavy_tail"]["trcov"]["mips_banded"] = \
+        fam_tr["heavy_tail"]["trcov"]["mips"] * 1.1
+    fam_tr["heavy_tail"]["trcov"]["banded_vs_plain"] = 1.1
+    print("-- selftest 17: injected banded variance-win loss --")
+    results.append(bool(compare_families(families_base, fam_tr,
+                                         *fam_args)))
 
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
@@ -606,6 +663,10 @@ def main() -> int:
     ap.add_argument("--families-var-cap", type=float, default=1.0,
                     help="MIPS estimator variance ratio vs uniform must "
                          "stay below this on the un-normalised corpus")
+    ap.add_argument("--banded-calibration", type=float, default=0.1,
+                    help="allowed |E[1/(pN)] - 1| for the norm-ranged "
+                         "banded family on the log-normal heavy-tail "
+                         "corpus (absolute gate on the fresh run)")
     ap.add_argument("--streaming-cap", type=float, default=0.5,
                     help="absolute cap on (total 10% append) / (full "
                          "rebuild) wall-time ratio")
@@ -667,7 +728,8 @@ def main() -> int:
                                    args.fallback_cap)
     failures += compare_families(families_base, families_fresh,
                                  args.families_step_cap,
-                                 args.families_var_cap)
+                                 args.families_var_cap,
+                                 args.banded_calibration)
     failures += compare_robustness(robustness_base, robustness_fresh,
                                    args.robustness_degraded_cap)
     failures += compare_streaming(streaming_base, streaming_fresh,

@@ -1146,6 +1146,16 @@ def tab_families(quick: bool = False):
       MIPS/uniform < ``--families-var-cap`` (default 1.0).  Symmetric
       dense SRP on the row-normalised version of the same corpus is
       recorded for the table (informational).
+
+    * HEAVY-TAIL calibration (``heavy_tail`` block): log-normal
+      exp(0.8·z) norms — the documented regime where the single global
+      Simple-LSH scale miscalibrates (docs/ARCHITECTURE.md).  Plain
+      ``mips`` vs norm-ranged ``mips_banded``: E[1/(p·N)] over index
+      builds, and Tr Cov of the single-sample importance-weighted
+      estimator on a heavy-tailed regression.  check_regression.py
+      gates the FRESH run absolutely: banded E[1/(p·N)] within
+      ``--banded-calibration`` (default 0.1) of 1, and banded Tr Cov
+      strictly below plain mips on the same corpus.
     """
     from repro.core import get_family
     from repro.core.lgd import preprocess_regression_mips
@@ -1234,11 +1244,55 @@ def tab_families(quick: bool = False):
     var_srp = {"lgd": v_srp, "uniform": v_uni_s,
                "ratio": v_srp / max(v_uni_s, 1e-30)}
 
+    # --- heavy-tail calibration: plain mips vs norm-ranged banded ---------
+    # (see docstring; same K/L as the variance block, log-normal norms)
+    khx, khn, khq = jax.random.split(jax.random.PRNGKey(8), 3)
+    dirs_h = jax.random.normal(khx, (n, d))
+    dirs_h = dirs_h / jnp.linalg.norm(dirs_h, axis=-1, keepdims=True)
+    xh = dirs_h * jnp.exp(0.8 * jax.random.normal(khn, (n, 1)))
+    qh_raw = jax.random.normal(khq, (d,))
+    kht, khe = jax.random.split(jax.random.fold_in(jax.random.PRNGKey(8), 1))
+    yh = xh @ jax.random.normal(kht, (d,)) + \
+        0.1 * jax.random.normal(khe, (n,))
+
+    def calib_heavy(fam_name):
+        fam = get_family(fam_name)
+        xa = fam.augment_data(xh)
+        qa = fam.augment_query(qh_raw)
+        pp = LSHParams(k=k_lsh, l=l_lsh, dim=xa.shape[-1], family=fam_name)
+
+        def per_build(bk):
+            kb_, ks = jax.random.split(bk)
+            index = _build_index(kb_, xa, pp)
+            r = S.sample(ks, index, xa, qa, pp, m=2000)
+            return jnp.mean(1.0 / (r.probs * n))
+
+        ms = jax.lax.map(per_build,
+                         jax.random.split(jax.random.PRNGKey(11), builds))
+        return float(jnp.mean(ms)), float(jnp.std(ms))
+
+    def trcov_heavy(fam_name):
+        fam = get_family(fam_name)
+        xt_h, yt_h, xa_h = preprocess_regression_mips(xh, yh, fam)
+        pp = LSHParams(k=k_lsh, l=l_lsh, dim=xa_h.shape[-1],
+                       family=fam_name)
+        qv = fam.augment_query(regression_query(theta))
+        return var_over_builds(xa_h, qv, pp, xt_h, yt_h)
+
+    inv_plain, invsd_plain = calib_heavy("mips")
+    inv_band, invsd_band = calib_heavy("mips_banded")
+    tr_plain_h = trcov_heavy("mips")
+    tr_band_h = trcov_heavy("mips_banded")
+
     _row("tab_families_step[srp]", us_srp, "baseline")
     _row("tab_families_step[mips]", us_mips,
          f"{us_mips / max(us_srp, 1e-9):.3f}x srp")
     _row("tab_families_var[mips]", 0.0, f"{var_mips['ratio']:.3f}")
     _row("tab_families_var[srp]", 0.0, f"{var_srp['ratio']:.3f}")
+    _row("tab_families_invp[mips]", 0.0, f"{inv_plain:.3f}")
+    _row("tab_families_invp[banded]", 0.0, f"{inv_band:.3f}")
+    _row("tab_families_trcov[banded/mips]", 0.0,
+         f"{tr_band_h / max(tr_plain_h, 1e-30):.3f}")
 
     out = {
         "backend": jax.default_backend(),
@@ -1247,6 +1301,14 @@ def tab_families(quick: bool = False):
         "step_us": {"srp": us_srp, "mips": us_mips,
                     "mips_vs_srp": us_mips / max(us_srp, 1e-9)},
         "estimator_variance": {"mips": var_mips, "srp": var_srp},
+        "heavy_tail": {
+            "sigma": 0.8,
+            "inv_p": {"mips": inv_plain, "mips_banded": inv_band},
+            "inv_p_sd": {"mips": invsd_plain, "mips_banded": invsd_band},
+            "trcov": {"mips": tr_plain_h, "mips_banded": tr_band_h,
+                      "banded_vs_plain":
+                          tr_band_h / max(tr_plain_h, 1e-30)},
+        },
     }
     os.makedirs(RESULTS, exist_ok=True)
     # families.json is the CI regression-gate baseline (quick mode);

@@ -46,10 +46,12 @@ def main():
     ap.add_argument("--multiprobe", type=int, default=0,
                     help="extra Hamming-ball probe codes per table")
     ap.add_argument("--family", default="quadratic",
-                    choices=["quadratic", "srp", "mips"],
+                    choices=["quadratic", "srp", "mips", "mips_banded"],
                     help="LSH family (core.families registry): quadratic "
                          "matches |<q,x>|; srp is cosine SimHash; mips is "
-                         "the asymmetric no-normalisation Simple-LSH")
+                         "the asymmetric no-normalisation Simple-LSH; "
+                         "mips_banded adds norm-ranged banding for "
+                         "heavy-tailed norms")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -63,11 +65,12 @@ def main():
         lsh=LSHParams(k=5, l=100, dim=dim, family=args.family),
         minibatch=16,
         multiprobe=args.multiprobe,
-        # mips trains on UN-normalised rows: bound the rare tiny-p draws
-        p_floor=1e-7 if args.family == "mips" else 0.0,
+        # the MIPS families train on UN-normalised rows: bound the
+        # rare tiny-p draws
+        p_floor=1e-7 if args.family in ("mips", "mips_banded") else 0.0,
     )
     lr = 5e-2 if args.optimizer != "adam" else 5e-3
-    if args.family == "mips":
+    if args.family in ("mips", "mips_banded"):
         # un-normalised rows: ||x_i||^2 ~ d instead of 1, so the
         # quadratic loss curvature (and the stable LR) scales by ~1/d
         lr /= ds.x_train.shape[1]

@@ -110,10 +110,12 @@ def main():
                          "single-probe): empty buckets resolve to "
                          "probability-corrected near-bucket samples "
                          "instead of uniform fallbacks")
-    ap.add_argument("--family", default="srp", choices=["srp", "mips"],
+    ap.add_argument("--family", default="srp", choices=["srp", "mips", "mips_banded"],
                     help="LSH family: srp = row-normalised features + "
                          "cosine SimHash; mips = un-normalised features "
-                         "through the asymmetric Simple-LSH augmentation")
+                         "through the asymmetric Simple-LSH augmentation; "
+                         "mips_banded = norm-ranged Simple-LSH (exact "
+                         "weights at heavy-tailed feature norms)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.uniform:

@@ -61,6 +61,7 @@ def exact_inclusion_probability(
     x_aug: jax.Array, query: jax.Array, params: LSHParams,
     l: jax.Array | int = 1,
     multiprobe: int = 0,
+    band_select: jax.Array | None = None,
 ) -> jax.Array:
     """p_i = Q_i (1-Q_i)^(l-1) for *all* points (O(N d), analysis only).
 
@@ -74,6 +75,14 @@ def exact_inclusion_probability(
     corpora, pinned by the unbiasedness tests in
     ``tests/test_families.py``.  Used by tests and the variance
     diagnostics; never on the training path.
+
+    ``band_select`` (banded/norm-ranged families): per-point (N,)
+    band-selection probability ``n_band(i) / n_live``.  A banded draw
+    selects point i's band first, THEN walks tables inside it, so the
+    composed per-draw inclusion probability is
+    ``band_select_i * Q_i (1-Q_i)^(l-1)`` — the table-miss factor is
+    conditional on the band draw and multiplies only the per-table Q.
+    ``None`` (flat families) keeps the original formula bit-identical.
     """
     fam = get_family(params.family)
     cp = fam.collision_prob(x_aug, query)
@@ -84,7 +93,10 @@ def exact_inclusion_probability(
         rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
         q_tab = jnp.sum(
             fam.probe_class_probs(cp[..., None], params.k, rs), axis=-1)
-    return q_tab * (1.0 - q_tab) ** (jnp.asarray(l, jnp.float32) - 1.0)
+    p = q_tab * (1.0 - q_tab) ** (jnp.asarray(l, jnp.float32) - 1.0)
+    if band_select is not None:
+        p = band_select * p
+    return p
 
 
 class VarianceReport(NamedTuple):

@@ -11,10 +11,13 @@ Registered families:
   ``srp``        alias of ``dense`` (the user-facing CLI name)
   ``quadratic``  SRP over the implicit quadratic expansion T(v)
   ``mips``       asymmetric Simple-LSH MIPS (un-normalised corpora)
+  ``mips_banded`` norm-ranged MIPS: banded sub-indexes with per-band
+                 scales M_j (heavy-tailed norm distributions)
 """
 
 from __future__ import annotations
 
+from .banded import BandedScale, NormRangedMIPSFamily  # noqa: F401
 from .base import LSHFamily, normalize_rows  # noqa: F401
 from .mips import SimpleLSHMIPSFamily
 from .quadratic import QuadraticSRPFamily, quadratic_collision_prob  # noqa: F401
@@ -29,6 +32,7 @@ FAMILIES = {
     "srp": _DENSE,            # CLI-facing alias
     "quadratic": QuadraticSRPFamily(),
     "mips": SimpleLSHMIPSFamily(),
+    "mips_banded": NormRangedMIPSFamily(),
 }
 
 

@@ -1,0 +1,178 @@
+"""Norm-ranged MIPS family: banded Simple-LSH sub-indexes (Yan et al.).
+
+The plain ``mips`` family's calibration boundary is documented and
+measured: with one global scale M = max_i ||x_i||, a heavy-tailed
+(log-normal) norm distribution lets a single outlier dominate M, every
+bulk row collapses toward the augmentation pole [0, ..., 0, 1], probed
+buckets are empty with *correlated* occupancy, and the paper's
+(1-q)^(l-1) miss factor degrades to a measured E[1/(p*N)] ~ 0.55 —
+a silently biased estimator (docs/ARCHITECTURE.md).
+
+Norm-ranging is the literature's fix (Yan et al., "Norm-Ranging LSH for
+Maximum Inner Product Search"): partition the corpus into ``n_bands``
+norm bands at quantile boundaries, and run Simple-LSH *per band* with a
+per-band scale
+
+    M_j = max { ||x_i|| : i in band j }.
+
+Within a band the norm ratio is bounded, no row sits near the pole, and
+the populated-bucket regime where Algorithm 1's probability formula is
+exact is restored — at log-normal norms, not just mild spreads.
+
+COMPOSITE INDEX WITHOUT NEW MACHINERY.  A sub-index per band would
+duplicate every table structure; instead the band id is packed into the
+HIGH bits of the uint32 table code:
+
+    code'(x) = (band(x) << K) | srp_code(S_j(x))          (K sign bits)
+
+so the sorted-code index groups each band into a contiguous region of
+every table (``tables.band_starts`` recovers the partition in-jit by
+binary search), buckets never mix bands, and every fused kernel —
+``simhash``, ``bucket_probe``/multi-probe, ``gather_weight`` — is
+reused unchanged.  The augmented vector carries the band id as a final
+coordinate whose projection row is zeroed (``mask_projections``), so
+hashing ignores it and ``code_tags`` recovers it at hash time.
+
+EXACT PER-BAND PROBABILITY COMPOSITION.  A draw first selects a band
+with probability n_j / n_live (its live-row share, read off the sorted
+index), then runs Algorithm 1 inside the band:
+
+    p = (n_j / n_live) * q_r * (1 - Q)^(l-1) / |S_b|
+
+with q_r evaluated at the band's scale (the SRP law normalises
+internally, so cp is exact on the band-augmented pair).  Summing over
+bands restores E[1/(p*N)] = 1 exactly in the populated-bucket regime —
+pinned by ``tests/test_norm_ranging.py`` on the log-normal corpus where
+plain ``mips`` measures ~0.55.
+
+SCALE PINNING.  ``data_scale`` returns a ``BandedScale`` (quantile
+boundaries + per-band maxima) — a pytree, so the pipeline pins and
+replays it exactly like the plain family's scalar M.  Band assignment
+is a pure function of (row norm, pinned boundaries): delta refresh,
+append and mutation-log replay all re-derive it bit-deterministically,
+and a drifted row that crosses a boundary simply changes code (band tag
+included) through the ordinary tie-stable merge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .base import normalize_rows
+from .mips import SimpleLSHMIPSFamily
+from .srp import srp_collision_prob
+
+
+class BandedScale(NamedTuple):
+    """Pinned norm-ranging state (a pytree — pipelines treat it opaquely).
+
+    boundaries: (n_bands - 1,) ascending norm quantile edges; a row with
+      norm exactly on ``boundaries[j]`` belongs to band j + 1 (the
+      ``searchsorted(side="right")`` tie rule, pinned by tests).
+    scales: (n_bands,) per-band maxima M_j (>= every member norm at
+      derivation time, 1e-30 guarded; empty bands carry the guard).
+    """
+
+    boundaries: jax.Array
+    scales: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class NormRangedMIPSFamily(SimpleLSHMIPSFamily):
+    """Banded Simple-LSH MIPS: per-band scales M_j + band-tagged codes."""
+
+    name: str = "mips_banded"
+    n_bands: int = 8
+
+    # -- banding hooks (family contract) ------------------------------------
+
+    def num_bands(self) -> int:
+        return self.n_bands
+
+    def band_bits(self) -> int:
+        return (self.n_bands - 1).bit_length()
+
+    def code_width(self, k: int) -> int:
+        # band tag occupies the bits ABOVE the K sign bits
+        return k + self.band_bits()
+
+    def aug_dim(self, d: int) -> int:
+        return d + 2                     # Simple-LSH tail + band coordinate
+
+    # -- band assignment -----------------------------------------------------
+
+    def band_of_norms(self, norms: jax.Array,
+                      boundaries: jax.Array) -> jax.Array:
+        """Band id per norm under the pinned boundaries (tie -> upper)."""
+        return jnp.searchsorted(boundaries, norms,
+                                side="right").astype(jnp.int32)
+
+    def data_scale(self, x: jax.Array) -> BandedScale:
+        """Quantile boundaries over live (positive-norm) rows + band maxima.
+
+        Dead rows (zeroed by the streaming pipeline before scale
+        derivation) have norm 0 and are excluded from the quantiles so
+        recycled slots never skew the banding.
+        """
+        if x.ndim != 2:
+            raise ValueError(
+                f"banded data_scale expects a (N, d) corpus, got {x.shape}")
+        nb = self.n_bands
+        norms = jnp.linalg.norm(x, axis=-1)                  # (N,)
+        live = norms > 1e-30
+        n_live = jnp.sum(live.astype(jnp.int32))
+        sorted_norms = jnp.sort(jnp.where(live, norms, jnp.inf))
+        js = jnp.arange(1, nb, dtype=jnp.int32)
+        pos = jnp.clip((n_live * js) // nb, 0, norms.shape[0] - 1)
+        boundaries = sorted_norms[pos]
+        # all-dead corpus: no live norm to split on; collapse every row
+        # into the top band (the all-rows-in-one-band degenerate case)
+        boundaries = jnp.where(jnp.isfinite(boundaries), boundaries, 0.0)
+        bands = self.band_of_norms(norms, boundaries)
+        scales = jnp.full((nb,), 1e-30, norms.dtype).at[bands].max(
+            jnp.where(live, norms, 0.0))
+        return BandedScale(boundaries=boundaries,
+                           scales=jnp.maximum(scales, 1e-30))
+
+    def augment_data(self, x: jax.Array,
+                     scale: Optional[BandedScale] = None) -> jax.Array:
+        """[x/M_band, sqrt(1 - ||x/M_band||^2), band] per row."""
+        scale = self.data_scale(x) if scale is None else scale
+        norms = jnp.linalg.norm(x, axis=-1)
+        bands = self.band_of_norms(norms, scale.boundaries)
+        m = jnp.take(scale.scales, bands)                    # (...,)
+        xs = x / m[..., None]
+        sq = jnp.sum(xs * xs, axis=-1, keepdims=True)
+        tail = jnp.sqrt(jnp.maximum(1.0 - sq, 0.0))
+        return jnp.concatenate(
+            [xs, tail, bands[..., None].astype(x.dtype)], axis=-1)
+
+    def augment_query(self, q: jax.Array) -> jax.Array:
+        qn = normalize_rows(q)
+        zeros = jnp.zeros(qn.shape[:-1] + (2,), qn.dtype)
+        return jnp.concatenate([qn, zeros], axis=-1)
+
+    # -- code layout hooks ---------------------------------------------------
+
+    def code_tags(self, x_aug: jax.Array, k: int) -> jax.Array:
+        """(N,) uint32 high-bit band tags ORed into the packed codes."""
+        band = jnp.round(x_aug[..., -1]).astype(jnp.uint32)
+        return band << jnp.uint32(k)
+
+    def mask_projections(self, proj: jax.Array) -> jax.Array:
+        """Zero the band coordinate's projection row: hashing must see
+        only the Simple-LSH geometry; the band reaches the code via
+        ``code_tags``, not the projection."""
+        return proj.at[-1, :].set(0.0)
+
+    # -- probabilities -------------------------------------------------------
+
+    def collision_prob(self, x_aug: jax.Array, q_aug: jax.Array) -> jax.Array:
+        # SRP law on the Simple-LSH part only (the band coordinate is
+        # code layout, not geometry).  Exact at the band's scale because
+        # the cosine law normalises internally.
+        return srp_collision_prob(x_aug[..., :-1], q_aug[..., :-1])

@@ -38,9 +38,19 @@ dataclass singletons, hashable, and therefore legal inside jit-static
   K-bit code.  Default ``cp^(K-r) (1-cp)^r`` — exact whenever the K
   bits are i.i.d. sign agreements, which holds for every SRP-derived
   family here.
-* ``code_width(k)`` — packed bits per table code (== k for all current
-  families; kept in the contract so a multi-bit-per-function family
-  can widen it without touching ``tables.py``).
+* ``code_width(k)`` — packed bits per table code (k for the flat
+  families; the banded MIPS family widens it by its band-tag bits
+  without touching ``tables.py``).
+* ``num_bands()`` / ``code_tags(x_aug, k)`` / ``mask_projections(p)``
+  — the multi-index (norm-ranging) hooks.  A banded family partitions
+  the corpus into ``num_bands()`` sub-indexes that share ONE sorted-
+  code index: ``code_tags`` returns per-row high-bit tags ORed into
+  the packed codes at hash time (band regions become contiguous slices
+  of every table) and ``mask_projections`` zeroes projection rows of
+  augmentation coordinates that carry index layout rather than
+  geometry.  Flat families return 1 / ``None`` / the projections
+  unchanged — the defaults below keep every existing family
+  bit-identical.
 * ``aug_dim(d)`` — dimensionality after ``augment_data``.
 * ``proj_kind`` — "dense" | "sparse" | "quadratic": which projection
   tensor ``core.simhash.make_projections`` draws, and whether hashing
@@ -108,6 +118,23 @@ class LSHFamily:
     def code_width(self, k: int) -> int:
         """Packed bits per table code (k sign bits for SRP families)."""
         return k
+
+    # -- multi-index (norm-ranging) hooks -----------------------------------
+
+    def num_bands(self) -> int:
+        """Number of norm bands (1 = flat family, no band routing)."""
+        return 1
+
+    def code_tags(self, x_aug: jax.Array, k: int):
+        """Per-row uint32 high-bit tags ORed into packed codes at hash
+        time (``None`` = untagged; banded families return band << k)."""
+        del x_aug, k
+        return None
+
+    def mask_projections(self, proj: jax.Array) -> jax.Array:
+        """Post-draw projection adjustment (identity for flat families;
+        banded families zero the band coordinate's row)."""
+        return proj
 
 
 def normalize_rows(v: jax.Array) -> jax.Array:

@@ -72,7 +72,13 @@ from repro.kernels.gather_weight import gather_weight
 
 from .families import get_family
 from .simhash import LSHParams, probe_masks
-from .tables import LSHIndex, bucket_bounds_batched, bucket_bounds_multi
+from .tables import (
+    LSHIndex,
+    band_starts,
+    bucket_bounds_banded,
+    bucket_bounds_batched,
+    bucket_bounds_multi,
+)
 
 
 class SampleResult(NamedTuple):
@@ -200,6 +206,81 @@ def _sample_one(key, lo, hi, order, x_aug, query, params: LSHParams,
     )
 
 
+def _sample_one_banded(key, lo, hi, starts, order, x_aug, query,
+                       params: LSHParams, max_probes: int, masks: tuple):
+    """One Algorithm-1 repetition on a norm-ranged (banded) index.
+
+    ``lo``/``hi`` are (num_bands, J, L) — bucket bounds of every probe
+    code in every band (``tables.bucket_bounds_banded``); ``starts`` is
+    the (num_bands + 1,) band partition of the sorted order
+    (``tables.band_starts``).  The draw composes exactly:
+
+      1. draw a band j with probability n_j / n_live (its live-row
+         share) — a uniform integer in [0, n_live) binary-searched
+         against ``starts``, so empty bands are never drawn;
+      2. run the ordinary (table-draw, probe) walk INSIDE band j;
+      3. report  p = (n_j / n_live) * q_r * (1 - Q)^(l-1) / |S_b|,
+         with q_r evaluated at the sampled point's own band scale
+         (the augmented pair carries it), so 1/(p*N) stays exactly
+         unbiased under heavy-tailed norms — the property
+         ``tests/test_norm_ranging.py`` pins where plain ``mips``
+         measures ~0.55.
+
+    If every probed bucket of the drawn band is empty (possible: an
+    evicted-empty band is unreachable, but a live band can still miss
+    all ``max_probes`` draws), the uniform fallback draws from the live
+    prefix with p = 1/n_live, exactly as the streaming flat path.
+    """
+    n_tables = order.shape[0]
+    j_codes = len(masks)
+    sizes = hi - lo                                # (nb, J, L)
+    k_band, k_tables, k_slot, k_fb = jax.random.split(key, 4)
+
+    total = starts[-1]                             # live rows (all bands)
+    u = _uniform_below(k_band, total)
+    band = jnp.searchsorted(starts[1:], u, side="right").astype(jnp.int32)
+    n_band = starts[band + 1] - starts[band]
+    sizes_b = sizes[band]                          # (J, L)
+    lo_b = lo[band]
+
+    ts = jax.random.randint(k_tables, (max_probes,), 0, n_tables)
+    nonempty = (sizes_b[:, ts] > 0).T.reshape(-1)  # table-draw major
+    found = jnp.any(nonempty)
+    first = jnp.argmax(nonempty)
+    i = first // j_codes
+    pj = first % j_codes
+    t = ts[i]
+    l = (i + 1).astype(jnp.int32)
+
+    size = jnp.maximum(sizes_b[pj, t], 1)
+    slot = lo_b[pj, t] + _uniform_below(k_slot, size)
+    idx = order[t, slot]
+
+    # banded indexes are always capacity-managed semantics: live rows
+    # occupy sorted slots [0, total) of every table.
+    fb_idx = order[0, _uniform_below(k_fb, total)]
+    p_fb = 1.0 / total.astype(jnp.float32)
+    idx = jnp.where(found, idx, fb_idx).astype(jnp.int32)
+
+    x = x_aug[idx]
+    cp = _cp_fn(params)(x, query)
+    rs = jnp.asarray([bin(m).count("1") for m in masks], jnp.float32)
+    q_all = get_family(params.family).probe_class_probs(
+        cp, params.k, rs)                          # (J,)
+    miss = jnp.maximum(1.0 - jnp.sum(q_all), 0.0)
+    p_band = n_band.astype(jnp.float32) / total.astype(jnp.float32)
+    p_lsh = p_band * q_all[pj] * miss ** (l - 1) / size.astype(jnp.float32)
+    p = jnp.where(found, p_lsh, p_fb)
+    return SampleResult(
+        indices=idx,
+        probs=p.astype(jnp.float32),
+        n_probes=jnp.where(found, l, max_probes).astype(jnp.int32),
+        bucket_sizes=jnp.where(found, sizes_b[pj, t], 0).astype(jnp.int32),
+        fallback=~found,
+        probe_code=jnp.where(found, pj, -1).astype(jnp.int32),
+    )
+
+
 def _probe_bounds(index, queries, params, masks, use_pallas, interpret):
     """(J, L)-shaped bucket bounds for the probe sequence.
 
@@ -262,9 +343,22 @@ def sample(
     """
     max_probes = max_probes or max(2 * params.l, 8)
     masks = probe_masks(params.k, 1 + multiprobe)
+    keys = jax.random.split(key, m)
+    if get_family(params.family).num_bands() > 1:
+        # norm-ranged composite index: probe every band, compose the
+        # band-selection probability into p (``n_live`` is redundant —
+        # the band partition's total IS the live count).
+        lo, hi = bucket_bounds_banded(index, query, params, masks,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)  # (nb, J, L)
+        starts = band_starts(index, params)
+        return jax.vmap(
+            lambda k: _sample_one_banded(k, lo, hi, starts, index.order,
+                                         x_aug, query, params, max_probes,
+                                         masks)
+        )(keys)
     lo, hi = _probe_bounds(index, query, params, masks,
                            use_pallas, interpret)          # (J, L)
-    keys = jax.random.split(key, m)
     res = jax.vmap(
         lambda k: _sample_one(k, lo, hi, index.order, x_aug, query, params,
                               max_probes, masks, n_live)
@@ -302,9 +396,23 @@ def sample_batched(
     max_probes = max_probes or max(2 * params.l, 8)
     masks = probe_masks(params.k, 1 + multiprobe)
     b = queries.shape[0]
+    keys = jax.random.split(key, (b, m))
+    if get_family(params.family).num_bands() > 1:
+        lo, hi = bucket_bounds_banded(index, queries, params, masks,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)  # (B, nb, J, L)
+        starts = band_starts(index, params)
+
+        def per_query_banded(ks, lo_q, hi_q, q):
+            return jax.vmap(
+                lambda kk: _sample_one_banded(kk, lo_q, hi_q, starts,
+                                              index.order, x_aug, q,
+                                              params, max_probes, masks)
+            )(ks)
+
+        return jax.vmap(per_query_banded)(keys, lo, hi, queries)
     lo, hi = _probe_bounds(index, queries, params, masks,
                            use_pallas, interpret)          # (B, J, L)
-    keys = jax.random.split(key, (b, m))
 
     def per_query(ks, lo_q, hi_q, q):
         return jax.vmap(
@@ -469,6 +577,13 @@ def sample_drain(
     interpret: bool = False,
 ) -> SampleResult:
     """Appendix B.2: draw the whole minibatch from the first non-empty bucket."""
+    if get_family(params.family).num_bands() > 1:
+        raise ValueError(
+            "sample_drain does not support banded (norm-ranged) families: "
+            "the drain scheme reuses ONE bucket for the whole minibatch, "
+            "which cannot compose the per-draw band-selection probability; "
+            "use sample()/sample_batched() with family "
+            f"{params.family!r}")
     max_probes = max_probes or max(2 * params.l, 8)
     lo, hi = bucket_bounds_batched(index, query, params,
                                    use_pallas=use_pallas,

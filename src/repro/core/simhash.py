@@ -66,10 +66,15 @@ def make_projections(key: jax.Array, params: LSHParams) -> jax.Array:
     ``params.dim`` is the dimensionality of the AUGMENTED vectors the
     family actually hashes (asymmetric families: ``aug_dim(d_raw)``).
     """
-    proj_kind = get_family(params.family).proj_kind
+    fam = get_family(params.family)
+    proj_kind = fam.proj_kind
     d, lk = params.dim, params.l * params.k
     if proj_kind == "dense":
-        return jax.random.normal(key, (d, lk), dtype=jnp.float32)
+        # mask_projections: identity for flat families; the banded MIPS
+        # family zeroes the band coordinate's row so hashing sees only
+        # the Simple-LSH geometry (core.families.base).
+        return fam.mask_projections(
+            jax.random.normal(key, (d, lk), dtype=jnp.float32))
     if proj_kind == "sparse":
         kv, ks = jax.random.split(key)
         signs = jax.random.rademacher(kv, (d, lk), dtype=jnp.float32)

@@ -110,8 +110,15 @@ def _hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
     ``x`` is ALREADY augmented (the family's ``augment_data`` ran at the
     call site); linear families (``proj_kind`` dense/sparse — including
     the asymmetric MIPS family's augmented vectors) route through the
-    fused simhash kernel dispatch, quadratic forms stay on XLA."""
-    if get_family(params.family).proj_kind == "quadratic":
+    fused simhash kernel dispatch, quadratic forms stay on XLA.
+
+    Banded families (``num_bands() > 1``) return per-row high-bit tags
+    from ``code_tags`` which are ORed into the packed codes here — the
+    one place data codes are produced, so build/refresh/delta re-hash
+    all tag identically and every band occupies a contiguous region of
+    each table's sorted order (see ``band_starts``)."""
+    fam = get_family(params.family)
+    if fam.proj_kind == "quadratic":
         codes = compute_codes(x, proj, k=params.k, l=params.l,
                               quadratic=True)
     else:
@@ -119,6 +126,9 @@ def _hash_points(x: jax.Array, proj: jax.Array, params: LSHParams,
             use_pallas = default_use_pallas()
         codes = simhash_codes(x, proj, k=params.k, l=params.l,
                               use_pallas=use_pallas, interpret=interpret)
+    tags = fam.code_tags(x, params.k)
+    if tags is not None:
+        codes = codes | tags[:, None]                       # (N, L)
     return codes.T
 
 
@@ -542,3 +552,68 @@ def bucket_bounds_multi(index: LSHIndex, queries: jax.Array,
                               index.sorted_codes, tuple(masks),
                               k=params.k, l=params.l,
                               use_pallas=use_pallas, interpret=interpret)
+
+
+# -- banded (norm-ranged) probing ------------------------------------------
+
+
+def band_starts(index: LSHIndex, params: LSHParams) -> jax.Array:
+    """Start offsets of each band's region in the sorted order.
+
+    Banded families OR ``band << K`` into the high bits of every data
+    code (``_hash_points``), so each band is a contiguous region of
+    every table's sorted order and the region boundaries are the SAME
+    across tables (each table sorts the same per-row tags).  Recover
+    them in-jit by binary-searching table 0:
+
+    Returns (num_bands + 1,) int32 with ``starts[j] <= i < starts[j+1]``
+    iff sorted slot i holds a band-j row.  ``starts[-1]`` is the live
+    count: the edge code ``num_bands << K`` is at most ``2^code_width``
+    <= 2^31, which still sorts strictly below the ``EMPTY_CODE``
+    sentinel tail — the same inequality the streaming capacity model
+    rests on (``data.lsh_pipeline`` enforces ``code_width(K) <= 31``).
+    """
+    nb = get_family(params.family).num_bands()
+    edges = jnp.arange(1, nb + 1, dtype=jnp.uint32) << jnp.uint32(params.k)
+    starts = jnp.searchsorted(
+        index.sorted_codes[0], edges, side="left").astype(jnp.int32)
+    return jnp.concatenate([jnp.zeros((1,), jnp.int32), starts])
+
+
+def bucket_bounds_banded(index: LSHIndex, queries: jax.Array,
+                         params: LSHParams, masks: tuple, *,
+                         use_pallas: Optional[bool] = None,
+                         interpret: bool = False):
+    """Multi-probe bucket bounds in EVERY band for a banded index.
+
+    The query's augmented vector hashes untagged (its band coordinate
+    is 0 and that projection row is zeroed), so the probe codes for
+    band j are ``(code(q)[t] ^ masks[p]) | (j << K)`` — the same
+    Hamming-ball walk as ``bucket_bounds_multi``, replicated across the
+    band tags.  All ``num_bands * J * L`` probe codes go through the
+    ``bucket_probe_codes`` kernel in one batch (the quadratic family's
+    pre-computed-codes route), so no new kernel is needed.
+
+    Returns:
+      (lo, hi) int32 of shape (B, num_bands, J, L) — or
+      (num_bands, J, L) for a single (d,) query.
+    """
+    nb = get_family(params.family).num_bands()
+    if use_pallas is None:
+        b = queries.shape[0] if queries.ndim == 2 else 1
+        use_pallas = (default_use_pallas() and
+                      index.n_points <= b * COUNTING_PROBE_MAX_POINTS_PER_QUERY)
+    qcodes = query_codes(index, queries, params)            # (..., L)
+    squeeze = qcodes.ndim == 1
+    if squeeze:
+        qcodes = qcodes[None]
+    marr = jnp.asarray(list(masks), jnp.uint32)
+    tags = jnp.arange(nb, dtype=jnp.uint32) << jnp.uint32(params.k)
+    pcodes = ((qcodes[:, None, None, :] ^ marr[None, None, :, None])
+              | tags[None, :, None, None])                  # (B, nb, J, L)
+    b, _, j, l = pcodes.shape
+    lo, hi = bucket_probe_codes(pcodes.reshape(b * nb * j, l),
+                                index.sorted_codes,
+                                use_pallas=use_pallas, interpret=interpret)
+    lo, hi = lo.reshape(b, nb, j, l), hi.reshape(b, nb, j, l)
+    return (lo[0], hi[0]) if squeeze else (lo, hi)

@@ -331,12 +331,15 @@ class LSHPipelineConfig:
                 raise ValueError(f"window must be >= 1, got {self.window}")
             self.streaming = True
         if self.streaming:
-            if self.k > 31:
-                # the sentinel capacity model needs every packed K-bit
-                # code to sort strictly before EMPTY_CODE = 2^32 - 1.
+            cw = get_family(self.family).code_width(self.k)
+            if cw > 31:
+                # the sentinel capacity model needs every packed code —
+                # including a banded family's high-bit band tags — to
+                # sort strictly before EMPTY_CODE = 2^32 - 1.
                 raise ValueError(
-                    f"streaming requires k <= 31 (sentinel codes), "
-                    f"got k={self.k}")
+                    f"streaming requires code_width(k) <= 31 (sentinel "
+                    f"codes), got {cw} (k={self.k}, "
+                    f"family={self.family!r})")
             if self.min_capacity < 1 or (
                     self.min_capacity & (self.min_capacity - 1)):
                 raise ValueError(

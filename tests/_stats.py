@@ -1,0 +1,59 @@
+"""Centralised statistical-test calibration for the whole suite.
+
+Every statistical test in this repo follows ONE convention, so the
+thresholds live in one place instead of being re-derived (or silently
+diverging) per test file:
+
+* **Fixed seeds, measured margins.**  All draws come from fixed
+  ``jax.random.PRNGKey`` seeds, and JAX programs are bit-deterministic
+  per backend — a "statistical" test is therefore reproducible, and its
+  tolerance is calibrated by MEASURING the statistic at the committed
+  seeds and asserting with explicit sigma headroom.  The residual flake
+  surface is cross-version RNG/kernel drift (jax upgrades), which the
+  ``@pytest.mark.statistical`` marker + the CI rerun-once policy
+  absorb: non-statistical tests run with NO retry, statistical tests
+  get exactly one ``--lf`` retry (see .github/workflows/ci.yml).
+
+* **Chi-square caps** (``chi2_cap``): a chi-square statistic over
+  ``ncell`` non-degenerate cells has mean ``ncell`` and sd
+  ``sqrt(2 ncell)``; tests cap at ``CHI2_SIGMA = 5`` sigma — a
+  one-sided alpha well below 1e-6, so a trip means a real law
+  disagreement, not sampling noise.
+
+* **Mean bands** (``mean_band``): a grand mean over ``n_trials``
+  independent trials with measured per-trial sd gets a
+  ``MEAN_SIGMA = 3`` sigma band around its expectation
+  (alpha ~ 2.7e-3 per test if the trials were re-randomised; with
+  fixed seeds it is a regression pin with that much headroom).
+
+* **Regime guards**: calibration identities (e.g. ``E[1/(p·N)] = 1``)
+  hold exactly only in their calibrated regime (populated buckets,
+  ``mean_l`` close to 1).  Tests assert the guard FIRST so a regime
+  drift fails loudly as "regime drifted" instead of as a mysterious
+  tolerance trip.
+"""
+
+import math
+
+# sigma levels shared by every statistical test (see module docstring)
+CHI2_SIGMA = 5.0
+MEAN_SIGMA = 3.0
+
+
+def chi2_cap(ncell: int, n_sigma: float = CHI2_SIGMA) -> float:
+    """Upper cap for a chi-square statistic over ``ncell`` cells.
+
+    ChiSq(ncell) has mean ``ncell`` and sd ``sqrt(2 ncell)``; the
+    default 5-sigma cap corresponds to alpha < 1e-6 one-sided.
+    """
+    return ncell + n_sigma * math.sqrt(2.0 * ncell)
+
+
+def mean_band(per_trial_sd: float, n_trials: int,
+              n_sigma: float = MEAN_SIGMA) -> float:
+    """Half-width of the n-sigma band for a grand mean over trials.
+
+    ``per_trial_sd`` is the MEASURED per-trial standard deviation at
+    the committed seeds (document the measurement next to the assert).
+    """
+    return n_sigma * per_trial_sd / math.sqrt(float(n_trials))

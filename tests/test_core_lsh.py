@@ -304,6 +304,7 @@ class TestSampler:
         # all from the same bucket => same probability basis & same l
         assert len(set(np.asarray(res.n_probes).tolist())) == 1
 
+    @pytest.mark.statistical
     @pytest.mark.parametrize("bound", [3, 7, 13])
     def test_uniform_below_is_uniform(self, bound):
         """Chi-square regression for the modulo-bias fix: draws in
@@ -321,6 +322,7 @@ class TestSampler:
         # 99.9th percentile of chi2 with (bound-1) dof is < 35 for bound<=13
         assert chi2 < 35.0, (bound, counts.tolist(), chi2)
 
+    @pytest.mark.statistical
     def test_within_bucket_sampling_uniform(self):
         """End-to-end chi-square: identical points share every bucket, so
         drain-mode sampling must hit each of them uniformly."""

@@ -48,6 +48,7 @@ def _regression_data(key, n=1500, d=16, pareto=False):
 
 
 class TestUnbiasedness:
+    @pytest.mark.statistical
     def test_estimator_unbiased_over_hash_draws(self):
         """Theorem 1: E[Est] = full gradient, expectation over hash draws
         AND sampling.  Quadratic family => bounded weights => CLT applies."""
@@ -93,6 +94,7 @@ class TestUnbiasedness:
 
 
 class TestVariance:
+    @pytest.mark.statistical
     def test_lgd_variance_below_sgd_on_powerlaw(self):
         """Lemma 1 regime: power-law gradient norms => Tr cov(LGD) < Tr cov(SGD).
 
@@ -127,6 +129,7 @@ class TestVariance:
             jax.lax.map(one_sgd, keys)))
         assert var_lgd < var_sgd, (var_lgd, var_sgd)
 
+    @pytest.mark.statistical
     def test_lgd_samples_have_larger_gradient_norm(self):
         """Paper Fig. 9(a-c): LGD-sampled points have larger ||grad|| than SGD.
 

@@ -28,6 +28,7 @@ import numpy as np
 import pytest
 
 import _parity_cases as pc
+from _stats import chi2_cap
 import repro.core.estimator as E
 import repro.core.sampler as S
 from repro.core import (
@@ -118,11 +119,16 @@ class TestFamilyContract:
 
     def test_aug_dim_and_code_width(self):
         for name, fam in FAMILIES.items():
-            assert fam.code_width(7) == 7
-            if fam.asymmetric:
-                assert fam.aug_dim(10) == 11
+            # banded families widen the packed code by their band bits
+            # (tag above the K sign bits) and add a band coordinate
+            band_bits = (fam.num_bands() - 1).bit_length()
+            assert fam.code_width(7) == 7 + band_bits, name
+            if fam.num_bands() > 1:
+                assert fam.aug_dim(10) == 12, name
+            elif fam.asymmetric:
+                assert fam.aug_dim(10) == 11, name
             else:
-                assert fam.aug_dim(10) == 10
+                assert fam.aug_dim(10) == 10, name
 
     def test_mips_augmented_geometry(self):
         """Data rows unit-norm; query unit-norm with zero tail; the
@@ -208,6 +214,7 @@ class TestCollisionLaw:
     """Empirical per-table collision frequency vs the closed form, per
     family: chi-square over points with L tables as Bernoulli trials."""
 
+    @pytest.mark.statistical
     @pytest.mark.parametrize("fam_name", ["dense", "quadratic", "mips"])
     def test_empirical_matches_closed_form(self, fam_name):
         fam = get_family(fam_name)
@@ -231,11 +238,11 @@ class TestCollisionLaw:
         chi2 = float(np.sum((obs - exp) ** 2 /
                             (l * expect[keep] * (1 - expect[keep]))))
         ncell = int(keep.sum())
-        # chi2 ~ ChiSq(ncell): mean ncell, sd sqrt(2 ncell); 5-sigma cap
-        assert chi2 < ncell + 5.0 * np.sqrt(2.0 * ncell), (
+        assert chi2 < chi2_cap(ncell), (
             f"{fam_name}: chi2 {chi2:.1f} vs {ncell} cells — empirical "
             "collision frequency disagrees with collision_prob")
 
+    @pytest.mark.statistical
     def test_mips_unit_inverse_probability_over_builds(self):
         """E[1/(p·N)] = 1 for MIPS Algorithm-1 samples, expectation over
         index builds AND draws (the unbiasedness identity the importance
@@ -249,7 +256,8 @@ class TestCollisionLaw:
         occupancy and the independence approximation behind the miss
         factor degrades (measured: E[1/(pN)] ~ 0.55 at exp(0.8·N) log-
         normal norms) — the known Simple-LSH boundary, documented in
-        docs/ARCHITECTURE.md."""
+        docs/ARCHITECTURE.md.  The ``mips_banded`` family closes that
+        boundary (tests/test_norm_ranging.py pins both sides)."""
         n, d = 400, 6
         kx, kn, kq = jax.random.split(jax.random.PRNGKey(8), 3)
         dirs = normalize_rows(jax.random.normal(kx, (n, d)))
@@ -275,7 +283,7 @@ class TestCollisionLaw:
         # exactness precondition; rare per-build empties are fine)
         assert float(np.mean(np.asarray(mean_l))) < 1.05, "regime drifted"
         grand = float(means.mean())
-        # per-build sd ~0.20 -> se ~0.04 over 24 builds; 3-sigma band
+        # per-build sd ~0.20 -> mean_band(0.20, 24) ~ 0.12 (3-sigma)
         assert abs(grand - 1.0) < 0.12, (
             f"E[1/(pN)] = {grand:.3f} != 1 for MIPS (per-build sd "
             f"{means.std():.3f})")
@@ -307,6 +315,7 @@ class TestMIPSEstimator:
             np.testing.assert_allclose(got2, want2, rtol=1e-5,
                                        err_msg=fam_name)
 
+    @pytest.mark.statistical
     def test_mips_estimator_unbiased_unnormalized_heavy_tail(self):
         """Importance-weighted minibatch gradient == full-batch gradient
         in expectation on an UN-normalised heavy-tailed regression — the
@@ -343,6 +352,7 @@ class TestMIPSEstimator:
                     jnp.linalg.norm(full_grad))
         assert rel < 0.25, f"MIPS estimator biased: rel err {rel}"
 
+    @pytest.mark.statistical
     def test_mips_lgd_training_decreases_loss(self):
         """End-to-end: MIPS LGD trains on un-normalised data."""
         n, d = 1000, 10

@@ -566,6 +566,7 @@ class TestAdoptShards:
                 np.testing.assert_array_equal(
                     np.asarray(g[key]), np.asarray(a[key]), err_msg=key)
 
+    @pytest.mark.statistical
     def test_adopted_weights_unbiased(self):
         """E[1/(pN)] = 1 on the adopted (full-ownership-by-one-owner)
         stream, measured in the calibrated k=3, l=64 regime.  The

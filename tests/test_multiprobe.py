@@ -189,6 +189,7 @@ class TestMultiProbeSampling:
         assert rates[8] < 0.75 * rates[0], \
             f"multi-probe fallback did not drop: {rates}"
 
+    @pytest.mark.statistical
     def test_chi_square_probe_class_frequencies(self):
         """Corrected-p factors match empirical collision frequencies.
 
@@ -234,6 +235,7 @@ class TestMultiProbeSampling:
             f"probe-class frequencies deviate from corrected-p factors: "
             f"chi2={chi2:.1f}, counts={counts}, expected={exp.tolist()}")
 
+    @pytest.mark.statistical
     def test_weights_unbiased_over_builds(self):
         """E[1/(pN)] = 1 with multi-probe firing (over index builds)."""
         ds = make_regression(jax.random.PRNGKey(42), "yearmsd-like",
@@ -257,6 +259,7 @@ class TestMultiProbeSampling:
         assert abs(w_multi - 1.0) < 0.15, (
             f"multi-probe weights biased: E[w]={w_multi:.3f}")
 
+    @pytest.mark.statistical
     def test_gradient_estimator_unbiased_with_multiprobe(self):
         """E[weighted grad] ~= full-batch grad with multi-probe firing.
 

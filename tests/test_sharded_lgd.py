@@ -112,6 +112,7 @@ class TestShardedBatches:
             np.testing.assert_allclose(global_est, np.mean(per_shard),
                                        rtol=1e-9)
 
+    @pytest.mark.statistical
     def test_sharded_estimator_unbiased(self):
         """Sharding must add NO bias: the sharded estimator's mean
         matches the unsharded Algorithm-1 estimator's mean over the same

@@ -182,6 +182,7 @@ class TestCapacity:
 
 
 class TestUnbiasedOverWindow:
+    @pytest.mark.statistical
     def test_weighted_mean_tracks_moving_window(self):
         """E[w·v] == mean(v) over the LIVE window as it slides: every
         1/(p·N) weight must use the live N.  Calibrated k=3/l=64 regime
@@ -361,6 +362,7 @@ class TestShardedStreaming:
         with pytest.raises(ValueError, match="n_shards"):
             other.load_mutation_log(log)
 
+    @pytest.mark.statistical
     def test_weight_composition_uses_live_counts(self):
         """The sharded composer must weight each shard's draws by its
         LIVE count — w·(n_live_s·S/total_live) — not the static row
