@@ -107,6 +107,24 @@ Families (``families.json``):
                     tailed corpus and run — the variance win norm-
                     ranging exists for.
 
+Softmax head (``softmax.json``):
+  train ratio       us(sampled-head train step) / us(full-vocab head
+                    step), same model/batch/run — ABSOLUTE cap
+                    ``--softmax-train-cap`` (default 1.0: the sampled
+                    head must beat the O(V) head at the benchmarked V
+                    or it has no reason to exist).
+  proj decode       roofline-projected shortlist-head tokens/s over
+                    full-head tokens/s at V = 131,072 (HBM byte model;
+                    machine speed cancels) — floored at
+                    ``--softmax-proj-floor`` (default 1.0).
+  zhat calib        |E[Zhat]/Z - 1| measured over index builds on the
+                    live head rows — ABSOLUTE gate on the fresh run
+                    (``--softmax-zhat-cap``, default 0.25: an identity,
+                    it does not drift with machine speed).
+  shortlist recall  recall@1 of the banded decode shortlist on planted
+                    winners — floored at ``--softmax-recall-floor``
+                    (default 0.8; measured ~0.98).
+
 ``--selftest`` proves the gate can actually fail before it is trusted:
 it injects a slowdown into every gated quantity and asserts each
 comparison trips.
@@ -136,6 +154,7 @@ DEFAULT_ROBUSTNESS = os.path.join(HERE, "results", "robustness.json")
 DEFAULT_MULTIHOST = os.path.join(HERE, "results", "multihost.json")
 DEFAULT_FAMILIES = os.path.join(HERE, "results", "families.json")
 DEFAULT_STREAMING = os.path.join(HERE, "results", "streaming.json")
+DEFAULT_SOFTMAX = os.path.join(HERE, "results", "softmax.json")
 
 
 def ratios(d: dict) -> dict:
@@ -474,10 +493,71 @@ def compare_families(baseline: dict, fresh: dict, step_cap: float,
     return failures
 
 
+def compare_softmax(baseline: dict, fresh: dict, train_cap: float,
+                    proj_floor: float, zhat_cap: float,
+                    recall_floor: float) -> list:
+    failures = _comparable(baseline, fresh,
+                           ("quick", "vocab", "d_model", "decode_family",
+                            "decode_k", "shortlist_per_table"),
+                           "softmax")
+    if failures:
+        for msg in failures:
+            print(msg)
+        return failures
+
+    got = fresh["train_ratio"]
+    base = baseline["train_ratio"]
+    ok = got <= train_cap
+    print(f"softmax train_ratio: baseline {base:.3f}  fresh {got:.3f}  "
+          f"cap {train_cap:.3f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"sampled-softmax train step no longer beats the full-vocab "
+            f"head: lsh/full {got:.3f} > cap {train_cap:.3f} (breaking "
+            "per-step O(V) is the head's whole claim)")
+
+    got = fresh["proj_decode_ratio"]
+    base = baseline["proj_decode_ratio"]
+    ok = got >= proj_floor
+    print(f"softmax proj_decode_ratio: baseline {base:.1f}x  fresh "
+          f"{got:.1f}x  floor {proj_floor:.1f}x  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"shortlist decode head loses to the full matmul at "
+            f"V={fresh.get('proj_vocab')}: projected ratio {got:.2f}x < "
+            f"floor {proj_floor:.2f}x (candidate count grew past the "
+            "roofline win)")
+
+    got = fresh["zhat_rel_err"]
+    base = baseline["zhat_rel_err"]
+    ok = got <= zhat_cap
+    print(f"softmax zhat_rel_err: baseline {base:.4f}  fresh {got:.4f}  "
+          f"cap {zhat_cap:.4f}  [{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"sampled normaliser miscalibrated: |E[Zhat]/Z - 1| = "
+            f"{got:.3f} > cap {zhat_cap:.3f} (the unbiasedness identity "
+            "the sampled loss rests on)")
+
+    got = fresh["shortlist_recall"]
+    base = baseline["shortlist_recall"]
+    ok = got >= recall_floor
+    print(f"softmax shortlist_recall: baseline {base:.3f}  fresh "
+          f"{got:.3f}  floor {recall_floor:.3f}  "
+          f"[{'ok' if ok else 'FAIL'}]")
+    if not ok:
+        failures.append(
+            f"decode shortlist recall collapsed: {got:.3f} < floor "
+            f"{recall_floor:.3f} (the banded index must keep holding "
+            "the argmax in a probed bucket)")
+    return failures
+
+
 def selftest(baseline: dict, refresh_base: dict, train_base: dict,
              optim_base: dict, families_base: dict,
              robustness_base: dict, streaming_base: dict,
-             multihost_base: dict, args) -> int:
+             multihost_base: dict, softmax_base: dict, args) -> int:
     """Every gate must trip on an injected slowdown of its quantity."""
     results = []
 
@@ -596,6 +676,28 @@ def selftest(baseline: dict, refresh_base: dict, train_base: dict,
     results.append(bool(compare_families(families_base, fam_tr,
                                          *fam_args)))
 
+    sm_args = (args.softmax_train_cap, args.softmax_proj_floor,
+               args.softmax_zhat_cap, args.softmax_recall_floor)
+    sm_slow = json.loads(json.dumps(softmax_base))
+    sm_slow["train_ratio"] = args.softmax_train_cap * 1.5
+    print("-- selftest 18: injected sampled-head train-step win loss --")
+    results.append(bool(compare_softmax(softmax_base, sm_slow, *sm_args)))
+
+    sm_proj = json.loads(json.dumps(softmax_base))
+    sm_proj["proj_decode_ratio"] = args.softmax_proj_floor * 0.5
+    print("-- selftest 19: injected shortlist decode projection loss --")
+    results.append(bool(compare_softmax(softmax_base, sm_proj, *sm_args)))
+
+    sm_zhat = json.loads(json.dumps(softmax_base))
+    sm_zhat["zhat_rel_err"] = args.softmax_zhat_cap * 1.5
+    print("-- selftest 20: injected Zhat miscalibration --")
+    results.append(bool(compare_softmax(softmax_base, sm_zhat, *sm_args)))
+
+    sm_rec = json.loads(json.dumps(softmax_base))
+    sm_rec["shortlist_recall"] = args.softmax_recall_floor * 0.5
+    print("-- selftest 21: injected shortlist recall collapse --")
+    results.append(bool(compare_softmax(softmax_base, sm_rec, *sm_args)))
+
     if not all(results):
         missed = [i + 1 for i, r in enumerate(results) if not r]
         print(f"selftest FAILED: gate(s) {missed} did not trip")
@@ -638,6 +740,10 @@ def main() -> int:
                     help="committed streaming baseline JSON")
     ap.add_argument("--fresh-streaming", default=DEFAULT_STREAMING,
                     help="freshly measured streaming JSON")
+    ap.add_argument("--baseline-softmax", default=DEFAULT_SOFTMAX,
+                    help="committed sampled-softmax baseline JSON")
+    ap.add_argument("--fresh-softmax", default=DEFAULT_SOFTMAX,
+                    help="freshly measured sampled-softmax JSON")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed fused_vs_ref drift over baseline")
     ap.add_argument("--batched-cap", type=float, default=0.5,
@@ -676,6 +782,18 @@ def main() -> int:
     ap.add_argument("--multihost-tolerance", type=float, default=0.5,
                     help="allowed 2proc/1proc deployment-tax drift over "
                          "the committed baseline ratio")
+    ap.add_argument("--softmax-train-cap", type=float, default=1.0,
+                    help="absolute cap on sampled-head / full-vocab-head "
+                         "train-step ratio (the sampled head must win)")
+    ap.add_argument("--softmax-proj-floor", type=float, default=1.0,
+                    help="floor on the roofline-projected shortlist/full "
+                         "decode tokens/s ratio at V=131k")
+    ap.add_argument("--softmax-zhat-cap", type=float, default=0.25,
+                    help="absolute cap on |E[Zhat]/Z - 1| measured over "
+                         "index builds (unbiasedness identity)")
+    ap.add_argument("--softmax-recall-floor", type=float, default=0.8,
+                    help="floor on decode-shortlist recall@1 on planted "
+                         "winners (measured ~0.98 on the banded index)")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the gates trip on injected slowdowns")
     args = ap.parse_args()
@@ -696,10 +814,12 @@ def main() -> int:
         streaming_base = json.load(f)
     with open(args.baseline_multihost) as f:
         multihost_base = json.load(f)
+    with open(args.baseline_softmax) as f:
+        softmax_base = json.load(f)
     if args.selftest:
         return selftest(baseline, refresh_base, train_base, optim_base,
                         families_base, robustness_base, streaming_base,
-                        multihost_base, args)
+                        multihost_base, softmax_base, args)
 
     with open(args.fresh) as f:
         fresh = json.load(f)
@@ -717,6 +837,8 @@ def main() -> int:
         streaming_fresh = json.load(f)
     with open(args.fresh_multihost) as f:
         multihost_fresh = json.load(f)
+    with open(args.fresh_softmax) as f:
+        softmax_fresh = json.load(f)
     failures = compare(baseline, fresh, args.tolerance, args.batched_cap,
                        args.probe_cap)
     failures += compare_refresh(refresh_base, refresh_fresh,
@@ -736,6 +858,11 @@ def main() -> int:
                                   args.streaming_cap)
     failures += compare_multihost(multihost_base, multihost_fresh,
                                   args.multihost_tolerance)
+    failures += compare_softmax(softmax_base, softmax_fresh,
+                                args.softmax_train_cap,
+                                args.softmax_proj_floor,
+                                args.softmax_zhat_cap,
+                                args.softmax_recall_floor)
     for msg in failures:
         print(f"::error::{msg}")
     if failures:

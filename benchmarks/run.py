@@ -29,6 +29,11 @@
   tab_families             SRP vs asymmetric-MIPS hash families on an
                            un-normalised corpus: per-draw sampling cost
                            + estimator variance vs uniform
+  tab_softmax              LSH-sampled softmax head vs the full-vocab
+                           O(V) head: train step time ratio, decode
+                           shortlist vs full matmul (measured + roofline
+                           projection at V=131k), normaliser-estimate
+                           bias, shortlist recall
   thm2_variance            empirical Tr(Cov) of LGD vs SGD estimators
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's
@@ -43,6 +48,7 @@ CPU budget (used by the bench-regression gate together with
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import time
@@ -1354,6 +1360,200 @@ def thm2_variance():
     return dict(var_lgd=v_lgd, var_sgd=v_sgd)
 
 
+def tab_softmax(quick: bool = False):
+    """LSH-sampled softmax head vs the full-vocab O(V) head.
+
+    Four gated quantities (benchmarks/check_regression.py):
+
+      train_ratio       sampled-head train step (loss+grad, sampling
+                        INSIDE the jitted step) / full-vocab head step,
+                        same model/batch — must be < 1 at the
+                        benchmarked V (the whole point of the head).
+      proj_decode_ratio decode tokens/s of the shortlist head over the
+                        full matmul head at V = SHAPES['vocab_large']
+                        (131k), PROJECTED from the roofline byte model
+                        (HBM-bound regime: full head streams d*V*4
+                        bytes/token; the shortlist streams projections
+                        + J*L*c candidate columns) — must be >= 1.
+                        The measured head-only ratio at the benchmarked
+                        (CPU-sized) V is reported unprojected alongside.
+      zhat_rel_err      |E[Zhat]/Z - 1| measured over index builds on
+                        the live head rows — the unbiasedness identity
+                        at bench scale.
+      shortlist_recall  recall@1 of the probe shortlist on planted
+                        near-duplicate queries (the trained-head,
+                        argmax-has-margin regime).
+
+    TWO REGIMES, TWO CONFIGS.  The sampling estimator needs POPULATED
+    buckets (occupancy >> 1) for Algorithm 1's probability law to be
+    exact — plain ``mips``, coarse k.  The decode shortlist needs the
+    opposite: fine buckets so c slots hold a bucket, plus norm-ranging
+    (``mips_banded``) because one global Simple-LSH scale caps an
+    exact-match query's per-table collision at (||x||/M)-cosine —
+    measured recall 0.49 single-index vs 0.98 banded on the same head.
+    """
+    from repro.configs.shapes import SHAPES
+    from repro.launch.roofline import HBM_BW
+    from repro.models import (
+        LMHeadIndex, SampledSoftmaxConfig, make_sampled_loss,
+    )
+    from repro.models.layers import rms_norm
+    from repro.models.sampled_softmax import (
+        head_lsh_params, shortlist_candidates, shortlist_logits,
+    )
+    from repro.core.families import get_family
+
+    vocab = 8192 if quick else 32768
+    cfg = ModelConfig(
+        name="lm-softmax", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, d_ff=128, vocab=vocab, chunk=32, loss_chunk=256,
+        dtype="float32", rope_theta=10000.0)
+    # training/estimator config: coarse k keeps mean bucket occupancy
+    # V/2^k ~ 32 (the populated-bucket regime where the probability law
+    # is calibrated — tests/test_sampled_softmax.py)
+    scfg = SampledSoftmaxConfig(k=vocab.bit_length() - 6, l=8,
+                                n_samples=32, multiprobe=2,
+                                drift_sample=0.0)
+    # decode-shortlist config: norm-ranged bands + fine buckets (each
+    # band's occupancy ~ shortlist_per_table so c slots cover a bucket)
+    dcfg = SampledSoftmaxConfig(family="mips_banded", k=10, l=8,
+                                multiprobe=2, shortlist_per_table=8,
+                                drift_sample=0.0)
+    b, s = 8, 32
+    iters = 6 if quick else 12
+    params = init_params(KEY, cfg)
+    head = LMHeadIndex(params, cfg, scfg)
+    toks = jax.random.randint(jax.random.fold_in(KEY, 1), (b, s + 1), 0,
+                              vocab)
+    batch = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def _time(fn, *a):
+        fn(*a)                                   # compile off the clock
+        jax.block_until_ready(fn(*a)[0])
+        dts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*a)[0])
+            dts.append(time.perf_counter() - t0)
+        return float(np.median(dts)) * 1e6
+
+    # -- train step: loss + grad, full head vs sampled head ------------
+    full_step = jax.jit(jax.value_and_grad(
+        lambda prm, bt: lm_loss(prm, cfg, bt)))
+    us_full = _time(full_step, params, batch)
+    sampled_loss = make_sampled_loss(cfg, scfg)
+    lsh_step = jax.jit(jax.value_and_grad(sampled_loss))
+    us_lsh = _time(lsh_step, params, head.inject(batch, step=0))
+    train_ratio = us_lsh / max(us_full, 1e-9)
+
+    # -- decode head: full matmul argmax vs probe+shortlist argmax -----
+    dfam = get_family(dcfg.family)
+    dlsh = head_lsh_params(cfg, dcfg)
+    dhead = LMHeadIndex(params, cfg, dcfg)
+    nq = 64
+    h = jax.random.normal(jax.random.fold_in(KEY, 2), (nq, cfg.d_model))
+    q = rms_norm(params["embed_group"]["final_norm"], h,
+                 cfg.norm_eps).astype(jnp.float32)
+
+    def full_head(prm, qq):
+        return jnp.argmax(qq @ prm["embed_group"]["lm_head"], -1), ()
+    us_full_dec = _time(jax.jit(full_head), params, q)
+
+    def lsh_head(prm, qq, idx):
+        ids, valid = shortlist_candidates(idx, dfam.augment_query(qq),
+                                          dlsh, dcfg)
+        lg = shortlist_logits(prm["embed_group"]["lm_head"], qq, ids,
+                              valid)
+        best = jnp.argmax(lg, -1)
+        return jnp.take_along_axis(ids, best[:, None], 1)[:, 0], ()
+    us_lsh_dec = _time(jax.jit(lsh_head), params, q, dhead.index)
+    decode_ratio_measured = (us_full_dec / nq) / max(us_lsh_dec / nq,
+                                                     1e-9)
+
+    # -- roofline projection to production V (vocab_large) -------------
+    v_big = SHAPES["vocab_large"].vocab
+    d = cfg.d_model
+    aug = dfam.aug_dim(d)
+    n_cand = (dfam.num_bands() * (1 + dcfg.multiprobe) * dcfg.l
+              * dcfg.shortlist_per_table)
+    bytes_full = 4.0 * d * v_big                  # stream the head
+    bytes_lsh = (4.0 * aug * dcfg.k * dcfg.l     # projections
+                 + 4.0 * dcfg.l * 64             # sorted-code probes
+                 + 4.0 * n_cand * (d + 1))       # candidate columns+ids
+    proj_full_tok_s = HBM_BW / bytes_full
+    proj_lsh_tok_s = HBM_BW / bytes_lsh
+    proj_decode_ratio = proj_lsh_tok_s / proj_full_tok_s
+
+    # -- estimator quality at bench scale -------------------------------
+    rows = params["embed_group"]["lm_head"].astype(jnp.float32).T
+    hq = jax.random.normal(jax.random.fold_in(KEY, 3), (32, d)) * 0.5
+    logits_all = hq @ rows.T
+    z = jnp.sum(jnp.exp(logits_all), -1)
+    rels = []
+    for t in range(4 if quick else 8):
+        hb = LMHeadIndex(params, cfg, dataclasses.replace(scfg, seed=t + 1))
+        res = S.sample_batched(
+            jax.random.fold_in(KEY, 100 + t), hb.index, hb.x_aug,
+            get_family(scfg.family).augment_query(hq),
+            head_lsh_params(cfg, dataclasses.replace(scfg, seed=t + 1)),
+            m=64, multiprobe=scfg.multiprobe)
+        l_neg = jnp.take_along_axis(logits_all, res.indices, 1)
+        rels.append(np.asarray(
+            jnp.mean(jnp.exp(l_neg) / res.probs, -1) / z))
+    zhat_rel_err = float(abs(np.mean(np.stack(rels)) - 1.0))
+
+    # -- shortlist recall on planted winners ----------------------------
+    winners = jax.random.randint(jax.random.fold_in(KEY, 4), (128,), 0,
+                                 vocab)
+    qr = rows[winners] + 0.05 * jnp.std(rows) * jax.random.normal(
+        jax.random.fold_in(KEY, 5), (128, d))
+    ids, valid = shortlist_candidates(dhead.index, dfam.augment_query(qr),
+                                      dlsh, dcfg)
+    lg = shortlist_logits(params["embed_group"]["lm_head"], qr, ids,
+                          valid)
+    got = jnp.take_along_axis(ids, jnp.argmax(lg, -1)[:, None], 1)[:, 0]
+    true = jnp.argmax(qr @ rows.T, -1)
+    recall = float(jnp.mean((got == true).astype(jnp.float32)))
+
+    _row("tab_softmax_full_step", us_full, "baseline")
+    _row("tab_softmax_lsh_step", us_lsh,
+         f"{train_ratio:.3f}x of full head")
+    _row("tab_softmax_full_decode_head", us_full_dec / nq, "us/token")
+    _row("tab_softmax_lsh_decode_head", us_lsh_dec / nq,
+         f"measured {decode_ratio_measured:.2f}x; projected "
+         f"{proj_decode_ratio:.0f}x at V={v_big}")
+    _row("tab_softmax_zhat_rel_err", 0.0, f"{zhat_rel_err:.4f}")
+    _row("tab_softmax_shortlist_recall", 0.0, f"{recall:.3f}")
+
+    out = {
+        "backend": jax.default_backend(),
+        "quick": quick, "vocab": vocab, "d_model": d,
+        "k": scfg.k, "l": scfg.l, "multiprobe": scfg.multiprobe,
+        "n_samples": scfg.n_samples,
+        "decode_family": dcfg.family, "decode_k": dcfg.k,
+        "decode_l": dcfg.l,
+        "shortlist_per_table": dcfg.shortlist_per_table,
+        "n_candidates": n_cand,
+        "full_step_us": us_full,
+        "lsh_step_us": us_lsh,
+        "train_ratio": train_ratio,
+        "full_decode_head_us_per_token": us_full_dec / nq,
+        "lsh_decode_head_us_per_token": us_lsh_dec / nq,
+        "decode_ratio_measured": decode_ratio_measured,
+        "proj_vocab": v_big,
+        "proj_tokens_s_full": proj_full_tok_s,
+        "proj_tokens_s_lsh": proj_lsh_tok_s,
+        "proj_decode_ratio": proj_decode_ratio,
+        "zhat_rel_err": zhat_rel_err,
+        "shortlist_recall": recall,
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    fname = "softmax.json" if quick else "BENCH_softmax.json"
+    with open(os.path.join(RESULTS, fname), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 TABLES = {
     "fig9_sample_quality": lambda quick: fig9_sample_quality(),
     "fig10_convergence": lambda quick: fig10_convergence(),
@@ -1367,6 +1567,7 @@ TABLES = {
     "tab_multihost": tab_multihost,
     "tab_optimizers": tab_optimizers,
     "tab_families": tab_families,
+    "tab_softmax": tab_softmax,
     "thm2_variance": lambda quick: thm2_variance(),
 }
 
@@ -1384,7 +1585,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     quick_aware = {"tab_sampling_cost", "tab_refresh_cost",
                    "tab_streaming", "tab_train_step", "tab_robustness",
-                   "tab_multihost", "tab_optimizers", "tab_families"}
+                   "tab_multihost", "tab_optimizers", "tab_families",
+                   "tab_softmax"}
     if args.quick:
         ignored = [n for n in names if n not in quick_aware]
         if ignored:

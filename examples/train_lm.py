@@ -57,9 +57,22 @@ asymmetric Simple-LSH augmentation (``repro/core/families/mips.py``)
 — collision probability monotone in the raw inner product, so feature
 norms carry sampling signal.  Same fused kernels either way.
 
+Head (``--head {full,lsh}``): ``full`` pays the O(V·d)-per-token
+softmax normaliser; ``lsh`` trains through the LSH-SAMPLED head
+(``repro/models/sampled_softmax.py``): a MIPS index over the lm_head
+rows is probed with each token's hidden state, the normaliser is
+estimated from ``n_samples`` Algorithm-1 negatives with exact
+inclusion probabilities (E[Zhat] = Z), and the index delta-refreshes
+every ``refresh_every`` OPTIMIZER steps as the head trains — the
+index-over-params twin of the data pipeline.  The eval line always
+uses the exact full-vocab loss, so you can watch sampled training
+track it.  ``--head lsh`` composes with ``--sampler uniform`` (the
+LGD data sampler owns the batch stream in lgd mode).
+
 Run:  PYTHONPATH=src python examples/train_lm.py [--preset demo]
           [--steps 200] [--sampler lgd] [--shards 2] [--ckpt /tmp/lm_ckpt]
           [--optimizer adam] [--multiprobe 2] [--family mips]
+          [--head lsh]
 """
 
 import argparse
@@ -72,7 +85,10 @@ from repro.data import (
     LSHPipelineConfig, ShardedLSHPipeline, lm_head_query_fn,
     make_token_corpus, mean_pool_feature_fn, uniform_batches,
 )
-from repro.models import ModelConfig, init_params, loss
+from repro.models import (
+    LMHeadIndex, ModelConfig, SampledSoftmaxConfig, init_params, loss,
+    make_sampled_loss,
+)
 from repro.optim import make_optimizer, schedules
 from repro.train import Trainer, TrainerConfig
 
@@ -116,10 +132,22 @@ def main():
                          "through the asymmetric Simple-LSH augmentation; "
                          "mips_banded = norm-ranged Simple-LSH (exact "
                          "weights at heavy-tailed feature norms)")
+    ap.add_argument("--head", default="full", choices=["full", "lsh"],
+                    help="full: exact O(V) softmax normaliser; lsh: "
+                         "LSH-sampled normaliser over a MIPS index of "
+                         "the lm_head rows, delta-refreshed by step")
+    ap.add_argument("--head-refresh-every", type=int, default=25,
+                    help="optimizer steps between head-index refreshes "
+                         "(--head lsh)")
+    ap.add_argument("--head-samples", type=int, default=64,
+                    help="LSH-sampled negatives per token (--head lsh)")
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args()
     if args.uniform:
         args.sampler = "uniform"
+    if args.head == "lsh" and args.sampler == "lgd":
+        ap.error("--head lsh composes with --sampler uniform (the LGD "
+                 "data sampler owns the batch stream in lgd mode)")
     p = PRESETS[args.preset]
 
     cfg = ModelConfig(
@@ -132,7 +160,7 @@ def main():
     params = init_params(key, cfg)
     n_params = sum(x.size for x in jax.tree.leaves(params))
     print(f"model: {n_params/1e6:.1f}M params | sampler: {args.sampler}"
-          f" | optimizer: {args.optimizer}"
+          f" | head: {args.head} | optimizer: {args.optimizer}"
           + (f" | shards: {args.shards} | multiprobe: {args.multiprobe}"
              f" | family: {args.family}"
              if cfg.lgd_enabled else ""))
@@ -156,6 +184,23 @@ def main():
     else:
         batches = uniform_batches(corpus, p["batch"], seed=3)
 
+    head = loss_fn = step_hook = None
+    if args.head == "lsh":
+        # keep k in the populated-bucket regime at this preset's V
+        # (occupancy ~ V / 2^k stays >> 1) so the sampled normaliser
+        # sits inside the family's calibrated-unbiasedness boundary.
+        scfg = SampledSoftmaxConfig(
+            k=min(7, max(3, cfg.vocab.bit_length() - 6)), l=8,
+            n_samples=args.head_samples, multiprobe=2,
+            refresh_every=args.head_refresh_every, refresh_mode="delta")
+        head = LMHeadIndex(params, cfg, scfg)
+        batches = head.wrap_batches(batches)
+        loss_fn = make_sampled_loss(cfg, scfg)
+        step_hook = head.step_hook
+        print(f"head index: {head.index.n_points} rows x "
+              f"{head.index.n_tables} tables | m={scfg.n_samples} "
+              f"negatives/token | refresh every {scfg.refresh_every} steps")
+
     peak = 3e-3 if args.optimizer == "adam" else 3e-2
     tr = Trainer(
         cfg, params,
@@ -163,8 +208,9 @@ def main():
                        schedules.warmup_cosine(peak, 20, args.steps)),
         batches,
         TrainerConfig(ckpt_dir=args.ckpt, ckpt_every=100, log_every=20,
-                      donate=not cfg.lgd_enabled),
-        sampler=sampler)
+                      donate=not cfg.lgd_enabled and args.head != "lsh",
+                      step_hook=step_hook),
+        sampler=sampler, loss_fn=loss_fn)
 
     eval_batch = {"tokens": jnp.asarray(corpus.tokens[:128, :-1]),
                   "targets": jnp.asarray(corpus.tokens[:128, 1:])}

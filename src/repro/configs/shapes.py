@@ -1,6 +1,6 @@
 """Assigned input shapes and their ShapeDtypeStruct stand-ins.
 
-Four shapes per LM architecture (40 cells total):
+Five shapes per LM architecture:
   train_4k     seq 4,096   global_batch 256   -> train_step
   prefill_32k  seq 32,768  global_batch 32    -> prefill (inference)
   decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token,
@@ -9,6 +9,21 @@ Four shapes per LM architecture (40 cells total):
                                                  sub-quadratic attention,
                                                  run only for SSM/hybrid
                                                  archs (cfg.supports_long_context)
+  vocab_large  seq 4,096   global_batch 64    -> serve_step with the arch's
+                                                 vocab OVERRIDDEN to 131,072
+                                                 (production-LM vocab): the
+                                                 dryrun/roofline-only cell
+                                                 where the O(V·d) head
+                                                 dominates the decode byte
+                                                 budget and the LSH-sampled
+                                                 softmax ratio is projected
+                                                 (benchmarks/run.py
+                                                 tab_softmax); never run as a
+                                                 tier-1 compute cell.
+
+A ``ShapeSpec.vocab`` override applies only on the abstract-eval paths
+(``launch.dryrun.run_cell`` and ``launch.roofline``) — smoke/tier-1
+configs keep their small vocabs so test runtime is unaffected.
 """
 
 from __future__ import annotations
@@ -30,6 +45,9 @@ class ShapeSpec:
     seq_len: int
     global_batch: int
     kind: str     # "train" | "prefill" | "decode"
+    # when set, the cell runs with cfg.vocab overridden (dryrun/roofline
+    # abstract-eval only — see apply_vocab)
+    vocab: Optional[int] = None
 
 
 SHAPES: Dict[str, ShapeSpec] = {
@@ -37,7 +55,17 @@ SHAPES: Dict[str, ShapeSpec] = {
     "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+    "vocab_large": ShapeSpec("vocab_large", 4_096, 64, "decode",
+                             vocab=131_072),
 }
+
+
+def apply_vocab(cfg: ModelConfig, shape: ShapeSpec) -> ModelConfig:
+    """The config the cell actually runs: vocab overridden when the
+    shape pins one (vocab_large), unchanged otherwise."""
+    if shape.vocab is None or shape.vocab == cfg.vocab:
+        return cfg
+    return dataclasses.replace(cfg, vocab=shape.vocab)
 
 
 def shape_applicable(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:

@@ -37,6 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 from repro import configs                      # noqa: E402
 from repro.configs.shapes import (             # noqa: E402
     SHAPES,
+    apply_vocab,
     batch_specs,
     cache_specs,
     shape_applicable,
@@ -210,6 +211,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     skip = shape_applicable(cfg, shape)
     if skip is not None:
         return {"arch": arch, "shape": shape_name, "skipped": skip}
+    # vocab_large pins a production vocab on this abstract-eval path
+    cfg = apply_vocab(cfg, shape)
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     optimizer = pick_optimizer(arch)
@@ -260,6 +263,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
 
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # older jax: list of per-device dicts
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_d = {

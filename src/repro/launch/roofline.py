@@ -34,7 +34,7 @@ import json
 from typing import Dict
 
 from repro import configs
-from repro.configs.shapes import SHAPES
+from repro.configs.shapes import SHAPES, apply_vocab
 from repro.models import ModelConfig
 
 PEAK_FLOPS = 197e12          # bf16 / chip
@@ -111,7 +111,7 @@ def model_flops(cfg: ModelConfig, shape, n_devices: int) -> float:
 
 
 def roofline_terms(record: dict) -> dict:
-    cfg = configs.get(record["arch"])
+    cfg = apply_vocab(configs.get(record["arch"]), SHAPES[record["shape"]])
     shape = SHAPES[record["shape"]]
     n_dev = record["n_devices"]
     compute_t = record["flops_per_device"] / PEAK_FLOPS

@@ -1,6 +1,7 @@
 from .config import ModelConfig  # noqa: F401
-from . import layers, lm, moe, ssm  # noqa: F401
+from . import layers, lm, moe, sampled_softmax, ssm  # noqa: F401
 from .lm import (  # noqa: F401
+    decode_hidden,
     decode_step,
     forward,
     init_cache,
@@ -10,4 +11,11 @@ from .lm import (  # noqa: F401
     loss,
     pooled_features,
     prefill,
+)
+from .sampled_softmax import (  # noqa: F401
+    LMHeadIndex,
+    SampledSoftmaxConfig,
+    lsh_decode_step,
+    make_sampled_loss,
+    sampled_softmax_loss,
 )

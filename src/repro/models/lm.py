@@ -298,10 +298,13 @@ def prefill(params, cfg: ModelConfig, batch, cache):
     return x, new_cache
 
 
-def decode_step(params, cfg: ModelConfig, batch, cache):
-    """One-token decode: batch["tokens"]/batch["embeds"] has S=1.
+def decode_hidden(params, cfg: ModelConfig, batch, cache):
+    """One-token decode up to (but not including) the lm head.
 
-    Returns (logits (B, 1, V), new_cache)."""
+    The transformer body of ``decode_step``, split out so alternative
+    heads (e.g. the LSH-shortlisted head in ``models.sampled_softmax``)
+    can reuse the unchanged block stack without paying the O(V) logits
+    matmul.  Returns (hidden (B, 1, d), new_cache)."""
     if cfg.frontend == "embed_stub":
         x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
     else:
@@ -310,6 +313,12 @@ def decode_step(params, cfg: ModelConfig, batch, cache):
     if image_mem is not None:
         image_mem = image_mem.astype(x.dtype)
     positions = batch["positions"]           # (B, 1) int32
-    x, new_cache = _scan_blocks(
-        params, cfg, x, positions, image_mem, cache, True)
+    return _scan_blocks(params, cfg, x, positions, image_mem, cache, True)
+
+
+def decode_step(params, cfg: ModelConfig, batch, cache):
+    """One-token decode: batch["tokens"]/batch["embeds"] has S=1.
+
+    Returns (logits (B, 1, V), new_cache)."""
+    x, new_cache = decode_hidden(params, cfg, batch, cache)
     return lm_logits(params["embed_group"], cfg, x), new_cache

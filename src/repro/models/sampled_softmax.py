@@ -1,0 +1,490 @@
+"""LSH-sampled softmax: the large-vocab head as an LGD problem.
+
+The full-vocab LM head pays O(V) per token twice: the training loss
+normaliser ``Z = sum_v exp(l_v)`` streams all V columns of ``lm_head``
+through the logsumexp, and greedy decode streams them again through the
+argmax matmul.  That is the paper's chicken-and-egg loop in miniature —
+touching every row to decide which rows matter costs more than the step
+— and the same MIPS machinery that breaks it for example sampling
+breaks it here: the CORPUS is the ``lm_head`` embedding table (rows =
+vocabulary), the QUERY is the final hidden state, and Algorithm 1's
+exact inclusion probabilities make the sampled estimate unbiased.
+
+TRAINING (``sampled_softmax_loss``).  Per token with hidden state h and
+target t, the exact loss is ``log Z - l_t``.  We keep the target logit
+EXACT (a single differentiable column gather) and estimate only the
+normaliser with m LSH-sampled negatives j drawn by Algorithm 1 with
+exact probability p_j over the vocabulary:
+
+    Zhat = (1/m) sum_j exp(l_j) / p_j          E[Zhat] = Z
+
+(the sum-estimator twin of the 1/(p·N) mean estimator: w = 1/p instead
+of 1/(p·N)).  The loss uses ``log Zhat = logsumexp(l_j - log p_j) -
+log m`` — a consistent (O(1/m)-biased, as every sampled softmax) plug-in
+for log Z whose gradient is the self-normalised importance-sampling
+estimate of the softmax distribution.  Per-step head cost drops from
+O(V·d) to O(m·d + probe), breaking per-step O(V) the way LGD breaks
+per-step O(N).
+
+INDEX OVER PARAMS (``LMHeadIndex``).  Unlike the data pipeline's corpus,
+this corpus is TRAINABLE — every optimizer step moves the indexed rows.
+The lifecycle therefore keys off optimizer steps: ``step_hook`` (or any
+caller of ``maybe_refresh``) refreshes every ``refresh_every`` steps,
+with ``refresh_mode="delta"`` re-hashing only rows marked dirty (target
+ids seen since the last refresh + a drift-sampled remainder) through
+``mutate_index(op="delta")`` under the PINNED MIPS scale M, and every
+``full_every``-th refresh running a full warm-started ``op="refresh"``
+that re-pins M.  Staleness between refreshes does NOT bias the
+estimator: the collision probability is evaluated on the STORED
+``x_aug`` (the vectors actually hashed into the tables), so p_j stays
+exact with respect to the as-built index and only the sampling QUALITY
+(variance) degrades as live rows drift from their hashed snapshots —
+the same contract as the data pipeline's delta refresh.
+
+The index rides through the TRAINED STEP'S BATCH DICT (``inject``):
+closing the jitted loss over the index would bake a stale pytree
+constant into the jaxpr; as batch leaves, the fresh index/x_aug/key
+flow through the one compiled program every step, shape-static across
+refreshes.  Requires ``TrainerConfig.grad_accum == 1`` (micro-batching
+reshapes every batch leaf along dim 0, which would shred the index
+arrays).
+
+SERVING (``lsh_decode_step``).  The same probe, used as an approximate
+top-k shortlist: probe the query's bucket in every (probe code, table)
+pair, take up to ``shortlist_per_table`` candidates from each bucket
+slice (static J·L·c candidate shape), gather only those head columns
+and argmax over the masked candidate logits — O(shortlist·d) instead of
+O(V·d) per token.  BIAS BOUNDARY: unlike training (exactly unbiased in
+expectation), the shortlist is approximate retrieval — when no probed
+bucket holds the true argmax the decoded token differs from the full
+matmul.  ``tests/test_sampled_softmax.py`` pins recall@k on a
+structured head and ``benchmarks/run.py tab_softmax`` gates it in CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.families import get_family
+from repro.core.sampler import sample_batched
+from repro.core.simhash import LSHParams, probe_masks
+from repro.core.tables import (
+    IndexMutation,
+    LSHIndex,
+    bucket_bounds_banded,
+    bucket_bounds_batched,
+    bucket_bounds_multi,
+    hash_points,
+    mutate_index,
+)
+
+from .config import ModelConfig
+from .layers import rms_norm
+from .lm import decode_hidden, forward
+
+# fold_in salts of the head-index key streams (disjoint from the data
+# pipeline's 0x0B11D/0x057E9/0x0F5E5 family so a run using both draws
+# independent streams from one root seed).
+_SALT_HEAD_BUILD = 0x5EAD0
+_SALT_HEAD_STEP = 0x5EAD1
+_SALT_HEAD_DRIFT = 0x5EAD2
+
+
+@dataclasses.dataclass(frozen=True)
+class SampledSoftmaxConfig:
+    """Static knobs of the LSH-sampled head (hashable: jit-static safe).
+
+    Defaults follow the paper's BERT recipe (K=7, L=10) — the vocab
+    corpus is small-N by LGD standards, so few tables suffice — with
+    the asymmetric MIPS family so un-normalised head columns sample by
+    raw inner product.
+    """
+
+    k: int = 7                    # bits per table
+    l: int = 10                   # tables
+    n_samples: int = 32           # m: LSH-sampled negatives per token
+    multiprobe: int = 2           # extra Hamming-ball codes per table
+    family: str = "mips"          # core.families registry key
+    refresh_every: int = 50       # optimizer steps between refreshes
+    refresh_mode: str = "delta"   # "delta" | "full"
+    full_every: int = 10          # every Nth refresh is full (re-pins M);
+    #                               0 = never force full
+    drift_sample: float = 0.05    # fraction of clean rows re-hashed per
+    #                               delta refresh (head drift is global:
+    #                               the normaliser term touches every row)
+    p_floor: float = 1e-8         # probability floor inside log Zhat
+    max_probes: Optional[int] = None   # static cap on table draws
+    shortlist_per_table: int = 8  # decode candidates per (probe, table)
+    use_pallas: Optional[bool] = None
+    interpret: bool = False
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.refresh_mode not in ("delta", "full"):
+            raise ValueError(
+                f"refresh_mode must be 'delta' or 'full', "
+                f"got {self.refresh_mode!r}")
+        if self.n_samples < 1:
+            raise ValueError(f"n_samples must be >= 1, got {self.n_samples}")
+
+
+def head_lsh_params(cfg: ModelConfig, scfg: SampledSoftmaxConfig) -> LSHParams:
+    """The hash-family parameters of the lm_head index (dim = aug_dim(d))."""
+    fam = get_family(scfg.family)
+    return LSHParams(k=scfg.k, l=scfg.l, dim=fam.aug_dim(cfg.d_model),
+                     family=scfg.family, seed=scfg.seed)
+
+
+def _head_rows(params) -> jax.Array:
+    """The corpus: lm_head columns as (V, d) float32 rows."""
+    return params["embed_group"]["lm_head"].astype(jnp.float32).T
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# ---------------------------------------------------------------------------
+# the head-level sampled cross entropy (shared by the model loss + tests)
+# ---------------------------------------------------------------------------
+
+def sampled_head_xent(q: jax.Array, lm_head: jax.Array, targets: jax.Array,
+                      neg_ids: jax.Array, neg_probs: jax.Array,
+                      p_floor: float = 1e-8) -> jax.Array:
+    """Per-token sampled softmax xent: ``log Zhat - l_target``.
+
+    Args:
+      q: (T, d) float32 differentiable queries (final-norm'd hidden
+        states) — the logits are ``q @ lm_head``.
+      lm_head: (d, V) head matrix (live, differentiable).
+      targets: (T,) int32 gold token ids (their logits stay EXACT).
+      neg_ids / neg_probs: (T, m) Algorithm-1 samples over the vocab and
+        their exact inclusion probabilities (gradients are stopped on
+        the probabilities — they are sampling-law constants, not model
+        outputs).
+
+    Returns:
+      (T,) per-token losses ``logsumexp(l_j - log p_j) - log m - l_t``:
+      ``Zhat = (1/m) sum_j exp(l_j)/p_j`` satisfies E[Zhat] = Z exactly
+      (sum-estimator with w = 1/p), so the loss is a consistent plug-in
+      for ``log Z - l_t`` with the usual O(1/m) logsumexp bias.
+    """
+    head = lm_head.astype(jnp.float32)
+    m = neg_ids.shape[-1]
+    w_neg = jnp.take(head, neg_ids, axis=1)         # (d, T, m)
+    l_neg = jnp.einsum("td,dtm->tm", q, w_neg)      # (T, m)
+    logp = jnp.log(jnp.maximum(jax.lax.stop_gradient(neg_probs), p_floor))
+    log_zhat = jax.nn.logsumexp(l_neg - logp, axis=-1) - jnp.log(float(m))
+    w_gold = jnp.take(head, targets, axis=1)        # (d, T)
+    l_gold = jnp.einsum("td,dt->t", q, w_gold)
+    return log_zhat - l_gold
+
+
+def sampled_softmax_loss(params, cfg: ModelConfig,
+                         scfg: SampledSoftmaxConfig, batch) -> jax.Array:
+    """Trainer-compatible LM loss with the LSH-sampled normaliser.
+
+    Drop-in for ``models.loss`` when the batch carries the head-index
+    leaves (``LMHeadIndex.inject``):
+
+      * ``head_index``  — the ``LSHIndex`` pytree over lm_head rows,
+      * ``head_x_aug``  — the (V, aug_dim) vectors actually hashed
+        (probabilities are evaluated on THESE, so index staleness never
+        biases E[Zhat]),
+      * ``head_key``    — the per-step sampling key.
+
+    The query used for SAMPLING is gradient-stopped (the draw is data
+    selection, not a model output); the same hidden state flows
+    differentiably into the sampled logits, so gradients reach
+    ``lm_head`` only through the m+1 gathered columns per token —
+    O(m·d) instead of O(V·d) per token, forward and backward.
+    """
+    lsh = head_lsh_params(cfg, scfg)
+    fam = get_family(scfg.family)
+    h = forward(params, cfg, batch)                             # (B, S, d)
+    hn = rms_norm(params["embed_group"]["final_norm"], h,
+                  cfg.norm_eps).astype(jnp.float32)
+    b, s, d = hn.shape
+    q = hn.reshape(b * s, d)
+    q_aug = fam.augment_query(jax.lax.stop_gradient(q))
+    res = sample_batched(
+        batch["head_key"], batch["head_index"], batch["head_x_aug"],
+        q_aug, lsh, m=scfg.n_samples, max_probes=scfg.max_probes,
+        multiprobe=scfg.multiprobe, use_pallas=scfg.use_pallas,
+        interpret=scfg.interpret)                               # (BS, m)
+    xent = sampled_head_xent(
+        q, params["embed_group"]["lm_head"], batch["targets"].reshape(-1),
+        res.indices, res.probs, p_floor=scfg.p_floor)           # (BS,)
+    w = batch.get("loss_weights")
+    if w is not None:
+        xent = (xent.reshape(b, s) * w.astype(jnp.float32)[:, None]).reshape(-1)
+    return jnp.mean(xent)
+
+
+# ---------------------------------------------------------------------------
+# index-over-params lifecycle
+# ---------------------------------------------------------------------------
+
+class LMHeadIndex:
+    """MIPS index over the TRAINABLE lm_head rows, refreshed by step.
+
+    The write surface is ``mutate_index`` throughout: ``op="build"``
+    once, then ``op="delta"`` merges of dirty rows re-augmented at the
+    PINNED scale M (tie-stable: delta with every row dirty is bitwise a
+    full warm refresh), with periodic full ``op="refresh"`` passes that
+    re-pin M.  ``x_aug`` is updated in lockstep with the table codes —
+    the invariant the unbiasedness proof needs is exactly "probabilities
+    are computed on the vectors the tables were built from".
+
+    Drive it either via ``TrainerConfig.step_hook = head.step_hook``
+    (+ ``batches=head.wrap_batches(...)``) or by calling
+    ``note_targets`` / ``maybe_refresh`` / ``inject`` yourself.
+    """
+
+    def __init__(self, params, cfg: ModelConfig,
+                 scfg: SampledSoftmaxConfig = SampledSoftmaxConfig()):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.lsh = head_lsh_params(cfg, scfg)
+        self._fam = get_family(scfg.family)
+        self._root_key = jax.random.PRNGKey(scfg.seed)
+        self._dirty = np.zeros((cfg.vocab,), bool)
+        self._step = 0
+        self._last_refresh_step = 0
+        self.refreshes = 0          # total refreshes applied
+        self.delta_refreshes = 0
+        self.full_refreshes = 0
+        self.build(params)
+
+    # -- writes (all via mutate_index) --------------------------------------
+
+    def build(self, params) -> None:
+        """(Re)build from scratch: fresh scale pin, fresh sort."""
+        rows = _head_rows(params)
+        self.scale = self._fam.data_scale(rows)
+        self.x_aug = self._fam.augment_data(rows, scale=self.scale)
+        key = jax.random.fold_in(self._root_key, _SALT_HEAD_BUILD)
+        self.index: LSHIndex = mutate_index(
+            None, IndexMutation("build", key=key, x_aug=self.x_aug),
+            self.lsh, use_pallas=self.scfg.use_pallas,
+            interpret=self.scfg.interpret)
+        self._dirty[:] = False
+
+    def refresh(self, params, mode: Optional[str] = None,
+                repin_scale: Optional[bool] = None) -> None:
+        """One refresh pass. ``mode`` defaults to ``scfg.refresh_mode``;
+        ``repin_scale`` defaults to True for full / False for delta
+        (delta MUST re-augment at the pinned M of the last full pass —
+        mixing scales would break code/x_aug consistency)."""
+        mode = mode or self.scfg.refresh_mode
+        rows = _head_rows(params)
+        if mode == "full":
+            if repin_scale is None or repin_scale:
+                self.scale = self._fam.data_scale(rows)
+            self.x_aug = self._fam.augment_data(rows, scale=self.scale)
+            self.index = mutate_index(
+                self.index,
+                IndexMutation("refresh", x_aug=self.x_aug, warm_start=True),
+                self.lsh, use_pallas=self.scfg.use_pallas,
+                interpret=self.scfg.interpret)
+            self.full_refreshes += 1
+        else:
+            ids = self._dirty_ids()
+            if ids.size:
+                aug_d = self._fam.augment_data(rows[ids], scale=self.scale)
+                codes = hash_points(aug_d, self.index.projections, self.lsh,
+                                    use_pallas=self.scfg.use_pallas,
+                                    interpret=self.scfg.interpret)
+                self.index = mutate_index(
+                    self.index,
+                    IndexMutation("delta", ids=jnp.asarray(ids, jnp.int32),
+                                  codes=codes))
+                self.x_aug = self.x_aug.at[jnp.asarray(ids, jnp.int32)].set(
+                    aug_d)
+            self.delta_refreshes += 1
+        self._dirty[:] = False
+        self.refreshes += 1
+
+    def _dirty_ids(self) -> np.ndarray:
+        """Dirty rows + drift-sampled remainder, padded to a power of two.
+
+        Every head row drifts each step (the normaliser gradient
+        scatter-adds into the sampled negatives), so on top of the
+        exactly-tracked target ids a deterministic ``drift_sample``
+        fraction of the clean rows is re-hashed per delta pass —
+        bounded staleness for rows that are never targets.  Padding
+        repeats the first id (duplicate ids with equal code columns are
+        a no-op under the tie-stable merge), bounding jit recompiles to
+        O(log V) code shapes.
+        """
+        dirty = np.nonzero(self._dirty)[0]
+        clean = np.nonzero(~self._dirty)[0]
+        n_extra = int(round(clean.size * self.scfg.drift_sample))
+        if n_extra:
+            rng = np.random.default_rng(
+                (self.scfg.seed, _SALT_HEAD_DRIFT, self.refreshes))
+            dirty = np.concatenate(
+                [dirty, rng.choice(clean, size=n_extra, replace=False)])
+        if dirty.size == 0:
+            return dirty.astype(np.int32)
+        pad = min(_next_pow2(dirty.size), self.cfg.vocab) - dirty.size
+        if pad:
+            dirty = np.concatenate([dirty, np.full(pad, dirty[0])])
+        return dirty.astype(np.int32)
+
+    # -- the step-keyed cadence ---------------------------------------------
+
+    def note_targets(self, targets) -> None:
+        """Mark this batch's target ids dirty (host-side bitmap)."""
+        self._dirty[np.asarray(targets).reshape(-1)] = True
+
+    def maybe_refresh(self, step: int, params) -> bool:
+        """Refresh iff ``refresh_every`` optimizer steps have elapsed.
+
+        Every ``full_every``-th refresh is forced full (re-pins M);
+        the rest follow ``scfg.refresh_mode``.  Returns True if a
+        refresh ran.
+        """
+        self._step = step
+        if step - self._last_refresh_step < self.scfg.refresh_every:
+            return False
+        force_full = (self.scfg.full_every > 0 and
+                      (self.refreshes + 1) % self.scfg.full_every == 0)
+        self.refresh(params, mode="full" if force_full else None)
+        self._last_refresh_step = step
+        return True
+
+    def step_hook(self, trainer) -> None:
+        """``TrainerConfig.step_hook`` adapter (optimizer-step-keyed)."""
+        self.maybe_refresh(trainer.step, trainer.params)
+
+    # -- batch plumbing ------------------------------------------------------
+
+    def inject(self, batch: dict, step: Optional[int] = None) -> dict:
+        """Return ``batch`` + the head-index leaves the jitted loss reads.
+
+        The index/x_aug/key ride the batch dict INTO the jitted step
+        (shape-static across refreshes, one compilation) instead of
+        being closed over — a closure would bake the build-time pytree
+        into the jaxpr and sample from a permanently stale index.
+        """
+        step = self._step if step is None else step
+        out = dict(batch)
+        out["head_index"] = self.index
+        out["head_x_aug"] = self.x_aug
+        out["head_key"] = jax.random.fold_in(
+            jax.random.fold_in(self._root_key, _SALT_HEAD_STEP), step)
+        return out
+
+    def wrap_batches(self, batches: Iterator[dict]) -> Iterator[dict]:
+        """Wrap a batch iterator for ``Trainer(batches=...)`` use.
+
+        Marks each batch's targets dirty and injects the CURRENT index
+        (with the trainer's prefetch, batch k+1 is drawn before step
+        k's hook refreshes — one step of benign staleness, covered by
+        the probabilities-on-stored-x_aug invariant).  Pair with
+        ``TrainerConfig(step_hook=head.step_hook, grad_accum=1)``.
+        """
+        for i, batch in enumerate(batches):
+            if "targets" in batch:
+                self.note_targets(batch["targets"])
+            yield self.inject(batch, step=i)
+
+
+def make_sampled_loss(cfg: ModelConfig, scfg: SampledSoftmaxConfig):
+    """``loss_fn(params, batch)`` for ``Trainer(loss_fn=...)``."""
+    return lambda params, batch: sampled_softmax_loss(params, cfg, scfg,
+                                                      batch)
+
+
+# ---------------------------------------------------------------------------
+# serving: the probe as an approximate top-k shortlist
+# ---------------------------------------------------------------------------
+
+def shortlist_candidates(index: LSHIndex, q_aug: jax.Array,
+                         lsh: LSHParams, scfg: SampledSoftmaxConfig):
+    """Static-shape candidate ids from the query's probed buckets.
+
+    For each query, each probe code j and table t, take up to
+    ``shortlist_per_table`` slots from the bucket slice [lo, hi) —
+    candidates = J·L·c ids per query regardless of bucket sizes, so
+    the decode step stays one fixed compiled program.
+
+    Args:
+      index: the lm_head index.
+      q_aug: (B, aug_dim) family-augmented queries.
+      lsh / scfg: hash params + head config (static).
+
+    Returns:
+      (ids, valid): (B, J·L·c) int32 candidate token ids and the bool
+      mask of slots that actually fall inside their bucket (duplicates
+      across tables are fine for masked argmax/top-k).
+    """
+    masks = probe_masks(lsh.k, 1 + scfg.multiprobe)
+    b = q_aug.shape[0]
+    if get_family(lsh.family).num_bands() > 1:
+        lo, hi = bucket_bounds_banded(
+            index, q_aug, lsh, masks, use_pallas=scfg.use_pallas,
+            interpret=scfg.interpret)              # (B, nb, J, L)
+        lo = lo.reshape(b, -1, lo.shape[-1])
+        hi = hi.reshape(b, -1, hi.shape[-1])
+    elif len(masks) == 1:
+        lo, hi = bucket_bounds_batched(
+            index, q_aug, lsh, use_pallas=scfg.use_pallas,
+            interpret=scfg.interpret)              # (B, L)
+        lo, hi = lo[:, None, :], hi[:, None, :]
+    else:
+        lo, hi = bucket_bounds_multi(
+            index, q_aug, lsh, masks, use_pallas=scfg.use_pallas,
+            interpret=scfg.interpret)              # (B, J, L)
+    c = scfg.shortlist_per_table
+    offs = jnp.arange(c, dtype=jnp.int32)
+    slots = lo[..., None] + offs                   # (B, J, L, c)
+    valid = offs < (hi - lo)[..., None]
+    slots = jnp.minimum(slots, index.n_points - 1)
+    n_tables = index.order.shape[0]
+    t_idx = jnp.arange(n_tables, dtype=jnp.int32)[None, None, :, None]
+    ids = index.order[t_idx, slots]                # (B, J, L, c)
+    return ids.reshape(b, -1).astype(jnp.int32), valid.reshape(b, -1)
+
+
+def shortlist_logits(lm_head: jax.Array, q: jax.Array, ids: jax.Array,
+                     valid: jax.Array) -> jax.Array:
+    """(B, K) candidate logits, invalid slots masked to -inf."""
+    w = jnp.take(lm_head.astype(jnp.float32), ids, axis=1)   # (d, B, K)
+    logits = jnp.einsum("bd,dbk->bk", q.astype(jnp.float32), w)
+    return jnp.where(valid, logits, -jnp.inf)
+
+
+def lsh_decode_step(params, cfg: ModelConfig, scfg: SampledSoftmaxConfig,
+                    batch, cache, index: LSHIndex):
+    """One greedy decode step through the LSH-shortlisted head.
+
+    ``decode_hidden`` runs the unchanged transformer body; the head is
+    probe -> gather shortlist columns -> masked argmax, O(J·L·c·d)
+    instead of O(V·d) per token.  If EVERY probed bucket is empty the
+    (masked-to--inf) argmax degrades to candidate slot 0 — the serving
+    twin of the sampler's uniform fallback, visible in the recall gate
+    rather than hidden.
+
+    Returns (tokens (B, 1) int32, new_cache).
+    """
+    lsh = head_lsh_params(cfg, scfg)
+    h, new_cache = decode_hidden(params, cfg, batch, cache)   # (B, 1, d)
+    q = rms_norm(params["embed_group"]["final_norm"], h,
+                 cfg.norm_eps)[:, 0].astype(jnp.float32)      # (B, d)
+    q_aug = get_family(lsh.family).augment_query(q)
+    ids, valid = shortlist_candidates(index, q_aug, lsh, scfg)
+    logits = shortlist_logits(params["embed_group"]["lm_head"], q, ids,
+                              valid)
+    best = jnp.argmax(logits, axis=-1)
+    tok = jnp.take_along_axis(ids, best[:, None], axis=1)     # (B, 1)
+    return tok, new_cache

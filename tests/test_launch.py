@@ -171,6 +171,27 @@ class TestRoofline:
         assert t["collective_s"] == pytest.approx(1.0)
         assert t["step_time_lower_bound_s"] == pytest.approx(2.0)
 
+    def test_vocab_large_overrides_vocab_on_roofline_path(self):
+        """vocab_large pins V=131072 on the dryrun/roofline path only:
+        apply_vocab rewrites the config, active_params grows by exactly
+        2*(V_big - V_small)*d, and smoke/tier-1 configs are untouched."""
+        from repro import configs
+        from repro.configs.shapes import apply_vocab, shape_applicable
+
+        shape = SHAPES["vocab_large"]
+        assert shape.vocab >= 128_000 and shape.kind == "decode"
+        cfg = configs.get("granite_3_8b")
+        big = apply_vocab(cfg, shape)
+        assert big.vocab == shape.vocab and cfg.vocab != shape.vocab
+        assert active_params(big) - active_params(cfg) == \
+            2 * (shape.vocab - cfg.vocab) * cfg.d_model
+        # decode model_flops reflect the larger head
+        assert model_flops(big, shape, 256) > model_flops(cfg, shape, 256)
+        # applicable to every arch (it is an abstract-eval cell) and a
+        # no-op override on shapes that do not pin a vocab
+        assert shape_applicable(cfg, shape) is None
+        assert apply_vocab(cfg, SHAPES["decode_32k"]) is cfg
+
     def test_wire_factors(self):
         assert _WIRE_FACTOR["all-reduce"] == 2.0
         assert _WIRE_FACTOR["all-gather"] == 1.0

@@ -21,25 +21,31 @@ SERVE = os.path.join(ROOT, "examples", "serve.py")
 NEW_TOKENS = 4
 
 
-def _run_serve(arch: str) -> str:
+def _run_serve(arch: str, head: str = "full") -> str:
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
         os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
     env.setdefault("JAX_PLATFORMS", "cpu")
     proc = subprocess.run(
         [sys.executable, SERVE, "--arch", arch, "--batch", "2",
-         "--prompt-len", "16", "--new-tokens", str(NEW_TOKENS)],
+         "--prompt-len", "16", "--new-tokens", str(NEW_TOKENS),
+         "--head", head],
         capture_output=True, text=True, timeout=300, cwd=ROOT, env=env)
     assert proc.returncode == 0, (
-        f"serve.py --arch {arch} failed (exit {proc.returncode}):\n"
+        f"serve.py --arch {arch} --head {head} failed "
+        f"(exit {proc.returncode}):\n"
         f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
     return proc.stdout
 
 
-@pytest.mark.parametrize("arch", ["phi4_mini_3_8b", "zamba2_1_2b"])
-def test_serve_prefill_and_decode(arch):
-    out = _run_serve(arch)
+def _check_decode_output(out: str, head: str) -> None:
     assert re.search(r"prefill 2x16", out), out
+    # per-phase timing: decode p10/p50 ms/token alongside the prefill line
+    m = re.search(
+        rf"decode head={head}: p10 ([\d.]+) ms/token +p50 ([\d.]+) ms/token",
+        out)
+    assert m, f"per-phase decode timing line missing:\n{out}"
+    assert float(m.group(1)) <= float(m.group(2)), out
     m = re.search(rf"decoded {NEW_TOKENS} tokens/seq", out)
     assert m, f"decode line missing:\n{out}"
     # the sample row must contain NEW_TOKENS generated token ids
@@ -47,3 +53,17 @@ def test_serve_prefill_and_decode(arch):
     assert m, out
     toks = [t for t in m.group(1).split(",") if t.strip()]
     assert len(toks) == min(NEW_TOKENS, 12), out
+
+
+@pytest.mark.parametrize("arch", ["phi4_mini_3_8b", "zamba2_1_2b"])
+def test_serve_prefill_and_decode(arch):
+    _check_decode_output(_run_serve(arch), "full")
+
+
+def test_serve_lsh_head():
+    """The LSH-shortlisted head decodes end to end: index built over the
+    lm_head rows, per-token probe -> shortlist -> argmax, same output
+    contract (per-phase timing + sample row) as the full head."""
+    out = _run_serve("zamba2_1_2b", head="lsh")
+    assert re.search(r"head=lsh: \d+ rows x \d+ tables", out), out
+    _check_decode_output(out, "lsh")
